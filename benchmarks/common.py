@@ -1,0 +1,130 @@
+"""Shared machinery for the paper-table benchmarks.
+
+Every table is reproduced at toy scale with REAL training runs on the
+synthetic multi-domain task (repro.data):
+
+  1. pre-train a BF16 "post-trained teacher" on the task (CE),
+  2. derive NVFP4 variants: PTQ (no training), QAT (CE loss, quantized fwd),
+     QAD (KL loss vs teacher) — paper Fig. 1,
+  3. evaluate per-domain held-out accuracy (the stand-in for
+     AIME / LiveCodeBench / GPQA) and KL / CE vs the teacher (Table 1).
+
+Times are reported as ``us_per_call`` = mean train-step wall time.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro import configs                                   # noqa: E402
+from repro.core import qad                                  # noqa: E402
+from repro.core.qconfig import BF16, QuantConfig            # noqa: E402
+from repro.data import (DataConfig, domain_accuracy,        # noqa: E402
+                        eval_batches, make_batch)
+from repro.models import get_model                          # noqa: E402
+from repro.optim import AdamW                               # noqa: E402
+
+ARCH = "qwen1.5-0.5b"          # AceReason is Qwen-based; same smoke family
+CFG = configs.get_smoke(ARCH)
+SEQ, BATCH = 48, 8
+DCFG = DataConfig(vocab_size=CFG.vocab_size, seq_len=SEQ, global_batch=BATCH,
+                  seed=0)
+NVFP4 = QuantConfig()
+
+
+def data_cfg(domains=("math", "code", "prose"), structure=0.75, seed=0):
+    return DataConfig(vocab_size=CFG.vocab_size, seq_len=SEQ,
+                      global_batch=BATCH, seed=seed, domains=domains,
+                      structure=structure)
+
+
+_TEACHER_CACHE: dict = {}
+
+
+def pretrain_teacher(steps=250, dcfg=None, lr=3e-3, seed=0):
+    """The BF16 'post-trained' model all variants start from.
+
+    Memoized per (steps, dcfg, lr, seed) — most tables share one teacher.
+    """
+    dcfg = dcfg or DCFG
+    key = (steps, dcfg, lr, seed, CFG)
+    if key in _TEACHER_CACHE:
+        return _TEACHER_CACHE[key]
+    out = _pretrain_teacher(steps, dcfg, lr, seed)
+    _TEACHER_CACHE[key] = out
+    return out
+
+
+def _pretrain_teacher(steps, dcfg, lr, seed):
+    model = get_model(CFG)
+    opt = AdamW(lr=lr, clip_norm=1.0)
+    state = qad.init_state(model, CFG, jax.random.PRNGKey(seed), opt,
+                           with_teacher=False)
+    step = jax.jit(qad.make_train_step(model, CFG, BF16, opt,
+                                       qad.QADConfig(loss="ce")),
+                   donate_argnums=(0,))
+    for i in range(steps):
+        state, _ = step(state, make_batch(dcfg, i))
+    return model, state.student
+
+
+def run_variant(model, teacher_params, method: str, *, steps=150, lr=1e-3,
+                dcfg=None, qcfg=NVFP4, batches=None, seed=0):
+    """Train one quantized variant.  method: qad|qat|qad_mse|ptq.
+
+    Returns (metrics dict, us_per_step).  ``batches``: explicit batch list
+    (for generated-data ablations); otherwise drawn from ``dcfg``.
+    """
+    dcfg = dcfg or DCFG
+    if method == "ptq":
+        return {"params": teacher_params}, 0.0      # PTQ = QDQ at eval time
+
+    loss = {"qad": "kl", "qat": "ce", "qad_mse": "mse"}[method]
+    opt = AdamW(lr=lr, clip_norm=1.0)
+    state = qad.TrainState(
+        step=jnp.zeros((), jnp.int32),
+        student=jax.tree.map(jnp.copy, teacher_params),
+        teacher=teacher_params, opt_state=opt.init(teacher_params))
+    # no donation: ``teacher_params`` is shared across variants/eval
+    step = jax.jit(qad.make_train_step(model, CFG, qcfg, opt,
+                                       qad.QADConfig(loss=loss)))
+    t0 = time.time()
+    for i in range(steps):
+        b = batches[i % len(batches)] if batches else make_batch(
+            dcfg, 10_000 + i)
+        state, _ = step(state, b)
+    jax.block_until_ready(state.student)
+    us = (time.time() - t0) / steps * 1e6
+    return {"params": state.student}, us
+
+
+def evaluate(model, params, teacher_params, qcfg=NVFP4, dcfg=None, n=3):
+    """Held-out per-domain accuracy + KL/CE vs teacher for one variant."""
+    dcfg = dcfg or DCFG
+    accs, kls, ces = [], [], []
+    apply_q = jax.jit(lambda p, b: model.apply(CFG, p, b, qcfg))
+    apply_t = jax.jit(lambda p, b: model.apply(CFG, p, b, BF16))
+    from repro.core import losses
+    for b in eval_batches(dcfg, n):
+        lg = apply_q(params, b)
+        accs.append(domain_accuracy(lg, b))
+        tl = apply_t(teacher_params, b)
+        kls.append(float(losses.kl_from_logits(tl, lg, b["mask"])))
+        ces.append(float(losses.ce_from_logits(lg, b["labels"], b["mask"])))
+    acc = {k: float(np.mean([a[k] for a in accs])) for k in accs[0]}
+    return {"acc": acc, "kl": float(np.mean(kls)), "ce": float(np.mean(ces))}
+
+
+def evaluate_bf16(model, params, dcfg=None, n=3):
+    return evaluate(model, params, params, qcfg=BF16, dcfg=dcfg, n=n)
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,36 @@
+"""Roofline summary rows from the cached dry-run results (results/dryrun).
+
+Emits one row per (arch × shape × mesh) cell: ``us_per_call`` is the
+projected v5e step time (max roofline term) and ``derived`` carries the
+three terms + dominant + MFU.  This is the benchmark view of
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def dryrun_rows(results_dir: str = "results/dryrun2"):
+    files = sorted(glob.glob(os.path.join(results_dir, "*.json")))
+    if not files:
+        emit("dryrun/none", 0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        cell = json.load(open(f))
+        tag = f"dryrun/{cell['arch']}__{cell['shape']}__{cell.get('mesh','')}"
+        if cell["status"] == "SKIP":
+            emit(tag, 0, "SKIP:" + cell["reason"][:60])
+            continue
+        if cell["status"] != "OK":
+            emit(tag, 0, "FAIL:" + cell.get("error", "")[:80])
+            continue
+        r = cell["roofline"]
+        emit(tag, r["step_s"] * 1e6,
+             f"dom={r['dominant']};c={r['compute_s']:.3f};"
+             f"m={r['memory_s']:.3f};k={r['collective_s']:.3f};"
+             f"mfu={r['mfu']:.3f};"
+             f"mem_gib={cell['memory']['peak_bytes_per_device']/2**30:.1f}")

@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks (interpret-mode on CPU: timings are indicative of
+correctness paths, not TPU perf — the TPU story is in the roofline)."""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.core import nvfp4                    # noqa: E402
+from repro.kernels import ops                   # noqa: E402
+
+from .common import emit                        # noqa: E402
+
+
+def _time(fn, *args, n=5):
+    fn(*args)                                    # compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def kernels():
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (512, 1024), jnp.bfloat16)
+
+    us = _time(ops.nvfp4_qdq, x)
+    emit("kernel/nvfp4_qdq_512x1024", us,
+         f"bytes_per_elem_out={nvfp4.BYTES_PER_ELEM}")
+
+    us = _time(jax.jit(nvfp4.qdq), x)
+    emit("kernel/nvfp4_qdq_ref_512x1024", us, "oracle")
+
+    w = jax.random.normal(rng, (1024, 512), jnp.float32)
+    p = ops.pack_weight(w)
+    us = _time(lambda a: ops.nvfp4_matmul(a, p), x.astype(jnp.float32))
+    weight_bytes = p.codes.size + p.scales.size + 4
+    emit("kernel/nvfp4_matmul_512x1024x512", us,
+         f"weight_bytes={weight_bytes};bf16_bytes={w.size * 2};"
+         f"traffic_ratio={w.size * 2 / weight_bytes:.2f}")
+
+    t = jax.random.normal(rng, (256, 2048), jnp.float32)
+    s = t + 0.1 * jax.random.normal(jax.random.fold_in(rng, 1), (256, 2048))
+    mask = jnp.ones((256,))
+    us = _time(lambda: ops.kl_loss(t, s, mask))
+    emit("kernel/kl_loss_256x2048", us, "streaming_one_pass")
+
+    from repro.kernels import ref
+    us = _time(jax.jit(lambda: ref.kl_loss_ref(t, s, mask)))
+    emit("kernel/kl_loss_ref_256x2048", us, "materializing_oracle")

@@ -1,0 +1,233 @@
+"""One benchmark per paper table (Tables 1-9, 11, 12) at toy scale.
+
+Each function prints ``name,us_per_call,derived`` CSV rows; ``derived``
+carries the table's headline comparison (see EXPERIMENTS.md §Paper-claims
+for the mapping to the paper's numbers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as C
+
+
+def table1_kl_vs_ce():
+    """QAD aligns the distribution; QAT matches CE but drifts in KL."""
+    model, teacher = C.pretrain_teacher()
+    rows = {}
+    base = C.evaluate_bf16(model, teacher)
+    rows["bf16"] = (0.0, {"kl": 0.0, "ce": base["ce"]})
+    for method in ("qat", "qad"):
+        v, us = C.run_variant(model, teacher, method)
+        ev = C.evaluate(model, v["params"], teacher)
+        rows[method] = (us, ev)
+    for name, (us, ev) in rows.items():
+        C.emit(f"table1/{name}", us, f"kl={ev['kl']:.4f};ce={ev['ce']:.4f}")
+    assert rows["qad"][1]["kl"] < rows["qat"][1]["kl"]
+    return rows
+
+
+def table2_sft_models():
+    """SFT-heavy recovery: QAD >= QAT, both trained on the SFT mixture."""
+    model, teacher = C.pretrain_teacher()
+    base = C.evaluate_bf16(model, teacher)
+    C.emit("table2/bf16", 0, f"acc={base['acc']['all']:.4f}")
+    ptq = C.evaluate(model, teacher, teacher)
+    C.emit("table2/nvfp4_ptq", 0, f"acc={ptq['acc']['all']:.4f}")
+    for method in ("qat", "qad"):
+        v, us = C.run_variant(model, teacher, method)
+        ev = C.evaluate(model, v["params"], teacher)
+        C.emit(f"table2/nvfp4_{method}", us, f"acc={ev['acc']['all']:.4f}")
+
+
+def table3_rl_models():
+    """RL-heavy: QAT on mismatched (cold-start) data BREAKS the model; QAD
+    recovers.  Emulated by training the teacher past a distribution shift
+    (structure 0.75 -> 0.95, the 'RL' phase) while QAT/QAD only get the
+    old-distribution ('cold-start SFT') data."""
+    model, teacher0 = C.pretrain_teacher(dcfg=C.data_cfg(structure=0.75))
+    # "RL" phase: teacher continues on the harder distribution
+    rl_dcfg = C.data_cfg(structure=0.95, seed=1)
+    from repro.core import qad as Q
+    from repro.optim import AdamW
+    opt = AdamW(lr=1e-3, clip_norm=1.0)
+    # copy: teacher0 is the memoized shared teacher; the donated RL steps
+    # must not invalidate it for later tables
+    state = Q.TrainState(step=jnp.zeros((), jnp.int32),
+                         student=jax.tree.map(jnp.copy, teacher0),
+                         teacher=None, opt_state=opt.init(teacher0))
+    step = jax.jit(Q.make_train_step(model, C.CFG, C.BF16, opt,
+                                     Q.QADConfig(loss="ce")),
+                   donate_argnums=(0,))
+    from repro.data import make_batch
+    for i in range(150):
+        state, _ = step(state, make_batch(rl_dcfg, i))
+    teacher = state.student
+
+    coldstart = C.data_cfg(structure=0.75)        # what QAD/QAT can train on
+    base = C.evaluate_bf16(model, teacher, dcfg=rl_dcfg)
+    C.emit("table3/bf16", 0, f"acc={base['acc']['all']:.4f}")
+    ptq = C.evaluate(model, teacher, teacher, dcfg=rl_dcfg)
+    C.emit("table3/nvfp4_ptq", 0, f"acc={ptq['acc']['all']:.4f}")
+    out = {}
+    for method in ("qat", "qad"):
+        v, us = C.run_variant(model, teacher, method, dcfg=coldstart)
+        ev = C.evaluate(model, v["params"], teacher, dcfg=rl_dcfg)
+        out[method] = ev
+        C.emit(f"table3/nvfp4_{method}", us, f"acc={ev['acc']['all']:.4f}")
+    # the paper's claim: QAD >= QAT under distribution shift.  Reported,
+    # not asserted: at smoke scale the shift is mild (see EXPERIMENTS.md).
+    rel = out["qad"]["acc"]["all"] - out["qat"]["acc"]["all"]
+    C.emit("table3/qad_minus_qat", 0, f"delta_acc={rel:+.4f}")
+    return base, ptq, out
+
+
+def table4_cross_domain():
+    """Partial-domain QAD data still recovers the other domains."""
+    model, teacher = C.pretrain_teacher()
+    variants = {"math_only": ("math",), "code_only": ("code",),
+                "math+code": ("math", "code")}
+    base = C.evaluate_bf16(model, teacher)
+    C.emit("table4/bf16", 0,
+           f"math={base['acc']['math']:.3f};code={base['acc']['code']:.3f}")
+    ptq = C.evaluate(model, teacher, teacher)
+    C.emit("table4/ptq", 0,
+           f"math={ptq['acc']['math']:.3f};code={ptq['acc']['code']:.3f}")
+    for name, doms in variants.items():
+        v, us = C.run_variant(model, teacher, "qad", dcfg=C.data_cfg(doms))
+        ev = C.evaluate(model, v["params"], teacher)
+        C.emit(f"table4/qad_{name}", us,
+               f"math={ev['acc']['math']:.3f};code={ev['acc']['code']:.3f}")
+
+
+def table5_data_sources():
+    """QAD robustness to data source: SFT / generated / BOS / random."""
+    from repro.data import generated
+    model, teacher = C.pretrain_teacher()
+    rows = {}
+
+    def run_with(name, batches=None, dcfg=None):
+        v, us = C.run_variant(model, teacher, "qad", batches=batches,
+                              dcfg=dcfg)
+        ev = C.evaluate(model, v["params"], teacher)
+        rows[name] = ev
+        C.emit(f"table5/{name}", us, f"acc={ev['acc']['all']:.4f};"
+                                     f"kl={ev['kl']:.4f}")
+
+    run_with("sft_data")
+    # teacher-generated from task prompts
+    rng = jax.random.PRNGKey(0)
+    from repro.data import make_batch
+    prompts = make_batch(C.DCFG, 99)["tokens"][:, :8]
+    toks = generated.generate_tokens(model, C.CFG, teacher, prompts,
+                                     n_new=C.SEQ - 7, rng=rng)
+    run_with("gen_from_prompts",
+             batches=[generated.batch_from_generated(toks, C.SEQ)])
+    # generated from BOS only (fully data-free)
+    toks = generated.generate_tokens(model, C.CFG, teacher,
+                                     generated.bos_prompts(C.BATCH),
+                                     n_new=C.SEQ, rng=rng)
+    run_with("gen_from_bos",
+             batches=[generated.batch_from_generated(toks, C.SEQ)])
+    run_with("random_tokens", dcfg=C.data_cfg(domains=("random",)))
+    return rows
+
+
+def table6_lr_sweep():
+    """LR sensitivity (Table 6/7): sweep QAD learning rates."""
+    model, teacher = C.pretrain_teacher()
+    for lr in (1e-4, 1e-3, 3e-3, 1e-2):
+        v, us = C.run_variant(model, teacher, "qad", lr=lr)
+        ev = C.evaluate(model, v["params"], teacher)
+        C.emit(f"table6/lr_{lr:g}", us,
+               f"acc={ev['acc']['all']:.4f};kl={ev['kl']:.4f}")
+
+
+def table8_kl_vs_mse():
+    model, teacher = C.pretrain_teacher()
+    for method in ("qad", "qad_mse"):
+        v, us = C.run_variant(model, teacher, method)
+        ev = C.evaluate(model, v["params"], teacher)
+        C.emit(f"table8/{method}", us,
+               f"acc={ev['acc']['all']:.4f};kl={ev['kl']:.4f}")
+
+
+def table9_teacher_size():
+    """Original-size teacher vs a LARGER teacher (same family/vocab)."""
+    import dataclasses
+
+    from repro.core import qad as Q
+    from repro.models import get_model
+    from repro.optim import AdamW
+
+    model, teacher = C.pretrain_teacher()
+    big_cfg = dataclasses.replace(C.CFG, d_model=128, d_ff=256, n_layers=3,
+                                  name="big-teacher")
+    big_model = get_model(big_cfg)
+    # train the big teacher on the same task
+    opt = AdamW(lr=3e-3, clip_norm=1.0)
+    bstate = Q.init_state(big_model, big_cfg, jax.random.PRNGKey(7), opt,
+                          with_teacher=False)
+    bstep = jax.jit(Q.make_train_step(big_model, big_cfg, C.BF16, opt,
+                                      Q.QADConfig(loss="ce")),
+                    donate_argnums=(0,))
+    from repro.data import make_batch
+    for i in range(250):
+        bstate, _ = bstep(bstate, make_batch(C.DCFG, i))
+
+    # (a) distill from the original teacher
+    v, us = C.run_variant(model, teacher, "qad")
+    ev_same = C.evaluate(model, v["params"], teacher)
+    C.emit("table9/teacher_same", us, f"acc={ev_same['acc']['all']:.4f}")
+
+    # (b) distill from the larger teacher (cross-model KL via logits)
+    opt = AdamW(lr=1e-3, clip_norm=1.0)
+    student = jax.tree.map(jnp.copy, teacher)
+    ostate = opt.init(student)
+    from repro.core import losses
+
+    @jax.jit
+    def step(student, ostate, ostep, batch):
+        def loss_fn(sp):
+            sl = model.apply(C.CFG, sp, batch, C.NVFP4)
+            tl = jax.lax.stop_gradient(
+                big_model.apply(big_cfg, bstate.student, batch, C.BF16))
+            return losses.kl_from_logits(tl, sl, batch["mask"])
+        g = jax.grad(loss_fn)(student)
+        upd, ostate = opt.update(g, ostate, student, ostep)
+        student = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                               student, upd)
+        return student, ostate
+
+    for i in range(150):
+        student, ostate = step(student, ostate, jnp.asarray(i),
+                               make_batch(C.DCFG, 10_000 + i))
+    ev_big = C.evaluate(model, student, teacher)
+    C.emit("table9/teacher_larger", 0, f"acc={ev_big['acc']['all']:.4f}")
+
+
+def table12_ptq_scale():
+    """Bigger models are more PTQ-robust (paper Appendix C)."""
+    import dataclasses
+    from repro.models import get_model
+    for name, scale in (("small", 1), ("large", 2)):
+        cfg = dataclasses.replace(
+            C.CFG, d_model=C.CFG.d_model * scale, d_ff=C.CFG.d_ff * scale,
+            name=f"ptq-{name}")
+        model = get_model(cfg)
+        # share the pretrain recipe
+        import benchmarks.common as cc
+        old = cc.CFG
+        cc.CFG = cfg
+        try:
+            model, teacher = C.pretrain_teacher()
+            base = C.evaluate_bf16(model, teacher)
+            ptq = C.evaluate(model, teacher, teacher)
+        finally:
+            cc.CFG = old
+        drop = base["acc"]["all"] - ptq["acc"]["all"]
+        C.emit(f"table12/{name}", 0,
+               f"bf16={base['acc']['all']:.4f};ptq={ptq['acc']['all']:.4f};"
+               f"drop={drop:.4f}")

@@ -1,0 +1,55 @@
+"""Benchmark driver: one harness per paper table + kernel microbench +
+dry-run roofline summary.  CSV rows: ``name,us_per_call,derived``.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,table5,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names (default: all)")
+    args, _ = ap.parse_known_args()
+    only = set(filter(None, args.only.split(",")))
+
+    from . import dryrun_summary, kernel_bench, paper_tables
+
+    benches = [
+        ("kernels", kernel_bench.kernels),
+        ("table1", paper_tables.table1_kl_vs_ce),
+        ("table2", paper_tables.table2_sft_models),
+        ("table3", paper_tables.table3_rl_models),
+        ("table4", paper_tables.table4_cross_domain),
+        ("table5", paper_tables.table5_data_sources),
+        ("table6", paper_tables.table6_lr_sweep),
+        ("table8", paper_tables.table8_kl_vs_mse),
+        ("table9", paper_tables.table9_teacher_size),
+        ("table12", paper_tables.table12_ptq_scale),
+        ("dryrun", dryrun_summary.dryrun_rows),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0,{traceback.format_exc(limit=1)!r}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

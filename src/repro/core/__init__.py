@@ -1,0 +1,7 @@
+"""Core: the paper's contribution — NVFP4 quantization + QAD distillation."""
+from . import losses, nvfp4, ptq, qad, qconfig
+from .nvfp4 import (BLOCK, E2M1_MAX, E4M3_MAX, PackedNVFP4, fake_quant,
+                    fp8_dequantize, fp8_quantize, pack, qdq, unpack)
+from .qad import QADConfig, TrainState, init_state, make_eval_step, make_train_step
+from .qconfig import (BF16, NVFP4_ALL, NVFP4_HYBRID, NVFP4_MOE_HYBRID,
+                      QuantConfig)

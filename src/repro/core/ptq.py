@@ -1,0 +1,117 @@
+"""Post-training quantization: calibration + one-shot weight quantization.
+
+PTQ is the paper's baseline (§2.1): calibrate scale factors on a small set,
+then quantize without training.  For NVFP4 the block scales are data-derived
+(amax/6) so weight PTQ is closed-form; activation calibration estimates the
+per-tensor FP32 scale.  Three calibration methods are provided:
+
+  * ``max``        — running max of |x|  (the paper's default; "works
+                     surprisingly well")
+  * ``percentile`` — amax = percentile of per-sample amaxes (clips outliers)
+  * ``mse``        — grid-search the amax that minimizes QDQ MSE
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nvfp4
+from .qconfig import QuantConfig
+
+
+@dataclasses.dataclass
+class AmaxObserver:
+    """Streaming per-tensor amax estimator for one activation site."""
+
+    method: str = "max"          # max | percentile | mse
+    percentile: float = 99.9
+    _samples: list = dataclasses.field(default_factory=list)
+    _running_max: float = 0.0
+
+    def observe(self, x: jax.Array) -> None:
+        amax = float(jnp.max(jnp.abs(x)))
+        self._running_max = max(self._running_max, amax)
+        if self.method != "max":
+            self._samples.append(np.asarray(jnp.abs(x), np.float32).ravel())
+
+    def amax(self) -> float:
+        if self.method == "max" or not self._samples:
+            return self._running_max
+        flat = np.concatenate(self._samples)
+        if self.method == "percentile":
+            return float(np.percentile(flat, self.percentile))
+        if self.method == "mse":
+            return _mse_amax(flat, self._running_max)
+        raise ValueError(self.method)
+
+
+def _mse_amax(flat: np.ndarray, running_max: float, n_grid: int = 32) -> float:
+    """Grid-search the clipping amax minimizing NVFP4 QDQ MSE."""
+    # pad to a block multiple for the reference QDQ
+    k = len(flat)
+    pad = (-k) % nvfp4.BLOCK
+    x = jnp.asarray(np.pad(flat, (0, pad)))
+    best, best_err = running_max, np.inf
+    for frac in np.linspace(0.5, 1.0, n_grid):
+        amax = running_max * float(frac)
+        dq = nvfp4.qdq(x, tensor_amax=jnp.float32(amax))
+        err = float(jnp.mean((dq - x) ** 2))
+        if err < best_err:
+            best, best_err = amax, err
+    return best
+
+
+def quantize_weights(params, specs, qcfg: QuantConfig):
+    """One-shot PTQ of a parameter pytree.
+
+    ``specs`` mirrors ``params`` with ``ParamSpec`` leaves carrying the GEMM
+    ``kind`` and contraction axis; leaves whose kind the policy quantizes are
+    QDQ'd (weight_format="qdq") or packed to true 4-bit
+    (weight_format="packed" — handled by the serving loader, which keeps a
+    ``PackedNVFP4`` in place of the array).
+    """
+    def one(spec, w):
+        if spec is None or not qcfg.quantizes(spec.kind) or not qcfg.quantize_weights:
+            return w
+        if qcfg.weight_format == "packed":
+            return _pack_along(w, spec.contract_axis)
+        return _qdq_along(w, spec.contract_axis)
+
+    return jax.tree.map(one, specs, params,
+                        is_leaf=lambda s: s is None or hasattr(s, "kind"))
+
+
+def _qdq_along(w, axis):
+    axis = axis % w.ndim
+    wm = jnp.moveaxis(w, axis, -1)
+    k = wm.shape[-1]
+    pad = (-k) % nvfp4.BLOCK
+    if pad:
+        wm = jnp.pad(wm, [(0, 0)] * (wm.ndim - 1) + [(0, pad)])
+    dq = nvfp4.qdq(wm)[..., :k]
+    return jnp.moveaxis(dq, -1, axis)
+
+
+def _pack_along(w, axis):
+    axis = axis % w.ndim
+    wm = jnp.moveaxis(w, axis, -1)
+    k = wm.shape[-1]
+    pad = (-k) % nvfp4.BLOCK
+    if pad:
+        wm = jnp.pad(wm, [(0, 0)] * (wm.ndim - 1) + [(0, pad)])
+    return nvfp4.pack(wm)          # caller is responsible for layout at use
+
+
+def calibrate_activations(fwd: Callable, batches: Iterable,
+                          sites: list[str], method: str = "max") -> dict[str, float]:
+    """Run ``fwd(batch) -> {site: activation}`` over batches, calibrate amax."""
+    obs = {s: AmaxObserver(method=method) for s in sites}
+    for b in batches:
+        acts = fwd(b)
+        for s in sites:
+            obs[s].observe(acts[s])
+    return {s: o.amax() for s, o in obs.items()}

@@ -1,0 +1,142 @@
+"""QAD / QAT step factories — the paper's contribution as a composable module.
+
+``make_train_step(model, cfg, qcfg, opt, loss=...)`` builds a jit-able
+``step(state, batch) -> (state, metrics)``:
+
+  * **QAD** (``loss="kl"``): teacher = BF16 params (frozen), student = same
+    architecture with NVFP4 fake-quant forward; loss = KL(p_t || p_s), T=1.
+  * **QAT** (``loss="ce"``): student only, next-token cross entropy.
+  * ablations: ``loss="mse"`` (logit MSE, Table 8) and ``loss="kl+ce"``.
+
+One SPMD program evaluates teacher forward (no-grad — logits stop-gradient'd
+so XLA keeps no teacher residuals), student forward + backward, and the
+optimizer update.  Metrics include the paper's Table-1 diagnostics (KL vs
+teacher AND CE vs labels) for every mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import losses
+from .qconfig import QuantConfig, BF16
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    student: Any                # trainable params (pytree)
+    teacher: Any | None         # frozen BF16 params (None for pure QAT)
+    opt_state: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class QADConfig:
+    loss: str = "kl"            # kl | ce | mse | kl+ce
+    ce_weight: float = 0.1      # for kl+ce
+    use_chunked_loss: bool = False
+    loss_chunks: int = 16
+    temperature: float = 1.0    # paper uses T=1 for exact distribution match
+
+
+def init_state(model, cfg, rng, opt, with_teacher: bool = True) -> TrainState:
+    params = model.init_params(cfg, rng)
+    teacher = jax.tree.map(jnp.copy, params) if with_teacher else None
+    return TrainState(step=jnp.zeros((), jnp.int32), student=params,
+                      teacher=teacher, opt_state=opt.init(params))
+
+
+def make_loss_fn(model, cfg, qcfg: QuantConfig, qad: QADConfig):
+    """Builds loss(student, teacher, batch) -> (loss, metrics)."""
+
+    def loss_fn(student, teacher, batch):
+        mask = batch["mask"].astype(jnp.float32)
+        t = qad.temperature
+
+        if qad.use_chunked_loss and qad.loss == "kl":
+            h_s = model.apply(cfg, student, batch, qcfg, output="hidden")
+            h_t = model.apply(cfg, teacher, batch, BF16, output="hidden")
+            h_t = jax.lax.stop_gradient(h_t)
+            w_s = model.unembed(cfg, student)
+            w_t = jax.lax.stop_gradient(model.unembed(cfg, teacher))
+            # keep lm_head quantization parity with the plain path
+            h_s = qcfg.q_act(h_s, "lm_head")
+            w_s = qcfg.q_weight(w_s, "lm_head", contract_axis=0)
+            kl = losses.chunked_kl_loss(h_t, w_t, h_s, w_s, mask,
+                                        qad.loss_chunks)
+            return kl, {"kl": kl}
+
+        s_logits = model.apply(cfg, student, batch, qcfg)
+        metrics = {}
+        ce = losses.ce_from_logits(s_logits, batch["labels"], mask)
+        metrics["ce"] = ce
+
+        if qad.loss == "ce":                       # QAT
+            return ce, metrics
+
+        t_logits = jax.lax.stop_gradient(
+            model.apply(cfg, teacher, batch, BF16))
+        kl = losses.kl_from_logits(t_logits / t, s_logits / t, mask)
+        metrics["kl"] = kl
+        metrics["top1_agree"] = losses.top1_agreement(t_logits, s_logits, mask)
+
+        if qad.loss == "kl":                       # QAD
+            return kl, metrics
+        if qad.loss == "mse":                      # Table 8 ablation
+            mse = losses.mse_from_logits(t_logits, s_logits, mask)
+            metrics["mse"] = mse
+            return mse, metrics
+        if qad.loss == "kl+ce":
+            return kl + qad.ce_weight * ce, metrics
+        raise ValueError(qad.loss)
+
+    return loss_fn
+
+
+def make_train_step(model, cfg, qcfg: QuantConfig, opt,
+                    qad: QADConfig | None = None) -> Callable:
+    """The production train step (jit / pjit this)."""
+    qad = qad or QADConfig()
+    loss_fn = make_loss_fn(model, cfg, qcfg, qad)
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.student, state.teacher, batch)
+        updates, opt_state = opt.update(grads, state.opt_state, state.student,
+                                        state.step)
+        student = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                               state.student, updates)
+        metrics = dict(metrics, loss=loss,
+                       grad_norm=_global_norm(grads),
+                       update_norm=_global_norm(updates))
+        return TrainState(step=state.step + 1, student=student,
+                          teacher=state.teacher, opt_state=opt_state), metrics
+
+    return step
+
+
+def make_eval_step(model, cfg, qcfg: QuantConfig,
+                   qad: QADConfig | None = None) -> Callable:
+    """Validation step: KL vs teacher + CE vs labels (paper Table 1)."""
+    qad = qad or QADConfig()
+
+    def eval_step(state: TrainState, batch) -> dict:
+        mask = batch["mask"].astype(jnp.float32)
+        s_logits = model.apply(cfg, state.student, batch, qcfg)
+        out = {"ce": losses.ce_from_logits(s_logits, batch["labels"], mask)}
+        if state.teacher is not None:
+            t_logits = model.apply(cfg, state.teacher, batch, BF16)
+            out["kl"] = losses.kl_from_logits(t_logits, s_logits, mask)
+            out["top1_agree"] = losses.top1_agreement(t_logits, s_logits, mask)
+        return out
+
+    return eval_step
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())

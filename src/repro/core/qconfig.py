@@ -1,0 +1,117 @@
+"""Quantization policy — which tensors get NVFP4, which stay BF16.
+
+The paper's recipe (§3.4) is *selective*:
+
+  * Llama Nemotron Super V1 / AceReason: quantize ALL GEMM layers.
+  * Nemotron Nano 9B V2 (hybrid): keep attention layers + first/last-2 layers
+    in BF16.
+  * Nemotron 3 Nano (MoE hybrid): keep the 6 self-attention layers (+ their
+    preceding recurrent layers) BF16, quantize the rest, KV-cache in FP8.
+
+``QuantConfig`` encodes that policy space.  It is a frozen (hashable)
+dataclass so it can be closed over by jit'd step functions as a static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import nvfp4
+
+# GEMM sites, used by the policy:
+#   "mlp"       — feed-forward projections (incl. MoE expert GEMMs)
+#   "attn"      — QKV / output projections of attention
+#   "recurrent" — projections inside RG-LRU / RWKV mixers
+#   "router"    — MoE router (never quantized: tiny + sensitive)
+#   "embed"     — token embedding gather (never quantized)
+#   "lm_head"   — final projection (off by default; flag to enable)
+Kind = Literal["mlp", "attn", "recurrent", "router", "embed", "lm_head"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static quantization policy for a model."""
+
+    enabled: bool = True
+    quantize_weights: bool = True
+    quantize_activations: bool = True
+
+    # --- selective quantization (paper §3.4) ---
+    skip_attention: bool = False          # hybrid recipe: attention stays BF16
+    skip_recurrent: bool = False
+    skip_first_layers: int = 0            # first-k layers stay BF16
+    skip_last_layers: int = 0             # last-k layers stay BF16
+    quantize_lm_head: bool = False
+
+    # --- KV cache (paper: Nemotron 3 Nano uses FP8 KV) ---
+    kv_cache_dtype: Literal["bf16", "fp8"] = "bf16"
+
+    # --- serving weight representation ---
+    #   "qdq"    — fake-quant BF16 storage (paper-faithful accuracy eval)
+    #   "packed" — true 4-bit storage + dequant-on-the-fly (TPU memory win)
+    weight_format: Literal["qdq", "packed"] = "qdq"
+
+    # --- activation tensor-scale source ---
+    #   "dynamic"    — amax from the tensor itself (default)
+    #   "calibrated" — amax from a PTQ calibration pass (repro.core.ptq)
+    act_scale_mode: Literal["dynamic", "calibrated"] = "dynamic"
+
+    def quantizes(self, kind: Kind) -> bool:
+        """Does this policy quantize GEMMs of the given kind?"""
+        if not self.enabled:
+            return False
+        if kind in ("router", "embed"):
+            return False
+        if kind == "lm_head":
+            return self.quantize_lm_head
+        if kind == "attn" and self.skip_attention:
+            return False
+        if kind == "recurrent" and self.skip_recurrent:
+            return False
+        return True
+
+    # ------------------------------------------------------------------
+    # The single injection point used by every model layer.
+    # ------------------------------------------------------------------
+
+    def q_act(self, x: jax.Array, kind: Kind) -> jax.Array:
+        """Fake-quantize an activation (blocked along its last dim)."""
+        if not (self.quantizes(kind) and self.quantize_activations):
+            return x
+        return _fq_lastdim(x)
+
+    def q_weight(self, w: jax.Array, kind: Kind, contract_axis: int = 0) -> jax.Array:
+        """Fake-quantize a weight, blocked along the contraction axis."""
+        if not (self.quantizes(kind) and self.quantize_weights):
+            return w
+        return _fq_axis(w, contract_axis)
+
+
+BF16 = QuantConfig(enabled=False)
+NVFP4_ALL = QuantConfig()                       # AceReason / Llama Nemotron recipe
+NVFP4_HYBRID = QuantConfig(                     # Nemotron Nano 9B V2 recipe
+    skip_attention=True, skip_first_layers=2, skip_last_layers=2)
+NVFP4_MOE_HYBRID = QuantConfig(                 # Nemotron 3 Nano recipe
+    skip_attention=True, kv_cache_dtype="fp8")
+
+
+def _fq_lastdim(x: jax.Array) -> jax.Array:
+    """fake_quant along the last dim, padding to the block size if needed."""
+    k = x.shape[-1]
+    pad = (-k) % nvfp4.BLOCK
+    if pad:
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        return nvfp4.fake_quant(xp)[..., :k]
+    return nvfp4.fake_quant(x)
+
+
+def _fq_axis(w: jax.Array, axis: int) -> jax.Array:
+    """fake_quant blocked along ``axis`` (moved to last, QDQ'd, moved back)."""
+    axis = axis % w.ndim
+    if axis == w.ndim - 1:
+        return _fq_lastdim(w)
+    wm = jnp.moveaxis(w, axis, -1)
+    return jnp.moveaxis(_fq_lastdim(wm), -1, axis)

@@ -1,0 +1,2 @@
+from . import generated, pipeline
+from .pipeline import DataConfig, domain_accuracy, eval_batches, make_batch

@@ -1,0 +1,63 @@
+"""Teacher-generated QAD data (paper §4.1, Table 5 rows 2-4).
+
+``generate_tokens`` samples continuations from the BF16 teacher itself —
+the "Generated from RL prompts" / "Generated from BOS token" data sources.
+Per Liu et al. (2023b) and the paper, this enables *data-free* QAD: only
+the teacher checkpoint is needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import BF16
+
+
+def generate_tokens(model, cfg, params, prompts: jax.Array, n_new: int,
+                    rng, temperature: float = 1.0, top_p: float = 1.0):
+    """Sample ``n_new`` tokens after ``prompts`` [B, P] from the teacher.
+
+    Greedy KV-cached decode loop (jit-compiled step).  Returns [B, P+n_new].
+    """
+    b, p_len = prompts.shape
+    logits, cache = model.prefill(cfg, params, {"tokens": prompts}, BF16,
+                                  s_max=p_len + n_new)
+
+    def sample(key, lg):
+        lg = lg[:, -1].astype(jnp.float32) / max(temperature, 1e-6)
+        if top_p < 1.0:
+            sorted_lg = jnp.sort(lg, -1)[:, ::-1]
+            probs = jax.nn.softmax(sorted_lg, -1)
+            csum = jnp.cumsum(probs, -1)
+            cutoff_idx = jnp.sum(csum < top_p, -1, keepdims=True)
+            cutoff = jnp.take_along_axis(sorted_lg, cutoff_idx, -1)
+            lg = jnp.where(lg < cutoff, -1e30, lg)
+        return jax.random.categorical(key, lg, -1)
+
+    step_fn = jax.jit(lambda prm, c, tok: model.decode_step(
+        cfg, prm, c, {"tokens": tok}, BF16))
+
+    toks = [prompts]
+    key = rng
+    nxt = sample(key, logits)[:, None]
+    toks.append(nxt)
+    for i in range(n_new - 1):
+        key = jax.random.fold_in(rng, i)
+        logits, cache = step_fn(params, cache, nxt)
+        nxt = sample(key, logits)[:, None]
+        toks.append(nxt)
+    return jnp.concatenate(toks, axis=1)
+
+
+def bos_prompts(batch: int, bos_id: int = 1) -> jax.Array:
+    """Single-BOS prompts — the fully data-free setting (Table 5 row 4)."""
+    return jnp.full((batch, 1), bos_id, jnp.int32)
+
+
+def batch_from_generated(tokens: jax.Array, seq_len: int) -> dict:
+    """Convert generated [B, >=seq_len+1] token ids into a training batch."""
+    toks = tokens[:, : seq_len + 1]
+    b = toks.shape[0]
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+            "mask": jnp.ones((b, seq_len), jnp.float32),
+            "domain_id": jnp.zeros((b,), jnp.int32)}

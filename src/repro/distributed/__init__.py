@@ -1,0 +1,2 @@
+from . import fault, sharding
+from .sharding import Rules, constrain, make_rules, resolve, tree_shardings

@@ -1,0 +1,44 @@
+"""Trace-time sharding context.
+
+Model code is mesh-agnostic; step builders activate a (mesh, rules) context
+around tracing and every layer calls ``cst(x, logical_axes)`` at its
+activation boundaries.  Without an active context (single-device tests,
+benchmarks) ``cst`` is the identity.
+
+Without these constraints GSPMD is free to drop the data-axis sharding of
+activations (measured: olmo-1b train_4k kept B=256 *global* batch per device
+inside attention — 983 GiB of temp).  With them, activations stay
+batch-sharded and TP-sharded exactly where intended.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from . import sharding as shd
+
+_CTX: list = []
+
+
+@contextlib.contextmanager
+def use(mesh, rules):
+    _CTX.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.pop()
+
+
+def active() -> bool:
+    return bool(_CTX)
+
+
+def cst(x, axes: tuple):
+    """Constrain activation ``x`` to logical ``axes`` (identity w/o context).
+
+    Axes entries whose extent does not divide the mesh product fall back to
+    unsharded (same rules engine as params).
+    """
+    if not _CTX:
+        return x
+    mesh, rules = _CTX[-1]
+    return shd.constrain(x, mesh, rules, axes)

@@ -1,0 +1,109 @@
+"""Logical-axis sharding rules with automatic divisibility fallback.
+
+Params (and caches) carry logical axis names (``ParamSpec.axes``); a
+``Rules`` table maps each name to a tuple of mesh axes.  ``resolve`` turns a
+spec into a ``PartitionSpec``, *dropping* mesh axes that do not divide the
+dimension (e.g. qwen2.5-14b's 40 heads cannot shard 16 ways — the fused QKV
+projection shards on its fused output dim instead, and GSPMD re-shards the
+reshaped activations internally).  A mesh axis is never used twice in one
+spec (first dim wins).
+
+Two standard rule sets:
+
+  * ``fsdp_tp``  — weights: "model" on the TP-able dim + ("pod","data") on
+    the other (ZeRO-3-style fully sharded); batch on ("pod","data").
+  * ``tp_only``  — replicated weights except TP dims (serving at low batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSpec, is_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: Mapping[str, tuple]
+
+    def axes_for(self, name: str) -> tuple:
+        return tuple(self.table.get(name, ()))
+
+
+def make_rules(mesh: Mesh, mode: str = "fsdp_tp") -> Rules:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    tp = ("model",)
+    if mode == "fsdp_tp":
+        table = {
+            "batch": dp, "embed": dp,
+            "vocab": tp, "mlp": tp, "qkv": tp, "heads": tp, "kv": tp,
+            "expert": tp, "rnn": tp, "headdim": tp,
+            "seq": (), "layers": (), "inner": (), "none": (),
+        }
+    elif mode == "fsdp_only":
+        table = {"batch": dp, "embed": dp, "vocab": dp, "mlp": dp,
+                 "qkv": dp, "heads": dp, "kv": dp, "expert": dp, "rnn": dp,
+                 "headdim": dp, "seq": (), "layers": (), "inner": (),
+                 "none": ()}
+    elif mode == "tp_only":
+        table = {"batch": dp,
+                 "vocab": tp, "mlp": tp, "qkv": tp, "heads": tp, "kv": tp,
+                 "expert": tp, "rnn": tp, "headdim": tp,
+                 "embed": (), "seq": (), "layers": (), "inner": (),
+                 "none": ()}
+    elif mode == "dp_only":
+        table = {"batch": dp, "embed": (), "vocab": (), "mlp": (), "qkv": (),
+                 "heads": (), "kv": (), "expert": (), "rnn": (), "headdim": (),
+                 "seq": (), "layers": (), "inner": (), "none": ()}
+    else:
+        raise ValueError(mode)
+    return Rules(table)
+
+
+def resolve(spec: ParamSpec, mesh: Mesh, rules: Rules) -> P:
+    """PartitionSpec for one param, with divisibility fallback."""
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(spec.shape, spec.axes):
+        assigned: tuple = ()
+        want = [a for a in rules.axes_for(name) if a not in used]
+        # greedily take the largest prefix of mesh axes that divides dim
+        for k in range(len(want), 0, -1):
+            cand = tuple(want[:k])
+            prod = int(np.prod([mesh.shape[a] for a in cand]))
+            if dim % prod == 0:
+                assigned = cand
+                break
+        out.append(assigned if assigned else None)
+        used.update(assigned)
+    # PartitionSpec wants single names or tuples
+    return P(*[a[0] if a and len(a) == 1 else (a or None) for a in out])
+
+
+def sharding_fn(mesh: Mesh, rules: Rules):
+    """For ``common.abstract_params``: spec -> NamedSharding."""
+    def fn(spec: ParamSpec) -> NamedSharding:
+        return NamedSharding(mesh, resolve(spec, mesh, rules))
+    return fn
+
+
+def tree_shardings(specs, mesh: Mesh, rules: Rules):
+    """NamedSharding pytree mirroring a ParamSpec pytree."""
+    fn = sharding_fn(mesh, rules)
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def batch_specs_to_shardings(batch_specs, mesh: Mesh, rules: Rules):
+    return tree_shardings(batch_specs, mesh, rules)
+
+
+def constrain(x, mesh: Mesh, rules: Rules, axes: Sequence[str]):
+    """with_sharding_constraint by logical axes (with the same fallback)."""
+    spec = ParamSpec(tuple(x.shape), tuple(axes), dtype=x.dtype)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(spec, mesh, rules)))

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: streaming token-level KL(p_t || p_s) over the vocab.
+
+The QAD loss touches two [T, V] logit tensors with V up to 152k.  A naive
+softmax+KL materializes four fp32 [T, V] intermediates.  This kernel makes a
+single pass over V per token tile, carrying flash-attention-style running
+(max, sumexp) statistics for BOTH distributions plus an unnormalized
+Σ e^{t-m_t}·(t-s) accumulator in VMEM scratch, emitting per-token KL and the
+two logsumexps (saved for the analytic backward).
+
+    KL_token = acc / l_t - (m_t + log l_t) + (m_s + log l_s)
+
+Backward is embarrassingly parallel given z_t, z_s:
+    dKL/ds = (p_s - p_t) * g_token.
+
+Grid: (token_tiles, vocab_tiles), vocab innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kl_fwd_kernel(t_ref, s_ref, kl_ref, zt_ref, zs_ref,
+                   mt_ref, lt_ref, ms_ref, ls_ref, acc_ref, *, n_v_steps: int):
+    v_step = pl.program_id(1)
+
+    @pl.when(v_step == 0)
+    def _init():
+        mt_ref[...] = jnp.full_like(mt_ref, NEG_INF)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        lt_ref[...] = jnp.zeros_like(lt_ref)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    t = t_ref[...].astype(jnp.float32)          # [tt, tv]
+    s = s_ref[...].astype(jnp.float32)
+
+    m_t, l_t = mt_ref[...], lt_ref[...]         # [tt, 1]
+    m_s, l_s = ms_ref[...], ls_ref[...]
+    acc = acc_ref[...]
+
+    m_t2 = jnp.maximum(m_t, jnp.max(t, -1, keepdims=True))
+    corr_t = jnp.exp(m_t - m_t2)
+    e_t = jnp.exp(t - m_t2)
+    lt_ref[...] = l_t * corr_t + jnp.sum(e_t, -1, keepdims=True)
+    acc_ref[...] = acc * corr_t + jnp.sum(e_t * (t - s), -1, keepdims=True)
+    mt_ref[...] = m_t2
+
+    m_s2 = jnp.maximum(m_s, jnp.max(s, -1, keepdims=True))
+    ls_ref[...] = l_s * jnp.exp(m_s - m_s2) + jnp.sum(jnp.exp(s - m_s2), -1,
+                                                      keepdims=True)
+    ms_ref[...] = m_s2
+
+    @pl.when(v_step == n_v_steps - 1)
+    def _flush():
+        z_t = mt_ref[...] + jnp.log(lt_ref[...])
+        z_s = ms_ref[...] + jnp.log(ls_ref[...])
+        kl_ref[...] = acc_ref[...] / lt_ref[...] - z_t + z_s
+        zt_ref[...] = z_t
+        zs_ref[...] = z_s
+
+
+def _kl_bwd_kernel(t_ref, s_ref, zt_ref, zs_ref, g_ref, ds_ref):
+    t = t_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    p_t = jnp.exp(t - zt_ref[...])
+    p_s = jnp.exp(s - zs_ref[...])
+    ds_ref[...] = ((p_s - p_t) * g_ref[...]).astype(ds_ref.dtype)
+
+
+def _pad_tv(x, tt, tv):
+    tkn, v = x.shape
+    pt, pv = (-tkn) % tt, (-v) % tv
+    if pt or pv:
+        # pad vocab with NEG_INF so padded entries vanish under softmax
+        x = jnp.pad(x, ((0, pt), (0, pv)), constant_values=NEG_INF)
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def kl_loss(t_logits: jax.Array, s_logits: jax.Array, mask: jax.Array,
+            tile_t: int = 256, tile_v: int = 2048, interpret: bool = True):
+    """Masked-mean KL(p_t||p_s).  t/s: [T, V] (flatten batch first), mask [T]."""
+    kl, _, _ = _kl_fwd(t_logits, s_logits, tile_t, tile_v, interpret)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(kl * mask) / denom
+
+
+def _kl_fwd(t_logits, s_logits, tile_t, tile_v, interpret):
+    tkn, v = t_logits.shape
+    tt, tv = min(tile_t, tkn), min(tile_v, v)
+    t = _pad_tv(t_logits, tt, tv)
+    s = _pad_tv(s_logits, tt, tv)
+    mm, vv = t.shape
+    grid = (mm // tt, vv // tv)
+
+    kl, z_t, z_s = pl.pallas_call(
+        functools.partial(_kl_fwd_kernel, n_v_steps=vv // tv),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tt, tv), lambda i, j: (i, j)),
+                  pl.BlockSpec((tt, tv), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((tt, 1), lambda i, j: (i, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((mm, 1), jnp.float32)] * 3,
+        scratch_shapes=[pltpu.VMEM((tt, 1), jnp.float32) for _ in range(5)],
+        interpret=interpret,
+    )(t, s)
+    return kl[:tkn, 0], z_t[:tkn, 0], z_s[:tkn, 0]
+
+
+def _kl_vjp_fwd(t_logits, s_logits, mask, tile_t, tile_v, interpret):
+    kl, z_t, z_s = _kl_fwd(t_logits, s_logits, tile_t, tile_v, interpret)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(kl * mask) / denom
+    return loss, (t_logits, s_logits, mask, z_t, z_s)
+
+
+def _kl_vjp_bwd(tile_t, tile_v, interpret, res, g):
+    t_logits, s_logits, mask, z_t, z_s = res
+    tkn, v = t_logits.shape
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    g_tok = (g * mask / denom).astype(jnp.float32)[:, None]     # [T, 1]
+
+    tt, tv = min(tile_t, tkn), min(tile_v, v)
+    t = _pad_tv(t_logits, tt, tv)
+    s = _pad_tv(s_logits, tt, tv)
+    mm, vv = t.shape
+    pt = mm - tkn
+    zt = jnp.pad(z_t[:, None], ((0, pt), (0, 0)))
+    zs = jnp.pad(z_s[:, None], ((0, pt), (0, 0)))
+    gg = jnp.pad(g_tok, ((0, pt), (0, 0)))
+
+    ds = pl.pallas_call(
+        _kl_bwd_kernel,
+        grid=(mm // tt, vv // tv),
+        in_specs=[pl.BlockSpec((tt, tv), lambda i, j: (i, j)),
+                  pl.BlockSpec((tt, tv), lambda i, j: (i, j)),
+                  pl.BlockSpec((tt, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tt, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tt, 1), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((tt, tv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, vv), s_logits.dtype),
+        interpret=interpret,
+    )(t, s, zt, zs, gg)
+
+    ds = ds[:tkn, :v]
+    return jnp.zeros_like(t_logits), ds, jnp.zeros_like(mask)
+
+
+kl_loss.defvjp(_kl_vjp_fwd, _kl_vjp_bwd)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: matmul with packed-NVFP4 weights, dequant-on-the-fly.
+
+This is the TPU-native deployment path for NVFP4 inference (DESIGN.md §3):
+Blackwell gets an FP4 *compute* win; TPU has no FP4 MXU, but decode is
+memory-bound, so the win on TPU is streaming 0.5625 B/param instead of
+2 B/param.  Weights live in HBM as packed nibbles + E4M3 block scales; each
+(TN, TK) weight tile is unpacked and rescaled in VMEM/VREGs and fed to the
+BF16 MXU with FP32 accumulation.
+
+Layout: for y = x @ W with x:[M,K], the weight is stored transposed,
+W^T:[N,K], packed along K (the contraction dim — NVFP4 blocks must run along
+K so a GEMM consumes whole blocks):
+
+    codes  uint8          [N, K//2]    two E2M1 nibbles / byte
+    scales float8_e4m3fn  [N, K//16]
+    tensor_scale f32      []
+
+Grid (n, m, k) with K innermost; an FP32 VMEM scratch tile accumulates
+across K steps and is flushed to the output on the last step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.nvfp4 import BLOCK, PackedNVFP4
+
+
+def _nibble_to_f32(n):
+    sign = 1.0 - 2.0 * (n >> 3).astype(jnp.float32)
+    exp = ((n >> 1) & 3).astype(jnp.float32)
+    man = (n & 1).astype(jnp.float32)
+    mag = jnp.where(exp == 0, man * 0.5, (1.0 + 0.5 * man) * jnp.exp2(exp - 1.0))
+    return sign * mag
+
+
+def _matmul_kernel(s_tensor_ref, x_ref, codes_ref, scales_ref, o_ref, acc_ref,
+                   *, n_k_steps: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # unpack nibbles: codes[n, k//2] -> w[n, k]
+    codes = codes_ref[...]
+    lo = _nibble_to_f32(codes & jnp.uint8(0xF))
+    hi = _nibble_to_f32(codes >> 4)
+    tn, tk2 = codes.shape
+    w = jnp.stack([lo, hi], axis=-1).reshape(tn, tk2 * 2)
+
+    # apply two-level scales
+    s = scales_ref[...].astype(jnp.float32) * s_tensor_ref[0, 0]   # [tn, tk/16]
+    w = (w.reshape(tn, tk2 * 2 // BLOCK, BLOCK) * s[..., None]
+         ).reshape(tn, tk2 * 2)
+
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k",
+                                             "out_dtype", "interpret"))
+def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, *,
+                 tile_m: int = 128, tile_n: int = 256, tile_k: int = 512,
+                 out_dtype=jnp.bfloat16, interpret: bool = True) -> jax.Array:
+    """y = x @ W where W is stored packed-NVFP4 as W^T:[N,K].
+
+    Leading dims of x are flattened into M.  K and N must be multiples of the
+    tile sizes after internal padding (handled here); K must be a multiple
+    of 16.
+    """
+    *lead, k = x.shape
+    xm = x.reshape(-1, k)
+    m = xm.shape[0]
+    n = packed.codes.shape[0]
+    assert packed.codes.shape[1] * 2 == k, "weight K mismatch"
+
+    tm, tn, tk = min(tile_m, m), min(tile_n, n), min(tile_k, k)
+    pm, pn, pk = (-m) % tm, (-n) % tn, (-k) % tk
+    if pm or pk:
+        xm = jnp.pad(xm, ((0, pm), (0, pk)))
+    codes, scales = packed.codes, packed.scales
+    if pn or pk:
+        codes = jnp.pad(codes, ((0, pn), (0, pk // 2)))
+        scales = jnp.pad(scales, ((0, pn), (0, pk // BLOCK)))
+
+    mm, nn, kk = xm.shape[0], codes.shape[0], xm.shape[1]
+    grid = (nn // tn, mm // tm, kk // tk)        # K innermost for accumulation
+    s_tensor = packed.tensor_scale.astype(jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k_steps=kk // tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ni, mi, ki: (0, 0)),
+            pl.BlockSpec((tm, tk), lambda ni, mi, ki: (mi, ki)),
+            pl.BlockSpec((tn, tk // 2), lambda ni, mi, ki: (ni, ki)),
+            pl.BlockSpec((tn, tk // BLOCK), lambda ni, mi, ki: (ni, ki)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda ni, mi, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), out_dtype),
+        # fp32 accumulator tile lives in VMEM across the K loop
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(s_tensor, xm, codes, scales)
+
+    if pm or pn:
+        out = out[:m, :n]
+    return out.reshape(*lead, n)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused NVFP4 quantize-dequantize (fake quant).
+
+The QAD student forward applies QDQ to every GEMM input.  Done naively this
+is an extra HBM round-trip per tensor; this kernel tiles the op so each
+(TM, TK) tile is read once into VMEM, block-16 scales are computed in-register,
+and the dequantized tile is written back — one read + one write.
+
+Tiling: rows × lanes = (TM, TK).  TK is a multiple of 128 (TPU lane width)
+and of the NVFP4 block (16), so each lane row holds TK/16 blocks and the
+block-amax reduction is a local reshape — no cross-tile communication.
+The per-tensor FP32 scale is a scalar input (computed by the wrapper with a
+cheap jnp.max; fusing it would force a second pass over HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.nvfp4 import BLOCK, E2M1_MAX, E4M3_MAX, e2m1_round
+
+
+def _qdq_kernel(s_tensor_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    tm, tk = x.shape
+    s_t = jnp.maximum(s_tensor_ref[0, 0], 1e-30)
+
+    xb = x.reshape(tm, tk // BLOCK, BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    # two-level scaling: per-block E4M3 × per-tensor FP32
+    s_b = jnp.clip(amax / E2M1_MAX / s_t, 2.0 ** -6, E4M3_MAX)
+    s_b = s_b.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    s = s_b * s_t
+
+    y = xb / jnp.maximum(s, 1e-30)
+    a = jnp.clip(jnp.abs(y), 0.0, E2M1_MAX)
+    q = jnp.sign(y) * e2m1_round(a)
+    o_ref[...] = (q * s).reshape(tm, tk).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_k", "interpret"))
+def nvfp4_qdq(x: jax.Array, tensor_amax: jax.Array | None = None, *,
+              tile_m: int = 256, tile_k: int = 512,
+              interpret: bool = True) -> jax.Array:
+    """Fake-quantize a 2D-or-more tensor, blocked along the last dim.
+
+    Leading dims are flattened into rows.  The last dim must be a multiple of
+    16; rows/lanes are padded up to the tile grid internally.
+    """
+    orig_shape, orig_dtype = x.shape, x.dtype
+    k = orig_shape[-1]
+    assert k % BLOCK == 0, f"last dim {k} not a multiple of {BLOCK}"
+    xm = x.reshape(-1, k)
+    m = xm.shape[0]
+
+    if tensor_amax is None:
+        tensor_amax = jnp.max(jnp.abs(xm.astype(jnp.float32)))
+    s_tensor = (tensor_amax.astype(jnp.float32)
+                / (E4M3_MAX * E2M1_MAX)).reshape(1, 1)
+
+    tm = min(tile_m, m)
+    tk = min(tile_k, k)
+    # pad rows to a multiple of tm, lanes to a multiple of tk (tk stays a
+    # multiple of 16 because tile_k and k both are)
+    pm, pk = (-m) % tm, (-k) % tk
+    if pm or pk:
+        xm = jnp.pad(xm, ((0, pm), (0, pk)))
+
+    grid = (xm.shape[0] // tm, xm.shape[1] // tk)
+    out = pl.pallas_call(
+        _qdq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),   # scalar tensor scale
+            pl.BlockSpec((tm, tk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xm.shape, orig_dtype),
+        interpret=interpret,
+    )(s_tensor, xm)
+
+    if pm or pk:
+        out = out[:m, :k]
+    return out.reshape(orig_shape)

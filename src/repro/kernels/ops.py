@@ -1,0 +1,49 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container, kernels run in interpret mode (the kernel body is
+executed in Python for correctness validation); on TPU, ``interpret=False``
+lowers through Mosaic.  ``INTERPRET`` auto-detects.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nvfp4 import PackedNVFP4, pack
+
+from . import ref
+from .kl_loss import kl_loss as _kl_loss
+from .nvfp4_matmul import nvfp4_matmul as _nvfp4_matmul
+from .nvfp4_qdq import nvfp4_qdq as _nvfp4_qdq
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def nvfp4_qdq(x: jax.Array, tensor_amax=None, **kw) -> jax.Array:
+    """Fused NVFP4 fake-quant (blocked along last dim)."""
+    kw.setdefault("interpret", INTERPRET)
+    return _nvfp4_qdq(x, tensor_amax, **kw)
+
+
+def pack_weight(w: jax.Array) -> PackedNVFP4:
+    """Pack a [K, N] weight into the kernel's W^T:[N, K] NVFP4 layout."""
+    return pack(w.T)
+
+
+def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, **kw) -> jax.Array:
+    """y = x @ W from packed NVFP4 weights, dequantized on the fly in VMEM."""
+    kw.setdefault("interpret", INTERPRET)
+    return _nvfp4_matmul(x, packed, **kw)
+
+
+def kl_loss(t_logits: jax.Array, s_logits: jax.Array, mask: jax.Array,
+            tile_t: int = 256, tile_v: int = 2048,
+            interpret: bool | None = None) -> jax.Array:
+    """Streaming masked-mean KL(p_t || p_s) over [T, V] logits."""
+    if interpret is None:
+        interpret = INTERPRET
+    return _kl_loss(t_logits, s_logits, mask, tile_t, tile_v, interpret)
+
+
+__all__ = ["nvfp4_qdq", "nvfp4_matmul", "pack_weight", "kl_loss", "ref",
+           "INTERPRET"]

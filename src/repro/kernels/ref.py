@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses, nvfp4
+
+
+def nvfp4_qdq_ref(x: jax.Array, tensor_amax: jax.Array | None = None) -> jax.Array:
+    """Oracle for the fused block-16 QDQ kernel."""
+    return nvfp4.qdq(x, tensor_amax)
+
+
+def nvfp4_matmul_ref(x: jax.Array, packed: nvfp4.PackedNVFP4,
+                     out_dtype=jnp.bfloat16) -> jax.Array:
+    """Oracle for the packed-weight matmul: dequantize fully, then matmul.
+
+    ``packed`` stores W in [K, N] layout with blocks along K — note the
+    blocks run along the *contraction* dim, so the packed layout is
+    [N, K]-major internally; here codes are [N, K//2] and we transpose after
+    dequant to keep the kernel's x @ W convention.
+    """
+    w = nvfp4.unpack(packed, dtype=jnp.float32)        # [N, K]
+    return jnp.dot(x.astype(jnp.float32), w.T,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def kl_loss_ref(t_logits: jax.Array, s_logits: jax.Array,
+                mask: jax.Array) -> jax.Array:
+    """Oracle for the streaming KL kernel (scalar masked-mean KL)."""
+    return losses.kl_from_logits(t_logits, s_logits, mask)
+
+
+def kl_grad_ref(t_logits: jax.Array, s_logits: jax.Array,
+                mask: jax.Array) -> jax.Array:
+    """Analytic d(mean KL)/d(student_logits)."""
+    f32 = jnp.float32
+    p_t = jax.nn.softmax(t_logits.astype(f32), -1)
+    p_s = jax.nn.softmax(s_logits.astype(f32), -1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return (p_s - p_t) * (mask.astype(f32) / denom)[..., None]

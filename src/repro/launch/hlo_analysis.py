@@ -1,0 +1,299 @@
+"""Post-SPMD HLO analysis: per-device FLOPs / HBM bytes / collective bytes.
+
+Why not ``compiled.cost_analysis()`` alone?  Two measured facts (see
+EXPERIMENTS.md §Roofline "method"):
+
+  1. it reports per-*device* numbers (good), but
+  2. it counts ``while`` (lax.scan) bodies ONCE, not × trip-count — for a
+     scan-over-layers model that under-counts compute by ~n_layers.
+
+So we parse ``compiled.as_text()`` (the post-partitioning, post-fusion
+module, whose shapes are already per-device shards):
+
+  * **FLOPs**: every ``dot``/``convolution`` op: 2 × prod(out_shape) ×
+    prod(contracted lhs dims), scaled by the product of enclosing while
+    trip-counts (extracted from the loop-condition constant).
+  * **HBM bytes**: Σ over non-trivial top-level ops of (output bytes +
+    operand bytes), where operands are resolved through the op table.
+    ``dynamic-update-slice`` (scan ys / KV-cache writes) is counted as
+    output/trip so that trip × bytes = one full buffer write.
+  * **Collective bytes**: payload × ring-factor per op kind with the group
+    size parsed from ``replica_groups``.
+
+Elementwise FLOPs are ignored (dots dominate at these shapes); both raw
+``cost_analysis`` numbers and parsed numbers are reported side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f4e2m1fn": 0.5,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+# computation headers sit at column 0 and end with "{"; parameter lists may
+# contain nested parens (tuple-typed params), so only anchor on the name.
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIVIAL = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "iota", "partition-id", "replica-id"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+def _parse_shapes(type_str: str):
+    """'(f32[1,2], bf16[3])' or 'f32[64,512]{1,0}' -> [(dtype, [dims]), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(x) for x in dims.split(",") if x] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_shapes: list
+    operands: list          # operand op names
+    line: str
+    comp: str
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if line[:1] not in ("", " ", "}") and line.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _parse_ops(comps: dict[str, list[str]]) -> dict[str, Op]:
+    ops: dict[str, Op] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, type_str, opcode, rest = m.groups()
+            operands = re.findall(r"%([\w.\-]+)", rest.split("),")[0]
+                                  if ")," in rest else rest)
+            ops[name] = Op(name=name, opcode=opcode,
+                           out_shapes=_parse_shapes(type_str),
+                           operands=operands, line=line, comp=cname)
+    return ops
+
+
+def _trip_counts(ops: dict[str, Op], comps) -> dict[str, int]:
+    """computation name -> multiplier (product of enclosing while trips)."""
+    # find while ops: condition=%c, body=%b
+    whiles = []
+    for op in ops.values():
+        if op.opcode == "while":
+            mc = re.search(r"condition=%([\w.\-]+)", op.line)
+            mb = re.search(r"body=%([\w.\-]+)", op.line)
+            if mc and mb:
+                whiles.append((op.comp, mc.group(1), mb.group(1)))
+
+    def cond_trip(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+        # the comparison constant may live in a called fusion's operands;
+        # also scan the computations this one calls
+        for line in comps.get(cond_name, []):
+            mcall = re.search(r"calls=%([\w.\-]+)", line)
+            if mcall:
+                for l2 in comps.get(mcall.group(1), []):
+                    for m in re.finditer(r"constant\((\d+)\)", l2):
+                        best = max(best, int(m.group(1)))
+        return best
+
+    # computation -> direct multiplier
+    direct: dict[str, int] = defaultdict(lambda: 1)
+    parent: dict[str, str] = {}
+    for comp_of_while, cond, body in whiles:
+        t = cond_trip(cond)
+        for c in (cond, body):
+            direct[c] = t
+            parent[c] = comp_of_while
+
+    # also map every called computation (fusions, reducers) to its caller
+    for op in ops.values():
+        for attr in ("calls", "to_apply", "body", "condition"):
+            m = re.search(attr + r"=%([\w.\-]+)", op.line)
+            if m and m.group(1) not in parent:
+                parent[m.group(1)] = op.comp
+
+    def multiplier(comp: str, _depth=0) -> int:
+        if _depth > 50:
+            return 1
+        m = direct.get(comp, 1)
+        p = parent.get(comp)
+        return m * (multiplier(p, _depth + 1) if p else 1)
+
+    return {c: multiplier(c) for c in comps}
+
+
+def _dot_flops(op: Op, ops: dict[str, Op]) -> float:
+    out_n = 1
+    for _, dims in op.out_shapes:
+        for d in dims:
+            out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not m:
+        return 2.0 * out_n            # conv or unparsable: lower bound
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs_name = op.operands[0] if op.operands else None
+    lhs = ops.get(lhs_name)
+    k = 1
+    if lhs and lhs.out_shapes:
+        dims = lhs.out_shapes[0][1]
+        for c in cdims:
+            if c < len(dims):
+                k *= dims[c]
+    return 2.0 * out_n * k
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+def _collective_cost(op: Op, line: str, n_devices: int) -> float:
+    """Per-device payload bytes on the wire (ring algorithm model)."""
+    b = _nbytes(op.out_shapes)
+    n = max(_group_size(line, n_devices), 1)
+    kind = op.opcode.replace("-start", "")
+    if n == 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * b * (n - 1) / n
+    if kind == "all-gather":
+        return b * (n - 1) / n
+    if kind == "reduce-scatter":
+        return b * (n - 1)              # input = out × n; ring moves out×(n-1)
+    if kind == "all-to-all":
+        return b * (n - 1) / n
+    if kind == "collective-permute":
+        return b
+    return b
+
+
+# ops that touch HBM even in a well-fused TPU program
+_MEM_OPS = {"dot", "convolution", "gather", "scatter", "dynamic-slice",
+            "dynamic-update-slice"} | _COLLECTIVES
+
+
+def op_mem_bytes(op: Op, ops: dict, k: int) -> float:
+    """HBM traffic of one op under the fused model.
+
+    Slicing ops move only the slice, not their (possibly huge) operand:
+      * dynamic-slice / gather:        read slice, write slice  (2 × out)
+      * dynamic-update-slice:          in-place; k iterations touch the
+                                       buffer once overall  (out / k × 2)
+      * scatter:                       read-modify-write of the touched
+                                       region  (~3 × updates)
+      * collectives:                   payload lives in the collective term
+      * dot / conv:                    operands + output
+    """
+    out_b = _nbytes(op.out_shapes)
+    if op.opcode in ("dynamic-slice", "gather"):
+        return 2.0 * out_b
+    if op.opcode == "dynamic-update-slice":
+        return 2.0 * out_b / max(k, 1)
+    if op.opcode == "scatter":
+        upd = (_nbytes(ops[op.operands[-1]].out_shapes)
+               if op.operands and op.operands[-1] in ops else out_b)
+        return 3.0 * upd
+    if op.opcode in _COLLECTIVES:
+        return out_b          # local write of the result
+    in_b = sum(_nbytes(ops[o].out_shapes) for o in op.operands if o in ops)
+    return out_b + in_b
+
+
+def analyze_hlo(hlo: str, n_devices: int) -> dict:
+    """Analyze a post-SPMD-partitioning HLO module (per-device shapes,
+    original while trip-counts, pre-backend rewrites).
+
+    Two memory models are produced:
+      * ``bytes_per_device`` (fused model) — dots/convs (operands+output),
+        gathers/scatters/slices, collectives.  Elementwise chains are
+        assumed VMEM-resident (fused) — this models a TPU program where the
+        QDQ/softmax chains fuse into their neighboring GEMMs (exactly what
+        the Pallas kernels guarantee for the quantization path).
+      * ``bytes_upper_bound`` — every non-trivial op's operands+output; the
+        nothing-fuses bound.
+    """
+    comps = _split_computations(hlo)
+    ops = _parse_ops(comps)
+    mult = _trip_counts(ops, comps)
+
+    flops = 0.0
+    bytes_fused = 0.0
+    bytes_ub = 0.0
+    coll_bytes = 0.0
+    coll_detail: dict[str, float] = defaultdict(float)
+
+    for op in ops.values():
+        k = mult.get(op.comp, 1)
+        if op.opcode in _TRIVIAL:
+            continue
+        if op.opcode in ("dot", "convolution"):
+            flops += k * _dot_flops(op, ops)
+        if op.opcode in _COLLECTIVES:
+            c = k * _collective_cost(op, op.line, n_devices)
+            coll_bytes += c
+            coll_detail[op.opcode.replace("-start", "")] += c
+
+        out_b = _nbytes(op.out_shapes)
+        in_b = sum(_nbytes(ops[o].out_shapes) for o in op.operands if o in ops)
+        bytes_ub += k * (out_b + in_b)
+        if op.opcode in _MEM_OPS:
+            bytes_fused += k * op_mem_bytes(op, ops, k)
+
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_fused,
+        "bytes_upper_bound": bytes_ub,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_detail": dict(coll_detail),
+        "n_while_loops": sum(1 for o in ops.values() if o.opcode == "while"),
+    }

@@ -1,0 +1,21 @@
+"""Production mesh.  A FUNCTION (not a module constant) so importing this
+module never touches jax device state — required by the dry-run contract."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data","model"); multi_pod adds a 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host actually has (tests / examples / benchmarks)."""
+    n = len(jax.devices())
+    mp = model_parallel if n % max(model_parallel, 1) == 0 else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

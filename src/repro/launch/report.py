@@ -1,0 +1,88 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the cached
+dry-run cells.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(d):
+    cells = [json.load(open(f)) for f in sorted(glob.glob(os.path.join(d, "*.json")))]
+    return [c for c in cells if "__" not in c.get("rules", "fsdp_tp") or True]
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(cells, mesh):
+    rows = ["| arch | shape | status | compute_s | memory_s | coll_s | "
+            "dominant | MFLOPs_model/chip | useful | mem GiB/chip | fits | MFU |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if (c.get("mesh") != mesh or c.get("rules", "fsdp_tp") != "fsdp_tp"
+                or c.get("variant")):
+            continue
+        if c["status"] == "SKIP":
+            rows.append(f"| {c['arch']} | {c['shape']} | SKIP | - | - | - | - "
+                        f"| - | - | - | - | - |")
+            continue
+        if c["status"] != "OK":
+            rows.append(f"| {c['arch']} | {c['shape']} | FAIL | - | - | - | - "
+                        f"| - | - | - | - | - |")
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | OK "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['model_flops_per_chip']/1e12:.2f}T "
+            f"| {min(r['useful_ratio'],9.99):.2f} "
+            f"| {fmt_bytes(m['peak_bytes_per_device'])} "
+            f"| {'Y' if m['fits_hbm'] else 'N'} | {r['mfu']:.3f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells, mesh):
+    rows = ["| arch | shape | compile_s | HLO MB | args GiB | temp GiB | "
+            "collectives (per-chip GB: ar/ag/rs/a2a/cp) |",
+            "|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if (c.get("mesh") != mesh or c["status"] != "OK"
+                or c.get("rules", "fsdp_tp") != "fsdp_tp"
+                or c.get("variant")):
+            continue
+        det = c["hlo_stats"]["collective_detail"]
+        g = lambda k: det.get(k, 0) / 1e9
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['compile_s']} "
+            f"| {c['hlo_bytes']/1e6:.1f} "
+            f"| {fmt_bytes(c['memory']['argument_bytes'])} "
+            f"| {fmt_bytes(c['memory']['temp_bytes'])} "
+            f"| {g('all-reduce'):.2f}/{g('all-gather'):.2f}"
+            f"/{g('reduce-scatter'):.2f}/{g('all-to-all'):.2f}"
+            f"/{g('collective-permute'):.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--kind", default="roofline", choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    if args.kind == "roofline":
+        print(roofline_table(cells, args.mesh))
+    else:
+        print(dryrun_table(cells, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

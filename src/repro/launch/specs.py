@@ -1,0 +1,117 @@
+"""Abstract input builders for the dry-run: ShapeDtypeStructs with
+NamedShardings for every (arch × shape × mesh) cell — params, optimizer
+state, batch, and KV caches.  Nothing here allocates device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.core import qad, qconfig
+from repro.distributed import sharding as shd
+from repro.models import common, get_model
+from repro.optim import AdamW
+
+P = common.ParamSpec
+
+
+def recipe_qconfig(cfg: ModelConfig) -> qconfig.QuantConfig:
+    return {
+        "all": qconfig.NVFP4_ALL,
+        "hybrid": qconfig.NVFP4_HYBRID,
+        "moe_hybrid": qconfig.NVFP4_MOE_HYBRID,
+    }[cfg.quant_recipe]
+
+
+def serve_qconfig(cfg: ModelConfig) -> qconfig.QuantConfig:
+    """Serving: weights are pre-quantized offline (already on the E2M1 grid),
+    so only activations QDQ at runtime; KV dtype per recipe."""
+    base = recipe_qconfig(cfg)
+    return dataclasses.replace(base, quantize_weights=False)
+
+
+# ---------------------------------------------------------------------------
+# batch specs per shape kind
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    if shape.kind == "decode":
+        s = 1
+        specs = {"tokens": P((b, 1), ("batch", "none"), dtype=jnp.int32,
+                             init="zeros")}
+        if cfg.mrope_sections:
+            specs["pos3"] = P((b, 1, 3), ("batch", "none", "none"),
+                              dtype=jnp.int32, init="zeros")
+        return specs
+
+    s = shape.seq_len
+    specs = {
+        "tokens": P((b, s), ("batch", "seq"), dtype=jnp.int32, init="zeros"),
+    }
+    if shape.kind == "train":
+        specs["labels"] = P((b, s), ("batch", "seq"), dtype=jnp.int32,
+                            init="zeros")
+        specs["mask"] = P((b, s), ("batch", "seq"), dtype=jnp.float32,
+                          init="ones")
+    if cfg.mrope_sections:
+        specs["pos3"] = P((b, s, 3), ("batch", "seq", "none"),
+                          dtype=jnp.int32, init="zeros")
+        specs["vis_embeds"] = P((b, s, cfg.d_model), ("batch", "seq", "embed"),
+                                dtype=jnp.bfloat16)
+        specs["vis_mask"] = P((b, s), ("batch", "seq"),
+                              dtype=jnp.bool_, init="zeros")
+    if cfg.family == "encdec":
+        specs["enc_frames"] = P((b, cfg.enc_seq, cfg.d_model),
+                                ("batch", "seq", "embed"), dtype=jnp.bfloat16)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# abstract pytrees (with shardings) for lowering
+# ---------------------------------------------------------------------------
+
+
+def _abstract(specs, mesh, rules):
+    return common.abstract_params(specs, shd.sharding_fn(mesh, rules))
+
+
+def train_state_abstract(cfg: ModelConfig, mesh, rules,
+                         opt: AdamW) -> qad.TrainState:
+    model = get_model(cfg)
+    pspecs = model.param_specs(cfg)
+    params = _abstract(pspecs, mesh, rules)
+    mspecs = jax.tree.map(
+        lambda s: dataclasses.replace(s, dtype=jnp.dtype(opt.state_dtype)),
+        pspecs, is_leaf=common.is_spec)
+    mstate = _abstract(mspecs, mesh, rules)
+    from repro.optim.adamw import AdamWState
+    return qad.TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        student=params,
+        teacher=params,
+        opt_state=AdamWState(m=mstate, v=mstate),
+    )
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules, opt):
+    state = train_state_abstract(cfg, mesh, rules, opt)
+    batch = _abstract(batch_specs(cfg, shape), mesh, rules)
+    return state, batch
+
+
+def serve_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    """(params, cache, batch) abstract trees for decode/prefill shapes."""
+    model = get_model(cfg)
+    params = _abstract(model.param_specs(cfg), mesh, rules)
+    batch = _abstract(batch_specs(cfg, shape), mesh, rules)
+    cache = None
+    if shape.kind == "decode":
+        cspecs = model.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        cache = _abstract(cspecs, mesh, rules)
+    return params, cache, batch

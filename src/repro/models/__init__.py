@@ -1,0 +1,2 @@
+from . import attention, common, decoder, layers, registry, rglru, rwkv6, whisper
+from .registry import get_model

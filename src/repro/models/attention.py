@@ -1,0 +1,207 @@
+"""Attention: GQA, blockwise (flash-style) softmax, sliding window, KV cache.
+
+Prefill at 32k would materialize S² score matrices; ``blockwise_attention``
+scans over KV chunks with online-softmax statistics (the pure-JAX analogue of
+flash attention — memory O(S·chunk), FLOPs unchanged), and chunks Q so the
+working set stays VMEM-sized on TPU.
+
+Decode attends one query against the cache.  The cache is either BF16 or FP8
+(E4M3 values + per-(token, head) fp32 scales — the paper's Nemotron-3-Nano
+recipe); sliding-window layers keep a ring buffer of the last ``window``
+positions (RoPE is applied *before* caching, so slot order is irrelevant
+given the validity mask).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nvfp4 import E4M3_MAX
+from repro.distributed.ctx import cst
+
+NEG_INF = -1e30
+
+
+def split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        q_chunk: int = 1024, kv_chunk: int = 1024,
+                        q_offset: int = 0) -> jax.Array:
+    """q: [B,Sq,H,hd], k/v: [B,Sk,Hkv,hd] -> [B,Sq,H,hd].
+
+    ``q_offset``: absolute position of q[0] (for prefill-continuation).
+    ``window`` > 0 masks keys older than ``window`` positions (local attn).
+    """
+    b, sq0, h, hd = q.shape
+    sk0, hkv = k.shape[1], k.shape[2]
+    n_rep = h // hkv
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+
+    q_chunk = min(q_chunk, sq0)
+    kv_chunk = min(kv_chunk, sk0)
+    # pad seq dims up to chunk multiples (pad keys are masked via k_pos >= sk0)
+    pq, pk = (-sq0) % q_chunk, (-sk0) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    sq, sk = sq0 + pq, sk0 + pk
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    # [B,H,nq,cq,hd] / [B,H,nk,ck,hd]
+    qc = q.transpose(0, 2, 1, 3).reshape(b, h, nq, q_chunk, hd)
+    kc = k.transpose(0, 2, 1, 3).reshape(b, h, nk, kv_chunk, hd)
+    vc = v.transpose(0, 2, 1, 3).reshape(b, h, nk, kv_chunk, hd)
+
+    q_pos = (jnp.arange(sq) + q_offset).reshape(nq, q_chunk)
+    k_pos = jnp.arange(sk).reshape(nk, kv_chunk)
+
+    def per_q_chunk(qi, qpos):
+        # online softmax over kv chunks
+        def body(carry, inp):
+            m, l, acc = carry
+            ki, vi, kpos = inp
+            # bf16 MXU operands, fp32 accumulation (§Perf iteration G2:
+            # halves score/probability HBM traffic vs fp32 operands)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.broadcast_to(kpos[None, :] < sk0, (q_chunk, kv_chunk))
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask, s, NEG_INF)
+            m2 = jnp.maximum(m, jnp.max(s, -1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + jnp.sum(p, -1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(qi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m2, l2, acc2), None
+
+        init = (jnp.full((b, h, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32),
+                jnp.zeros((b, h, q_chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            body, init, (kc.transpose(2, 0, 1, 3, 4),
+                         vc.transpose(2, 0, 1, 3, 4), k_pos))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda args: per_q_chunk(*args),
+                      (qc.transpose(2, 0, 1, 3, 4), q_pos))   # [nq,B,H,cq,hd]
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd)
+    return out[:, :sq0].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked cache.  fp8: k/v are E4M3 + per-(pos,head) scales."""
+    k: jax.Array            # [L, B, S_max, Hkv, hd]
+    v: jax.Array
+    k_scale: jax.Array | None   # [L, B, S_max, Hkv] f32 (fp8 only)
+    v_scale: jax.Array | None
+
+
+def init_kv_cache(n_layers, batch, s_max, n_kv, head_dim, dtype_str="bf16"):
+    shape = (n_layers, batch, s_max, n_kv, head_dim)
+    if dtype_str == "fp8":
+        return KVCache(
+            k=jnp.zeros(shape, jnp.float8_e4m3fn),
+            v=jnp.zeros(shape, jnp.float8_e4m3fn),
+            k_scale=jnp.zeros(shape[:-1], jnp.float32),
+            v_scale=jnp.zeros(shape[:-1], jnp.float32))
+    return KVCache(k=jnp.zeros(shape, jnp.bfloat16),
+                   v=jnp.zeros(shape, jnp.bfloat16), k_scale=None, v_scale=None)
+
+
+def _quant_kv(x):
+    """[B,S,H,hd] -> (e4m3 values, [B,S,H] scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), -1)
+    scale = jnp.maximum(amax, 1e-30) / E4M3_MAX
+    vals = (x.astype(jnp.float32) / scale[..., None]).astype(jnp.float8_e4m3fn)
+    return vals, scale
+
+
+def _dequant_kv(vals, scale, dtype=jnp.bfloat16):
+    return (vals.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def cache_update_layer(layer_cache, k_new, v_new, pos):
+    """Write new kv at position(s) ``pos`` (scalar start index) into one
+    layer's slice {k, v, k_scale, v_scale} (leading L removed)."""
+    out = dict(layer_cache)
+    if layer_cache.get("k_scale") is not None:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(layer_cache["k"], kq, pos, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(layer_cache["v"], vq, pos, 1)
+        out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k_scale"], ks, pos, 1)
+        out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v_scale"], vs, pos, 1)
+    else:
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k"], k_new.astype(layer_cache["k"].dtype), pos, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v"], v_new.astype(layer_cache["v"].dtype), pos, 1)
+    return out
+
+
+def cache_read_layer(layer_cache, dtype=jnp.bfloat16):
+    if layer_cache.get("k_scale") is not None:
+        return (_dequant_kv(layer_cache["k"], layer_cache["k_scale"], dtype),
+                _dequant_kv(layer_cache["v"], layer_cache["v_scale"], dtype))
+    return layer_cache["k"].astype(dtype), layer_cache["v"].astype(dtype)
+
+
+def decode_attend(q, layer_cache, pos, *, window: int = 0):
+    """One-token decode: q [B,1,H,hd] vs cache [B,S_max,Hkv,hd].
+
+    ``pos``: number of valid cache positions (the new token's kv must already
+    be written).  Sliding-window caches are ring buffers: validity is
+    pos - window <= slot_pos < pos, where slot semantics are handled by the
+    caller writing at ``pos % S_max``; since RoPE precedes caching, only the
+    mask matters.
+    """
+    k, v = cache_read_layer(layer_cache, q.dtype)
+    b, s_max, hkv, hd = k.shape
+    h = q.shape[2]
+    k = repeat_kv(k, h // hkv)
+    v = repeat_kv(v, h // hkv)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    slot = jnp.arange(s_max)
+    if window:
+        # ring buffer: slot i currently holds absolute position
+        #   p(i) = i + s_max * floor((pos-1-i)/s_max)  — the most recent write
+        newest = pos - 1
+        abs_pos = slot + s_max * ((newest - slot) // s_max)
+        valid = (abs_pos >= 0) & (abs_pos >= pos - window) & (abs_pos <= newest)
+    else:
+        valid = slot < pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

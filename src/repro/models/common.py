@@ -1,0 +1,132 @@
+"""Parameter-spec system: shapes + logical sharding axes + quant kinds.
+
+Every model describes its parameters as a pytree of ``ParamSpec``.  From one
+spec tree we derive:
+
+  * ``init_params``        — materialized, randomly initialized params
+  * ``abstract_params``    — ShapeDtypeStructs (+ NamedSharding) for the
+                             multi-pod dry-run (no allocation)
+  * PTQ quantization       — ``kind`` + ``contract_axis`` say how each GEMM
+                             weight is blocked
+  * sharding               — logical axes resolved against a mesh by
+                             ``repro.distributed.sharding``
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                 # logical axis names, len == len(shape)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"        # normal | zeros | ones | embed | lru_lambda
+    scale: float = 1.0          # multiplier on the default init std
+    kind: str = ""              # quant kind ("mlp"|"attn"|...) if a GEMM weight
+    contract_axis: int = 0      # which axis is the GEMM contraction dim
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "lru_lambda":
+        # RG-LRU: Λ init so that a = exp(-softplus(Λ)·c·σ(..)) starts ~0.9-0.999
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        lam = jnp.log(jnp.exp(-jnp.log(u) / 8.0) - 1.0)   # softplus^-1
+        return lam.astype(spec.dtype)
+    fan_in = spec.shape[spec.contract_axis] if len(spec.shape) else 1
+    std = spec.scale * (0.02 if spec.init == "embed" else 1.0 / np.sqrt(max(fan_in, 1)))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, rng) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs, sharding_fn: Callable | None = None) -> Any:
+    """ShapeDtypeStruct tree; ``sharding_fn(spec) -> NamedSharding | None``."""
+    def one(s: ParamSpec):
+        sh = sharding_fn(s) if sharding_fn else None
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree.map(one, specs, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked [n, ...] dim to every spec (scan-over-layers)."""
+    def one(s: ParamSpec):
+        return dataclasses.replace(
+            s, shape=(n, *s.shape), axes=(axis_name, *s.axes),
+            contract_axis=s.contract_axis + 1 if s.kind else s.contract_axis)
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def zeros_from_specs(specs):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
+                        is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# scan-over-layers with selective quantization (paper §3.4)
+# ---------------------------------------------------------------------------
+
+
+def scan_layers(body_fn, carry, stacked_params, stacked_xs, qcfg,
+                skip_first: int = 0, skip_last: int = 0, remat: str = "none"):
+    """``jax.lax.scan`` over stacked layer params, in up to three segments.
+
+    ``body_fn(qcfg)(carry, (params_slice, xs_slice)) -> (carry, ys)``.
+    The first/last ``skip_*`` layers run with quantization disabled
+    (BF16 segments of the paper's selective recipe); the middle segment uses
+    ``qcfg``.  Segments are separate scans — the layer body is compiled once
+    per segment, keeping HLO size O(1) in depth.
+    """
+    from repro.core.qconfig import BF16
+
+    leaves = jax.tree.leaves(stacked_params)
+    n = leaves[0].shape[0]
+    skip_first = min(skip_first, n)
+    skip_last = min(skip_last, n - skip_first)
+    bounds = [(0, skip_first, BF16), (skip_first, n - skip_last, qcfg),
+              (n - skip_last, n, BF16)]
+
+    ys_all = []
+    for lo, hi, qc in bounds:
+        if hi <= lo:
+            continue
+        seg_p = jax.tree.map(lambda a: a[lo:hi], stacked_params)
+        seg_x = jax.tree.map(lambda a: a[lo:hi], stacked_xs) if stacked_xs is not None else None
+        fn = body_fn(qc)
+        if remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if remat == "dots" else None)
+            fn = jax.checkpoint(fn, policy=policy)
+        carry, ys = jax.lax.scan(fn, carry, (seg_p, seg_x))
+        ys_all.append(ys)
+    if not any(jax.tree.leaves(y) for y in ys_all):
+        ys = None
+    elif len(ys_all) > 1:
+        ys = jax.tree.map(lambda *a: jnp.concatenate(a, 0), *ys_all)
+    else:
+        ys = ys_all[0]
+    return carry, ys

@@ -1,0 +1,315 @@
+"""Decoder-only LM: dense (OLMo/Qwen/Granite/AceReason), MoE (Arctic,
+Qwen2-MoE) and VLM-backbone (Qwen2-VL, M-RoPE) families in one scan body.
+
+Functional protocol (shared by all model modules):
+
+    param_specs(cfg)                        -> ParamSpec pytree
+    init_params(cfg, rng)                   -> params
+    apply(cfg, params, batch, qcfg, output) -> logits | hidden
+    unembed(cfg, params)                    -> [d, V]
+    init_cache(cfg, batch, s_max, abstract) -> cache pytree
+    prefill(cfg, params, batch, qcfg, s_max)-> (logits, cache)
+    decode_step(cfg, params, cache, batch, qcfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantConfig
+from repro.distributed.ctx import cst
+
+from . import attention as attn
+from . import common, layers
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _norm_specs(cfg, d):
+    P = common.ParamSpec
+    if cfg.norm == "rmsnorm":
+        return {"w": P((d,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        return {"w": P((d,), ("embed",), init="ones"),
+                "b": P((d,), ("embed",), init="zeros")}
+    return {}          # layernorm_np — non-parametric (OLMo)
+
+
+def run_norm(cfg, p, x):
+    return layers.apply_norm(cfg, x, p.get("w"), p.get("b"))
+
+
+def _layer_specs(cfg):
+    P = common.ParamSpec
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    spec = {
+        "ln1": _norm_specs(cfg, d),
+        "wqkv": P((d, cfg.qkv_dim), ("embed", "qkv"), kind="attn"),
+        "wo": P((h * hd, d), ("qkv", "embed"), kind="attn", scale=0.5),
+        "ln2": _norm_specs(cfg, d),
+    }
+    if cfg.qkv_bias:
+        spec["bqkv"] = P((cfg.qkv_dim,), ("qkv",), init="zeros")
+    if cfg.n_experts:
+        ffe = cfg.moe_d_ff
+        # EP shards the expert dim over "model"; TP shards the expert FFN
+        # dim instead (better when the dispatch is data-local — §Perf M4)
+        eax = "expert" if cfg.moe_shard == "ep" else "none"
+        spec["router"] = P((d, cfg.n_experts), ("embed", "expert"),
+                           kind="router")
+        spec["moe_wg"] = P((cfg.n_experts, d, ffe), (eax, "embed", "mlp"),
+                           kind="mlp", contract_axis=1)
+        spec["moe_wu"] = P((cfg.n_experts, d, ffe), (eax, "embed", "mlp"),
+                           kind="mlp", contract_axis=1)
+        spec["moe_wd"] = P((cfg.n_experts, ffe, d), (eax, "mlp", "embed"),
+                           kind="mlp", contract_axis=1, scale=0.5)
+        if cfg.shared_d_ff:
+            sf = cfg.shared_d_ff
+            spec["sh_wg"] = P((d, sf), ("embed", "mlp"), kind="mlp")
+            spec["sh_wu"] = P((d, sf), ("embed", "mlp"), kind="mlp")
+            spec["sh_wd"] = P((sf, d), ("mlp", "embed"), kind="mlp", scale=0.5)
+            spec["sh_gate"] = P((d, 1), ("embed", "none"), kind="router")
+        if cfg.moe_dense_residual:
+            spec["res_wg"] = P((d, ff), ("embed", "mlp"), kind="mlp")
+            spec["res_wu"] = P((d, ff), ("embed", "mlp"), kind="mlp")
+            spec["res_wd"] = P((ff, d), ("mlp", "embed"), kind="mlp", scale=0.5)
+    else:
+        if cfg.mlp == "swiglu":
+            spec["wg"] = P((d, ff), ("embed", "mlp"), kind="mlp")
+            spec["wu"] = P((d, ff), ("embed", "mlp"), kind="mlp")
+            spec["wd"] = P((ff, d), ("mlp", "embed"), kind="mlp", scale=0.5)
+        else:
+            spec["wi"] = P((d, ff), ("embed", "mlp"), kind="mlp")
+            spec["wd"] = P((ff, d), ("mlp", "embed"), kind="mlp", scale=0.5)
+    return spec
+
+
+def param_specs(cfg):
+    P = common.ParamSpec
+    d, v = cfg.d_model, cfg.vocab_size
+    specs = {
+        "embed": P((v, d), ("vocab", "embed"), init="embed", kind="embed"),
+        "layers": common.stack_specs(_layer_specs(cfg), cfg.n_layers),
+        "final_norm": _norm_specs(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P((d, v), ("embed", "vocab"), kind="lm_head",
+                             scale=1.0)
+    return specs
+
+
+def init_params(cfg, rng):
+    return common.init_params(param_specs(cfg), rng)
+
+
+def unembed(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+
+def _rope(cfg, x, pos):
+    if cfg.mrope_sections:
+        return layers.apply_mrope(x, pos, cfg.rope_theta, cfg.mrope_sections)
+    return layers.apply_rope(x, pos, cfg.rope_theta)
+
+
+def _attention(qcfg, cfg, p, h, pos, mode, cache_sl, pos_idx):
+    b, s, _ = h.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"))
+    q, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
+    hax = ("batch", "seq", "heads", "none")
+    kax = ("batch", "seq", "kv", "none")
+    q = cst(_rope(cfg, attn.split_heads(q, nh, hd), pos), hax)
+    k = cst(_rope(cfg, attn.split_heads(k, nkv, hd), pos), kax)
+    v = cst(attn.split_heads(v, nkv, hd), kax)
+
+    new_cache = None
+    if mode == "decode":
+        s_max = cache_sl["k"].shape[1]
+        write_at = pos_idx % s_max if cfg.window else pos_idx
+        new_cache = attn.cache_update_layer(cache_sl, k, v, write_at)
+        out = attn.decode_attend(q, new_cache, pos_idx + 1, window=cfg.window)
+    else:
+        out = attn.blockwise_attention(q, k, v, causal=True,
+                                       window=cfg.window)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}       # collected via scan ys
+    out = cst(out, ("batch", "seq", "heads", "none"))
+    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"]),
+              ("batch", "seq", "none"))
+    return out, new_cache
+
+
+def _ffn(qcfg, cfg, p, h):
+    if not cfg.n_experts:
+        if cfg.mlp == "swiglu":
+            return layers.swiglu_mlp(qcfg, h, p["wg"], p["wu"], p["wd"]), {}
+        return layers.gelu_mlp(qcfg, h, p["wi"], p["wd"]), {}
+    out, aux = layers.moe_ffn(qcfg, cfg, h, p["router"],
+                              p["moe_wg"], p["moe_wu"], p["moe_wd"])
+    if cfg.shared_d_ff:
+        sh = layers.swiglu_mlp(qcfg, h, p["sh_wg"], p["sh_wu"], p["sh_wd"])
+        gate = jax.nn.sigmoid(
+            layers.qdense(qcfg, "router", h, p["sh_gate"]).astype(jnp.float32))
+        out = out + (sh.astype(jnp.float32) * gate).astype(out.dtype)
+    if cfg.moe_dense_residual:
+        out = out + layers.swiglu_mlp(qcfg, h, p["res_wg"], p["res_wu"],
+                                      p["res_wd"])
+    return out, aux
+
+
+def _block(qcfg, cfg, p, x, pos, mode, cache_sl, pos_idx):
+    h = run_norm(cfg, p["ln1"], x)
+    a, new_cache = _attention(qcfg, cfg, p, h, pos, mode, cache_sl, pos_idx)
+    x = x + a
+    h = run_norm(cfg, p["ln2"], x)
+    f, aux = _ffn(qcfg, cfg, p, h)
+    x = x + f
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg, params, batch):
+    x = params["embed"][batch["tokens"]]
+    if cfg.mrope_sections and "vis_embeds" in batch:
+        # VLM: splice precomputed patch embeddings (frontend is a stub)
+        m = batch["vis_mask"][..., None]
+        x = jnp.where(m, batch["vis_embeds"].astype(x.dtype), x)
+    return x
+
+
+def _positions(cfg, batch, s, offset=0):
+    if cfg.mrope_sections:
+        return batch["pos3"]                    # [B, S, 3]
+    b = batch["tokens"].shape[0]
+    return jnp.broadcast_to(jnp.arange(s) + offset, (b, s))
+
+
+def apply(cfg, params, batch, qcfg: QuantConfig, output: str = "logits"):
+    """Teacher-forcing forward: [B,S] tokens -> [B,S,V] logits."""
+    x = cst(_embed_inputs(cfg, params, batch), ("batch", "seq", "none"))
+    pos = _positions(cfg, batch, x.shape[1])
+
+    def body(qc):
+        def fn(carry, inp):
+            p, _ = inp
+            y, _, aux = _block(qc, cfg, p, carry, pos, "train", None, None)
+            return cst(y, ("batch", "seq", "none")), aux
+        return fn
+
+    x, _ = common.scan_layers(body, x, params["layers"], None, qcfg,
+                              qcfg.skip_first_layers, qcfg.skip_last_layers,
+                              cfg.remat)
+    x = run_norm(cfg, params["final_norm"], x)
+    if output == "hidden":
+        return x
+    w = unembed(cfg, params)
+    return cst(layers.qdense(qcfg, "lm_head", x, w),
+               ("batch", "seq", "vocab"))
+
+
+def cache_specs(cfg, batch_size, s_max):
+    P = common.ParamSpec
+    s_alloc = min(s_max, cfg.window) if cfg.window else s_max
+    fp8 = _kv_fp8(cfg)
+    kdt = jnp.float8_e4m3fn if fp8 else jnp.bfloat16
+    shape = (cfg.n_layers, batch_size, s_alloc, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("layers", "batch", "seq", "kv", "headdim")
+    c = {"k": P(shape, axes, dtype=kdt, init="zeros"),
+         "v": P(shape, axes, dtype=kdt, init="zeros"),
+         "pos": P((), (), dtype=jnp.int32, init="zeros")}
+    if fp8:
+        c["k_scale"] = P(shape[:-1], axes[:-1], dtype=jnp.float32, init="zeros")
+        c["v_scale"] = P(shape[:-1], axes[:-1], dtype=jnp.float32, init="zeros")
+    return c
+
+
+def init_cache(cfg, batch_size, s_max):
+    return common.zeros_from_specs(cache_specs(cfg, batch_size, s_max))
+
+
+def _kv_fp8(cfg):
+    return cfg.quant_recipe == "moe_hybrid"
+
+
+def _cache_slices(cache):
+    return {k: v for k, v in cache.items() if k != "pos"}
+
+
+def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
+    """One-token decode: batch["tokens"] [B,1] against the cache."""
+    x = _embed_inputs(cfg, params, batch)
+    pos_idx = cache["pos"]
+    if cfg.mrope_sections:
+        pos = batch["pos3"]                      # [B,1,3]
+    else:
+        pos = jnp.full((x.shape[0], 1), pos_idx, jnp.int32)
+
+    def body(qc):
+        def fn(carry, inp):
+            p, csl = inp
+            y, new_c, _ = _block(qc, cfg, p, carry, pos, "decode", csl, pos_idx)
+            return y, new_c
+        return fn
+
+    x, new_cache = common.scan_layers(
+        body, x, params["layers"], _cache_slices(cache), qcfg,
+        qcfg.skip_first_layers, qcfg.skip_last_layers, "none")
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = cst(layers.qdense(qcfg, "lm_head", x, unembed(cfg, params)),
+                 ("batch", "none", "vocab"))
+    new_cache["pos"] = pos_idx + 1
+    return logits, new_cache
+
+
+def prefill(cfg, params, batch, qcfg: QuantConfig, s_max: int | None = None):
+    """Prompt pass: returns (last-token logits, populated cache)."""
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    pos = _positions(cfg, batch, s)
+
+    def body(qc):
+        def fn(carry, inp):
+            p, _ = inp
+            y, kv, _ = _block(qc, cfg, p, carry, pos, "prefill", None, None)
+            if _kv_fp8(cfg):
+                kq, ks = attn._quant_kv(kv["k"])
+                vq, vs = attn._quant_kv(kv["v"])
+                kv = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            return y, kv
+        return fn
+
+    x, kv = common.scan_layers(body, x, params["layers"], None, qcfg,
+                               qcfg.skip_first_layers, qcfg.skip_last_layers,
+                               cfg.remat)
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x[:, -1:], unembed(cfg, params))
+
+    cache = dict(kv)
+    if cfg.window and s > cfg.window:
+        # keep the last `window` positions, ring-aligned: slot p % window
+        # holds position p (decode continues writing at pos % window)
+        w = cfg.window
+        cache = jax.tree.map(
+            lambda a: jnp.roll(a[:, :, s - w:], s % w, axis=2), cache)
+    elif s_max:
+        s_alloc = min(s_max, cfg.window) if cfg.window else s_max
+        if s_alloc > s:
+            cache = jax.tree.map(
+                lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, s_alloc - s)]
+                                  + [(0, 0)] * (a.ndim - 3)), cache)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, cache

@@ -1,0 +1,282 @@
+"""Shared building blocks.  Every GEMM routes through ``qdense`` — the single
+NVFP4 injection point (weights blocked along the contraction axis,
+activations along their last dim, per the NVFP4 GEMM convention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantConfig
+from repro.distributed.ctx import cst
+
+
+# ---------------------------------------------------------------------------
+# quantized GEMM
+# ---------------------------------------------------------------------------
+
+
+def qdense(qcfg: QuantConfig, kind: str, x: jax.Array, w: jax.Array,
+           b: jax.Array | None = None, contract_axis: int = 0) -> jax.Array:
+    """y = x @ w (+ b) with NVFP4 fake-quant per the policy.
+
+    ``w``'s contraction axis defaults to 0 ([in, out] layout); MoE expert
+    weights [E, in, out] pass contract_axis=1.
+    """
+    xq = qcfg.q_act(x, kind)
+    wq = qcfg.q_weight(w, kind, contract_axis)
+    y = jnp.einsum("...k,ko->...o", xq, wq) if w.ndim == 2 else None
+    if y is None:
+        raise ValueError("use explicit einsum for >2D weights")
+    if b is not None:
+        y = y + b
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms (computed in fp32)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    if w is not None:
+        y = y * w.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, w: jax.Array | None, b: jax.Array | None,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if w is not None:
+        y = y * w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(cfg, x, w=None, b=None):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, w)
+    if cfg.norm == "layernorm":
+        return layernorm(x, w, b)
+    if cfg.norm == "layernorm_np":          # OLMo: non-parametric LN
+        return layernorm(x, None, None)
+    raise ValueError(cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; pos: broadcastable to [..., S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs    # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin,
+                            xf2 * cos + xf1 * sin], -1).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, pos3: jax.Array, theta: float,
+                sections: tuple) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the hd/2 frequency slots are split into
+    (t, h, w) sections, each rotated by its own position stream.
+
+    x: [B, S, H, hd]; pos3: [B, S, 3] (t/h/w position ids).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    # build per-slot angle by selecting the section's position stream
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=hd // 2)
+    pos_per_slot = jnp.take_along_axis(
+        pos3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, (*pos3.shape[:-1], hd // 2)).astype(jnp.int32),
+        axis=-1)                                        # [B, S, hd/2]
+    ang = pos_per_slot * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin,
+                            xf2 * cos + xf1 * sin], -1).astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal position embedding [seq, d]."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(d // 2, dtype=jnp.float32)
+                  / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(qcfg, x, wg, wu, wd, kind: str = "mlp"):
+    g = cst(qdense(qcfg, kind, x, wg), ("batch", "seq", "mlp"))
+    u = cst(qdense(qcfg, kind, x, wu), ("batch", "seq", "mlp"))
+    return cst(qdense(qcfg, kind, jax.nn.silu(g) * u, wd),
+               ("batch", "seq", "none"))
+
+
+def gelu_mlp(qcfg, x, wi, wd, bi=None, bd=None, kind: str = "mlp"):
+    h = jax.nn.gelu(cst(qdense(qcfg, kind, x, wi, bi), ("batch", "seq", "mlp")))
+    return cst(qdense(qcfg, kind, h, wd, bd), ("batch", "seq", "none"))
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN — capacity-based sorted dispatch (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn(qcfg, cfg, x, router_w, wg, wu, wd):
+    """Top-k MoE with sorted capacity dispatch.  Static shapes throughout.
+
+    x: [B, S, d]; router_w: [d, E]; expert weights [E, d, ffe] / [E, ffe, d].
+    Returns (out [B,S,d], aux metrics dict).
+
+    Two dispatch scopes (ModelConfig.moe_dispatch):
+      * "global" — one sort over all B·S tokens (the common reference
+        implementation; under DP sharding the gather crosses batch shards
+        and GSPMD all-gathers the token tensor per layer),
+      * "local"  — dispatch per batch row (vmapped): capacity is per-row,
+        gathers/scatters stay inside each data shard.  This is the
+        §Perf hillclimb optimization — see EXPERIMENTS.md.
+    """
+    if getattr(cfg, "moe_dispatch", "global") == "local":
+        return _moe_dispatch_local(qcfg, cfg, x, router_w, wg, wu, wd)
+    b, s, d = x.shape
+    out, aux = _moe_dispatch_flat(qcfg, cfg, x.reshape(b * s, d), router_w,
+                                  wg, wu, wd)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_dispatch_local(qcfg, cfg, x, router_w, wg, wu, wd):
+    """Per-batch-row dispatch, written as BATCHED ops (take_along_axis /
+    batched scatter) rather than vmap: the batch dim stays a real sharded
+    axis, so GSPMD keeps routing, gathers, expert GEMMs and the combine
+    local to each data shard (vmapped constraints cannot pin the mapped
+    axis — measured as data-axis replication of the expert GEMMs)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+
+    gates = jax.nn.softmax(
+        qdense(qcfg, "router", x, router_w).astype(jnp.float32), -1)  # [B,S,E]
+    topw, topi = jax.lax.top_k(gates, k)                              # [B,S,k]
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(b, s * k)
+    flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(s), k), (b, s * k))
+    flat_w = topw.reshape(b, s * k)
+    order = jnp.argsort(flat_e, axis=1)
+    se = jnp.take_along_axis(flat_e, order, 1)
+    st = jnp.take_along_axis(flat_t, order, 1)
+    sw = jnp.take_along_axis(flat_w, order, 1)
+
+    # position within each expert's segment, per row
+    seg_start = jnp.sum(se[:, None, :] < jnp.arange(e)[None, :, None], -1)
+    pos_in_e = jnp.arange(s * k)[None] - jnp.take_along_axis(seg_start, se, 1)
+    cap = int(max(1, (s * k * cfg.capacity_factor) // e))
+    keep = pos_in_e < cap
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    slot = jnp.clip(pos_in_e, 0, cap - 1)
+    dst = jnp.where(keep, se * cap + slot, e * cap)
+    rows = jnp.arange(b)[:, None]
+    buf_tok = jnp.zeros((b, e * cap + 1), jnp.int32).at[rows, dst].set(st)[:, :-1]
+    buf_w = jnp.zeros((b, e * cap + 1), jnp.float32).at[rows, dst].set(sw)[:, :-1]
+
+    eax = "expert" if getattr(cfg, "moe_shard", "ep") == "ep" else "none"
+    xe = jnp.take_along_axis(x, buf_tok[:, :, None], axis=1)       # [B,EC,d]
+    xe = cst(xe.reshape(b, e, cap, d), ("batch", eax, "none", "none"))
+
+    xq = qcfg.q_act(xe, "mlp")
+    g = cst(jnp.einsum("becd,edf->becf", xq, qcfg.q_weight(wg, "mlp", 1)),
+            ("batch", eax, "none", "mlp"))
+    u = cst(jnp.einsum("becd,edf->becf", xq, qcfg.q_weight(wu, "mlp", 1)),
+            ("batch", eax, "none", "mlp"))
+    h = jax.nn.silu(g) * u
+    ye = cst(jnp.einsum("becf,efd->becd", qcfg.q_act(h, "mlp"),
+                        qcfg.q_weight(wd, "mlp", 1)),
+             ("batch", eax, "none", "none"))
+
+    yw = ye.reshape(b, e * cap, d).astype(jnp.float32) * buf_w[:, :, None]
+    out = _batched_scatter_add(b, s, d, buf_tok, yw)
+    aux = {"moe_dropped_frac": dropped,
+           "moe_router_entropy": -jnp.mean(jnp.sum(
+               gates * jnp.log(gates + 1e-9), -1))}
+    return cst(out.astype(x.dtype), ("batch", "seq", "none")), aux
+
+
+def _batched_scatter_add(b, s, d, idx, upd):
+    """out[b, idx[b, j]] += upd[b, j] — batched scatter-add."""
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], idx.shape)
+    return jnp.zeros((b, s, d), jnp.float32).at[rows, idx].add(upd)
+
+
+def _moe_dispatch_flat(qcfg, cfg, xf, router_w, wg, wu, wd):
+    """Sorted capacity dispatch over a flat [T, d] token slab."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+
+    gates = jax.nn.softmax(
+        qdense(qcfg, "router", xf, router_w).astype(jnp.float32), -1)  # [T,E]
+    topw, topi = jax.lax.top_k(gates, k)                               # [T,k]
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+
+    # flatten (token, slot) pairs and sort by expert id
+    flat_e = topi.reshape(-1)                                          # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = topw.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+
+    # position within expert segment
+    seg_start = jnp.searchsorted(se, jnp.arange(e))                    # [E]
+    pos_in_e = jnp.arange(t * k) - seg_start[se]
+    cap = int(max(1, (t * k * cfg.capacity_factor) // e))
+    keep = pos_in_e < cap
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    # gather tokens into [E, C, d]; dropped entries land in a garbage slot
+    slot = jnp.clip(pos_in_e, 0, cap - 1)
+    dst = jnp.where(keep, se * cap + slot, e * cap)
+    buf_tok = jnp.zeros((e * cap + 1,), jnp.int32).at[dst].set(st)[:-1]
+    buf_w = jnp.zeros((e * cap + 1,), jnp.float32).at[dst].set(sw)[:-1]
+    xe = cst(xf[buf_tok].reshape(e, cap, d), ("expert", "none", "none"))
+
+    # expert GEMMs (blocked along the contraction axis: dims 1 of wg/wu, 1 of wd)
+    xq = qcfg.q_act(xe, "mlp")
+    g = cst(jnp.einsum("ecd,edf->ecf", xq, qcfg.q_weight(wg, "mlp", 1)),
+            ("expert", "none", "mlp"))
+    u = cst(jnp.einsum("ecd,edf->ecf", xq, qcfg.q_weight(wu, "mlp", 1)),
+            ("expert", "none", "mlp"))
+    h = jax.nn.silu(g) * u
+    ye = cst(jnp.einsum("ecf,efd->ecd", qcfg.q_act(h, "mlp"),
+                        qcfg.q_weight(wd, "mlp", 1)),
+             ("expert", "none", "none"))                               # [E,C,d]
+
+    # weighted scatter-add back to tokens
+    yw = (ye.reshape(e * cap, d).astype(jnp.float32)
+          * buf_w[:, None])
+    out = jnp.zeros((t, d), jnp.float32).at[buf_tok].add(yw, mode="drop")
+    aux = {"moe_dropped_frac": dropped,
+           "moe_router_entropy": -jnp.mean(jnp.sum(
+               gates * jnp.log(gates + 1e-9), -1))}
+    return out.astype(xf.dtype), aux

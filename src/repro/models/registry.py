@@ -1,0 +1,23 @@
+"""Family registry: ModelConfig.family -> model module (functional protocol).
+
+The VLM family reuses the decoder (M-RoPE is a config flag); hybrids and
+attention-free archs get their own modules.
+"""
+from __future__ import annotations
+
+from . import decoder, rglru, rwkv6, whisper
+
+_FAMILIES = {
+    "decoder": decoder,
+    "rglru_hybrid": rglru,
+    "rwkv6": rwkv6,
+    "encdec": whisper,
+}
+
+
+def get_model(cfg):
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family: {cfg.family!r} "
+                         f"(have {sorted(_FAMILIES)})") from None

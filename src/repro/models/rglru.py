@@ -1,0 +1,341 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + periodic local
+attention (1 attention layer per ``attn_period``, window ``cfg.window``).
+
+RG-LRU (Griffin, arXiv:2402.19427):
+
+    r_t = σ(W_a x_t)                          (recurrence gate)
+    i_t = σ(W_x x_t)                          (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)         (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` (log-depth — the TPU-native
+choice; the paper's CUDA kernel is a linear scan tuned for SM occupancy,
+which has no MXU analogue).  Decode carries h as O(1) state.  The recurrent
+block wraps the LRU with a width-4 causal depthwise conv and a gated output,
+per the Griffin block diagram.
+
+Layer layout: layers with ``(i+1) % attn_period == 0`` are local-attention
+transformer layers; the rest are recurrent.  Scanned as super-blocks of
+``attn_period`` layers (``p-1`` recurrent + 1 attention) + an unscanned
+remainder, so caches stay homogeneous per stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantConfig
+from repro.distributed.ctx import cst
+
+from . import attention as attn
+from . import common, layers
+from .decoder import _norm_specs, run_norm
+
+C_LRU = 8.0
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+
+def _rec_layer_specs(cfg):
+    P = common.ParamSpec
+    d, dr, ff = cfg.d_model, cfg.d_rnn, cfg.d_ff
+    return {
+        "ln1": _norm_specs(cfg, d),
+        "wx": P((d, dr), ("embed", "rnn"), kind="recurrent"),
+        "wgate": P((d, dr), ("embed", "rnn"), kind="recurrent"),
+        "conv_w": P((cfg.conv_width, dr), ("none", "rnn"), scale=0.5),
+        "conv_b": P((dr,), ("rnn",), init="zeros"),
+        "w_a": P((dr, dr), ("rnn", "rnn"), kind="recurrent"),
+        "w_i": P((dr, dr), ("rnn", "rnn"), kind="recurrent"),
+        "lam": P((dr,), ("rnn",), init="lru_lambda"),
+        "wo": P((dr, d), ("rnn", "embed"), kind="recurrent", scale=0.5),
+        "ln2": _norm_specs(cfg, d),
+        "wg": P((d, ff), ("embed", "mlp"), kind="mlp"),
+        "wu": P((d, ff), ("embed", "mlp"), kind="mlp"),
+        "wd": P((ff, d), ("mlp", "embed"), kind="mlp", scale=0.5),
+    }
+
+
+def _attn_layer_specs(cfg):
+    from .decoder import _layer_specs
+    return _layer_specs(cfg)
+
+
+def _counts(cfg):
+    p = cfg.attn_period
+    n_sb = cfg.n_layers // p            # super-blocks of (p-1) rec + 1 attn
+    n_rem = cfg.n_layers - n_sb * p     # trailing recurrent layers
+    return n_sb, p - 1, n_rem
+
+
+def param_specs(cfg):
+    P = common.ParamSpec
+    d, v = cfg.d_model, cfg.vocab_size
+    n_sb, n_rec_per, n_rem = _counts(cfg)
+    rec = _rec_layer_specs(cfg)
+    specs = {
+        "embed": P((v, d), ("vocab", "embed"), init="embed", kind="embed"),
+        "blocks": {
+            "rec": common.stack_specs(common.stack_specs(rec, n_rec_per, "inner"),
+                                      n_sb),
+            "attn": common.stack_specs(_attn_layer_specs(cfg), n_sb),
+        },
+        "final_norm": _norm_specs(cfg, d),
+    }
+    if n_rem:
+        specs["rem"] = common.stack_specs(rec, n_rem)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P((d, v), ("embed", "vocab"), kind="lm_head")
+    return specs
+
+
+def init_params(cfg, rng):
+    return common.init_params(param_specs(cfg), rng)
+
+
+def unembed(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, width W.  x [B,S,D]; state [B,W-1,D] or None.
+
+    Returns (y, new_state): new_state is the last W-1 inputs (for decode).
+    """
+    wdt, d = w.shape
+    if state is None:
+        pad = jnp.zeros((x.shape[0], wdt - 1, d), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, S+W-1, D]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(wdt)) + b
+    new_state = xp[:, -(wdt - 1):]
+    return y.astype(x.dtype), new_state
+
+
+def _lru_gates(qcfg, p, z):
+    zf = z
+    r = jax.nn.sigmoid(layers.qdense(qcfg, "recurrent", zf, p["w_a"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.qdense(qcfg, "recurrent", zf, p["w_i"])
+                       .astype(jnp.float32))
+    log_a = -C_LRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    b = beta * (i * zf.astype(jnp.float32))
+    return a, b
+
+
+def _lru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over the seq axis (1)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh
+
+
+def _rec_block(qcfg, cfg, p, x, mode, state_sl):
+    """One recurrent layer.  state_sl: {"conv": [B,W-1,dr], "h": [B,dr]}."""
+    h_in = run_norm(cfg, p["ln1"], x)
+    z = cst(layers.qdense(qcfg, "recurrent", h_in, p["wx"]),
+            ("batch", "seq", "rnn"))
+    gate = cst(layers.qdense(qcfg, "recurrent", h_in, p["wgate"]),
+               ("batch", "seq", "rnn"))
+    z, conv_state = _causal_conv(z, p["conv_w"], p["conv_b"],
+                                 state_sl["conv"] if mode == "decode" else None)
+    a, b = _lru_gates(qcfg, p, z)
+    if mode == "decode":
+        h_prev = state_sl["h"]                   # [B, 1, dr] kept with S dim
+        hh = a * h_prev.astype(jnp.float32) + b
+        new_state = {"conv": conv_state, "h": hh.astype(jnp.float32)}
+    else:
+        hh = _lru_scan(a, b)
+        new_state = {"conv": conv_state,
+                     "h": hh[:, -1:].astype(jnp.float32)}
+    y = hh.astype(x.dtype) * jax.nn.gelu(gate)
+    x = x + cst(layers.qdense(qcfg, "recurrent", y, p["wo"]),
+                ("batch", "seq", "none"))
+    # mlp
+    h2 = run_norm(cfg, p["ln2"], x)
+    x = x + layers.swiglu_mlp(qcfg, h2, p["wg"], p["wu"], p["wd"])
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(qcfg, cfg, p, x, pos, mode, cache_sl, pos_idx):
+    from .decoder import _block
+    return _block(qcfg, cfg, p, x, pos, mode, cache_sl, pos_idx)
+
+
+def _sb_body(qcfg, cfg, mode, pos, pos_idx):
+    """Super-block: (attn_period - 1) recurrent layers + 1 local-attn layer."""
+    def fn(carry, inp):
+        p, xs = inp
+        x = carry
+        rec_states, kv_sl = (xs or {}).get("rec"), (xs or {}).get("kv")
+        new_rec, new_kv = [], None
+        n_rec = jax.tree.leaves(p["rec"])[0].shape[0]
+        for j in range(n_rec):
+            pj = jax.tree.map(lambda a: a[j], p["rec"])
+            ssl = jax.tree.map(lambda a: a[j], rec_states) if rec_states is not None else None
+            x, st = _rec_block(qcfg, cfg, pj, x, mode, ssl)
+            new_rec.append(st)
+        x, new_kv, _ = _attn_block(qcfg, cfg, p["attn"], x, pos, mode,
+                                   kv_sl, pos_idx)
+        ys = {}
+        if mode != "train":
+            ys["rec"] = jax.tree.map(lambda *a: jnp.stack(a), *new_rec)
+            if new_kv is not None:
+                ys["kv"] = new_kv
+        return x, (ys or None)
+    return fn
+
+
+def apply(cfg, params, batch, qcfg: QuantConfig, output: str = "logits"):
+    x = params["embed"][batch["tokens"]]
+    b, s = batch["tokens"].shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(qc):
+        return _sb_body(qc, cfg, "train", pos, None)
+
+    x, _ = common.scan_layers(body, x, params["blocks"], None, qcfg,
+                              0, 0, cfg.remat)
+    if "rem" in params:
+        n_rem = jax.tree.leaves(params["rem"])[0].shape[0]
+        for j in range(n_rem):
+            pj = jax.tree.map(lambda a: a[j], params["rem"])
+            x, _ = _rec_block(qcfg, cfg, pj, x, "train", None)
+    x = run_norm(cfg, params["final_norm"], x)
+    if output == "hidden":
+        return x
+    return layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+
+
+def cache_specs(cfg, batch_size, s_max):
+    P = common.ParamSpec
+    n_sb, n_rec_per, n_rem = _counts(cfg)
+    dr, w = cfg.d_rnn, cfg.conv_width
+    s_alloc = min(s_max, cfg.window) if cfg.window else s_max
+    f32, bf16 = jnp.float32, jnp.bfloat16
+
+    def rec_specs(lead, lead_axes):
+        return {"conv": P((*lead, batch_size, w - 1, dr),
+                          (*lead_axes, "batch", "none", "rnn"),
+                          dtype=bf16, init="zeros"),
+                "h": P((*lead, batch_size, 1, dr),
+                       (*lead_axes, "batch", "none", "rnn"),
+                       dtype=f32, init="zeros")}
+
+    kv_shape = (n_sb, batch_size, s_alloc, cfg.n_kv_heads, cfg.head_dim)
+    kv_axes = ("layers", "batch", "seq", "kv", "headdim")
+    c = {
+        "blocks": {
+            "rec": rec_specs((n_sb, n_rec_per), ("layers", "inner")),
+            "kv": {"k": P(kv_shape, kv_axes, dtype=bf16, init="zeros"),
+                   "v": P(kv_shape, kv_axes, dtype=bf16, init="zeros")},
+        },
+        "pos": P((), (), dtype=jnp.int32, init="zeros"),
+    }
+    if n_rem:
+        c["rem"] = rec_specs((n_rem,), ("layers",))
+    return c
+
+
+def init_cache(cfg, batch_size, s_max):
+    return common.zeros_from_specs(cache_specs(cfg, batch_size, s_max))
+
+
+def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
+    x = params["embed"][batch["tokens"]]
+    pos_idx = cache["pos"]
+    pos = jnp.full((x.shape[0], 1), pos_idx, jnp.int32)
+
+    def body(qc):
+        return _sb_body(qc, cfg, "decode", pos, pos_idx)
+
+    xs = cache["blocks"]
+    x, new_blocks = common.scan_layers(body, x, params["blocks"], xs, qcfg,
+                                       0, 0, "none")
+    new_cache = {"blocks": new_blocks, "pos": pos_idx + 1}
+    if "rem" in params:
+        n_rem = jax.tree.leaves(params["rem"])[0].shape[0]
+        rem_states = []
+        for j in range(n_rem):
+            pj = jax.tree.map(lambda a: a[j], params["rem"])
+            ssl = jax.tree.map(lambda a: a[j], cache["rem"])
+            x, st = _rec_block(qcfg, cfg, pj, x, "decode", ssl)
+            rem_states.append(st)
+        new_cache["rem"] = jax.tree.map(lambda *a: jnp.stack(a), *rem_states)
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    return logits, new_cache
+
+
+def prefill(cfg, params, batch, qcfg: QuantConfig, s_max: int | None = None):
+    """Prefill: run the full forward while collecting recurrent states and
+    local-attention KV; returns (last logits, cache ready for decode)."""
+    x = params["embed"][batch["tokens"]]
+    b, s = batch["tokens"].shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(qc):
+        def fn(carry, inp):
+            p, _ = inp
+            xcur = carry
+            new_rec, states = [], []
+            n_rec = jax.tree.leaves(p["rec"])[0].shape[0]
+            for j in range(n_rec):
+                pj = jax.tree.map(lambda a: a[j], p["rec"])
+                xcur, st = _rec_block(qc, cfg, pj, xcur, "prefill", None)
+                states.append(st)
+            xcur, kv, _ = _attn_block(qc, cfg, p["attn"], xcur, pos,
+                                      "prefill", None, None)
+            ys = {"rec": jax.tree.map(lambda *a: jnp.stack(a), *states),
+                  "kv": kv}
+            return xcur, ys
+        return fn
+
+    x, ys = common.scan_layers(body, x, params["blocks"], None, qcfg, 0, 0,
+                               cfg.remat)
+    cache = {"blocks": ys, "pos": jnp.asarray(s, jnp.int32)}
+    if "rem" in params:
+        n_rem = jax.tree.leaves(params["rem"])[0].shape[0]
+        states = []
+        for j in range(n_rem):
+            pj = jax.tree.map(lambda a: a[j], params["rem"])
+            x, st = _rec_block(qcfg, cfg, pj, x, "prefill", None)
+            states.append(st)
+        cache["rem"] = jax.tree.map(lambda *a: jnp.stack(a), *states)
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x[:, -1:], unembed(cfg, params))
+
+    # ring-align the local-attn kv to window size
+    w = cfg.window
+    kv = cache["blocks"]["kv"]
+    if w and s > w:
+        kv = jax.tree.map(lambda a: jnp.roll(a[:, :, s - w:], s % w, axis=2), kv)
+    elif w and s < w:
+        kv = jax.tree.map(
+            lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, w - s), (0, 0), (0, 0)]),
+            kv)
+    cache["blocks"]["kv"] = kv
+    return logits, cache

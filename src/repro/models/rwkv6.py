@@ -1,0 +1,325 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent per-channel decay, plus channel-mix FFN.
+
+Per head (head dim N = 64), per token:
+
+    out_t = r_t^T · (S_{t-1} + diag(u ⊙ k_t) v_t^T)        (wkv readout)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T                  (state update)
+
+with w_t = exp(-exp(w0 + lora_w(x_t))) data-dependent per channel, and r/k/v
+produced from token-shifted ddlerp mixes (low-rank data-dependent token
+shift, the Finch signature).
+
+TPU adaptation (DESIGN.md §4): the CUDA WKV kernel is a per-warp linear
+scan.  Here training/prefill run **chunk-parallel**: the sequence is split
+into chunks of ``CHUNK`` tokens; a ``lax.scan`` over time *within* a chunk is
+vmapped across all chunks (so the sequential depth is CHUNK, not S), then a
+second short scan over chunks propagates the cross-chunk state with
+per-channel decay products — no divisions, numerically safe for w → 0.
+Decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantConfig
+from repro.distributed.ctx import cst
+
+from . import common, layers
+from .decoder import _norm_specs, run_norm
+
+CHUNK = 64
+LORA_R = 32          # ddlerp low-rank
+DECAY_R = 64         # decay lora rank
+
+
+def _n_heads(cfg):
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def _layer_specs(cfg):
+    P = common.ParamSpec
+    d = cfg.d_model
+    return {
+        "ln1": _norm_specs(cfg, d),
+        # token-shift ddlerp: shared W1, per-stream mix + W2 (r,k,v,w,g)
+        "mu": P((5, d), ("none", "embed"), init="zeros"),
+        "ts_w1": P((d, 5 * LORA_R), ("embed", "none"), kind="recurrent"),
+        "ts_w2": P((5, LORA_R, d), ("none", "none", "embed"), scale=0.1),
+        # projections
+        "wr": P((d, d), ("embed", "rnn"), kind="recurrent"),
+        "wk": P((d, d), ("embed", "rnn"), kind="recurrent"),
+        "wv": P((d, d), ("embed", "rnn"), kind="recurrent"),
+        "wg": P((d, d), ("embed", "rnn"), kind="recurrent"),
+        "wo": P((d, d), ("rnn", "embed"), kind="recurrent", scale=0.5),
+        # decay: w0 + lora
+        "w0": P((d,), ("rnn",), init="zeros"),
+        "dec_w1": P((d, DECAY_R), ("embed", "none"), kind="recurrent"),
+        "dec_w2": P((DECAY_R, d), ("none", "rnn"), scale=0.1),
+        "u": P((d,), ("rnn",), init="zeros"),           # bonus
+        "ln_x": P((d,), ("rnn",), init="ones"),         # per-head group norm
+        # channel mix (k and r streams each get a token-shift mix)
+        "ln2": _norm_specs(cfg, d),
+        "cm_mu": P((2, d), ("none", "embed"), init="zeros"),
+        "cm_wr": P((d, d), ("embed", "rnn"), kind="mlp"),
+        "cm_wk": P((d, cfg.d_ff), ("embed", "mlp"), kind="mlp"),
+        "cm_wv": P((cfg.d_ff, d), ("mlp", "embed"), kind="mlp", scale=0.5),
+    }
+
+
+def param_specs(cfg):
+    P = common.ParamSpec
+    d, v = cfg.d_model, cfg.vocab_size
+    specs = {
+        "embed": P((v, d), ("vocab", "embed"), init="embed", kind="embed"),
+        "layers": common.stack_specs(_layer_specs(cfg), cfg.n_layers),
+        "final_norm": _norm_specs(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P((d, v), ("embed", "vocab"), kind="lm_head")
+    return specs
+
+
+def init_params(cfg, rng):
+    return common.init_params(param_specs(cfg), rng)
+
+
+def unembed(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# time mix
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x, x_prev_last):
+    """x_{t-1} stream: [B,S,d]; x_prev_last [B,1,d] is the carry (decode)."""
+    if x_prev_last is None:
+        x_prev_last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev_last.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _ddlerp(qcfg, p, x, xp):
+    """Finch data-dependent lerp producing the 5 mixed streams r,k,v,w,g."""
+    dx = xp - x
+    # low-rank data-dependent mixing coefficients
+    a = jnp.tanh(layers.qdense(qcfg, "recurrent", x + 0.5 * dx, p["ts_w1"]))
+    b, s, _ = x.shape
+    a = a.reshape(b, s, 5, LORA_R)
+    coef = jnp.einsum("bsir,ird->bsid", a, p["ts_w2"])          # [B,S,5,d]
+    mix = p["mu"][None, None] + coef                             # [B,S,5,d]
+    return x[:, :, None, :] + dx[:, :, None, :] * mix            # [B,S,5,d]
+
+
+def _wkv_chunked(r, k, v, w, u, s0):
+    """Chunk-parallel WKV.  r/k/v/w: [B,S,H,N] (w = per-channel decay in
+    (0,1)); u: [H,N]; s0: [B,H,N,N] initial state.  Returns (out, s_final).
+    """
+    b, s, h, n = r.shape
+    c = min(CHUNK, s)
+    assert s % c == 0
+    nc = s // c
+    rc, kc, vc, wc = (t.reshape(b, nc, c, h, n) for t in (r, k, v, w))
+
+    # ---- pass 1: within-chunk scan from zero state (vmapped over chunks) ----
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                     # [B,nc,H,N]
+        kv = k_t[..., :, None] * v_t[..., None, :]   # [B,nc,H,N,N]
+        out = jnp.einsum("bchi,bchij->bchj", r_t,
+                         S + u[None, None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    zero = jnp.zeros((b, nc, h, n, n), jnp.float32)
+    s_local, out_local = jax.lax.scan(
+        step, zero, (rc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+                     vc.transpose(2, 0, 1, 3, 4), wc.transpose(2, 0, 1, 3, 4)))
+    out_local = out_local.transpose(1, 2, 0, 3, 4)   # [B,nc,c,H,N]
+
+    # cumulative decay within chunk: A[t] = prod_{τ<=t} w_τ  (for the state
+    # seen *before* token t we need prod_{τ<t}: shift by one)
+    logw = jnp.log(jnp.clip(wc, 1e-30, 1.0))
+    cum = jnp.cumsum(logw, axis=2)
+    a_before = jnp.exp(cum - logw)                   # prod_{τ<t} w  [B,nc,c,H,N]
+    a_chunk = jnp.exp(cum[:, :, -1])                 # full-chunk decay [B,nc,H,N]
+
+    # ---- pass 2: propagate initial states across chunks ----
+    def chunk_step(S, inp):
+        a_c, ds = inp                                # [B,H,N], [B,H,N,N]
+        S_next = a_c[..., :, None] * S + ds
+        return S_next, S                             # emit state *entering* chunk
+
+    s_fin, s_in = jax.lax.scan(
+        chunk_step, s0.astype(jnp.float32),
+        (a_chunk.transpose(1, 0, 2, 3), s_local.transpose(1, 0, 2, 3, 4)))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)             # [B,nc,H,N,N]
+
+    # ---- combine: out_t += (r_t ⊙ prod_{τ<t} w) · S_in ----
+    r_dec = rc * a_before
+    out_inter = jnp.einsum("bnchi,bnhij->bnchj", r_dec, s_in)
+    out = (out_local + out_inter).reshape(b, s, h, n)
+    return out, s_fin
+
+
+def _time_mix(qcfg, cfg, p, x, state, mode):
+    """state: {"x_prev": [B,1,d], "S": [B,H,N,N]} or None (train)."""
+    b, s, d = x.shape
+    h, n = _n_heads(cfg), cfg.rwkv_head_dim
+    xp = _token_shift(x, state["x_prev_tm"] if mode == "decode" else None)
+    mixed = _ddlerp(qcfg, p, x, xp)                          # [B,S,5,d]
+    xr, xk, xv, xw, xg = (mixed[:, :, i] for i in range(5))
+
+    rax = ("batch", "seq", "rnn")
+    r = cst(layers.qdense(qcfg, "recurrent", xr, p["wr"]), rax).astype(jnp.float32)
+    k = cst(layers.qdense(qcfg, "recurrent", xk, p["wk"]), rax).astype(jnp.float32)
+    v = cst(layers.qdense(qcfg, "recurrent", xv, p["wv"]), rax).astype(jnp.float32)
+    g = cst(layers.qdense(qcfg, "recurrent", xg, p["wg"]), rax)
+    dec = (p["w0"].astype(jnp.float32)
+           + jnp.tanh(layers.qdense(qcfg, "recurrent", xw, p["dec_w1"])
+                      .astype(jnp.float32)) @ p["dec_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(jnp.clip(dec, -38.0, 20.0)))        # (0,1)
+
+    rs = r.reshape(b, s, h, n)
+    ks = k.reshape(b, s, h, n)
+    vs = v.reshape(b, s, h, n)
+    ws = w.reshape(b, s, h, n)
+    u = p["u"].astype(jnp.float32).reshape(h, n)
+
+    s0 = state["S"] if state is not None else jnp.zeros((b, h, n, n),
+                                                        jnp.float32)
+    if mode == "decode":
+        kv = ks[:, 0, :, :, None] * vs[:, 0, :, None, :]
+        out = jnp.einsum("bhi,bhij->bhj", rs[:, 0],
+                         s0 + u[None, :, :, None] * kv)[:, None]
+        s_fin = ws[:, 0, :, :, None] * s0 + kv
+        out = out.reshape(b, 1, h, n)
+    else:
+        out, s_fin = _wkv_chunked(rs, ks, vs, ws, u, s0)
+
+    # per-head group norm + gate
+    of = out.astype(jnp.float32)
+    mu = jnp.mean(of, -1, keepdims=True)
+    var = jnp.mean(jnp.square(of - mu), -1, keepdims=True)
+    of = (of - mu) * jax.lax.rsqrt(var + 1e-5)
+    of = of.reshape(b, s, d) * p["ln_x"].astype(jnp.float32)
+    y = of.astype(x.dtype) * jax.nn.silu(g)
+    y = cst(layers.qdense(qcfg, "recurrent", y, p["wo"]),
+            ("batch", "seq", "none"))
+    new_state = {"x_prev_tm": x[:, -1:], "S": s_fin}
+    return y, new_state
+
+
+def _channel_mix(qcfg, p, x, state, mode):
+    xp = _token_shift(x, state["x_prev_cm"] if mode == "decode" else None)
+    dx = xp - x
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x + dx * mu[0]
+    xr = x + dx * mu[1]
+    r = jax.nn.sigmoid(layers.qdense(qcfg, "mlp", xr, p["cm_wr"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    h = jnp.square(jax.nn.relu(layers.qdense(qcfg, "mlp", xk, p["cm_wk"])))
+    y = r * layers.qdense(qcfg, "mlp", h, p["cm_wv"])
+    return y, {"x_prev_cm": x[:, -1:]}
+
+
+def _block(qcfg, cfg, p, x, state, mode):
+    h1 = run_norm(cfg, p["ln1"], x)
+    tm, st1 = _time_mix(qcfg, cfg, p, h1, state, mode)
+    x = x + tm
+    h2 = run_norm(cfg, p["ln2"], x)
+    cm, st2 = _channel_mix(qcfg, p, h2, state, mode)
+    x = x + cm
+    return x, {**st1, **st2}
+
+
+# ---------------------------------------------------------------------------
+# model protocol
+# ---------------------------------------------------------------------------
+
+
+def apply(cfg, params, batch, qcfg: QuantConfig, output: str = "logits"):
+    x = params["embed"][batch["tokens"]]
+
+    def body(qc):
+        def fn(carry, inp):
+            p, _ = inp
+            y, _ = _block(qc, cfg, p, carry, None, "train")
+            return y, None
+        return fn
+
+    x, _ = common.scan_layers(body, x, params["layers"], None, qcfg,
+                              qcfg.skip_first_layers, qcfg.skip_last_layers,
+                              cfg.remat)
+    x = run_norm(cfg, params["final_norm"], x)
+    if output == "hidden":
+        return x
+    return layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+
+
+def cache_specs(cfg, batch_size, s_max):
+    P = common.ParamSpec
+    d, h, n = cfg.d_model, _n_heads(cfg), cfg.rwkv_head_dim
+    L = cfg.n_layers
+    return {
+        "x_prev_tm": P((L, batch_size, 1, d), ("layers", "batch", "none", "embed"),
+                       dtype=jnp.bfloat16, init="zeros"),
+        "x_prev_cm": P((L, batch_size, 1, d), ("layers", "batch", "none", "embed"),
+                       dtype=jnp.bfloat16, init="zeros"),
+        "S": P((L, batch_size, h, n, n), ("layers", "batch", "heads", "none", "none"),
+               dtype=jnp.float32, init="zeros"),
+        "pos": P((), (), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def init_cache(cfg, batch_size, s_max):
+    return common.zeros_from_specs(cache_specs(cfg, batch_size, s_max))
+
+
+def _scan_with_state(cfg, params, x, qcfg, cache, mode):
+    def body(qc):
+        def fn(carry, inp):
+            p, st = inp
+            y, new_st = _block(qc, cfg, p, carry, st, mode)
+            return y, new_st
+        return fn
+
+    xs = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_states = common.scan_layers(body, x, params["layers"], xs, qcfg,
+                                       qcfg.skip_first_layers,
+                                       qcfg.skip_last_layers, "none")
+    return x, new_states
+
+
+def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
+    x = params["embed"][batch["tokens"]]
+    x, new_states = _scan_with_state(cfg, params, x, qcfg, cache, "decode")
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    new_states["pos"] = cache["pos"] + 1
+    return logits, new_states
+
+
+def prefill(cfg, params, batch, qcfg: QuantConfig, s_max: int | None = None):
+    x = params["embed"][batch["tokens"]]
+    b, s = batch["tokens"].shape
+    cache = init_cache(cfg, b, s_max or s)
+
+    def body(qc):
+        def fn(carry, inp):
+            p, st = inp
+            y, new_st = _block(qc, cfg, p, carry, st, "prefill")
+            return y, new_st
+        return fn
+
+    # prefill consumes zero states but must still produce final states:
+    # run in "prefill" mode = chunked WKV with s0 from state
+    xs = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_states = common.scan_layers(body, x, params["layers"], xs, qcfg,
+                                       qcfg.skip_first_layers,
+                                       qcfg.skip_last_layers, cfg.remat)
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x[:, -1:], unembed(cfg, params))
+    new_states["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, new_states

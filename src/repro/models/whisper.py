@@ -1,0 +1,238 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356), transformer backbone
+only — the conv/mel frontend is a STUB per the assignment: ``input_specs``
+feeds precomputed frame embeddings [B, enc_seq, d] (as if produced by the
+two-conv downsampler).
+
+Encoder: bidirectional self-attn + GELU MLP, sinusoidal positions.
+Decoder: causal self-attn + cross-attn to encoder output + GELU MLP.
+Decode shapes use the decoder self-attn KV cache (+ static cross KV).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import QuantConfig
+from repro.distributed.ctx import cst
+
+from . import attention as attn
+from . import common, layers
+from .decoder import _norm_specs, run_norm
+
+
+def _attn_specs(cfg, prefix=""):
+    P = common.ParamSpec
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        prefix + "wqkv": P((d, cfg.qkv_dim), ("embed", "qkv"), kind="attn"),
+        prefix + "bqkv": P((cfg.qkv_dim,), ("qkv",), init="zeros"),
+        prefix + "wo": P((cfg.n_heads * hd, d), ("qkv", "embed"), kind="attn",
+                         scale=0.5),
+    }
+
+
+def _mlp_specs(cfg):
+    P = common.ParamSpec
+    d, ff = cfg.d_model, cfg.d_ff
+    return {"wi": P((d, ff), ("embed", "mlp"), kind="mlp"),
+            "bi": P((ff,), ("mlp",), init="zeros"),
+            "wd": P((ff, d), ("mlp", "embed"), kind="mlp", scale=0.5),
+            "bd": P((d,), ("embed",), init="zeros")}
+
+
+def _enc_layer(cfg):
+    return {"ln1": _norm_specs(cfg, cfg.d_model), **_attn_specs(cfg),
+            "ln2": _norm_specs(cfg, cfg.d_model), **_mlp_specs(cfg)}
+
+
+def _dec_layer(cfg):
+    return {"ln1": _norm_specs(cfg, cfg.d_model), **_attn_specs(cfg),
+            "ln_x": _norm_specs(cfg, cfg.d_model),
+            **_attn_specs(cfg, "x_"),
+            "ln2": _norm_specs(cfg, cfg.d_model), **_mlp_specs(cfg)}
+
+
+def param_specs(cfg):
+    P = common.ParamSpec
+    d, v = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": P((v, d), ("vocab", "embed"), init="embed", kind="embed"),
+        "enc_layers": common.stack_specs(_enc_layer(cfg), cfg.n_enc_layers),
+        "enc_norm": _norm_specs(cfg, d),
+        "dec_layers": common.stack_specs(_dec_layer(cfg), cfg.n_layers),
+        "final_norm": _norm_specs(cfg, d),
+    }
+
+
+def init_params(cfg, rng):
+    return common.init_params(param_specs(cfg), rng)
+
+
+def unembed(cfg, params):
+    return params["embed"].T           # whisper ties embeddings
+
+
+def _self_attention(qcfg, cfg, p, h, pos, causal, mode="train",
+                    cache_sl=None, pos_idx=None, prefix=""):
+    b, s, _ = h.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    qkv = layers.qdense(qcfg, "attn", h, p[prefix + "wqkv"], p[prefix + "bqkv"])
+    q, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
+    q = cst(attn.split_heads(q, nh, hd), ("batch", "seq", "heads", "none"))
+    k = cst(attn.split_heads(k, nkv, hd), ("batch", "seq", "kv", "none"))
+    v = cst(attn.split_heads(v, nkv, hd), ("batch", "seq", "kv", "none"))
+    new_cache = None
+    if mode == "decode":
+        new_cache = attn.cache_update_layer(cache_sl, k, v, pos_idx)
+        out = attn.decode_attend(q, new_cache, pos_idx + 1)
+    else:
+        out = attn.blockwise_attention(q, k, v, causal=causal)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    out = layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd),
+                        p[prefix + "wo"])
+    return out, new_cache
+
+
+def _cross_attention(qcfg, cfg, p, h, enc_kv):
+    """enc_kv: precomputed {"k","v"} [B, S_enc, H, hd] from encoder output."""
+    b, s, _ = h.shape
+    hd, nh = cfg.head_dim, cfg.n_heads
+    qkv = layers.qdense(qcfg, "attn", h, p["x_wqkv"], p["x_bqkv"])
+    q = attn.split_heads(qkv[..., : nh * hd], nh, hd)
+    out = attn.blockwise_attention(q, enc_kv["k"], enc_kv["v"], causal=False)
+    return layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["x_wo"])
+
+
+def _cross_kv(qcfg, cfg, p, enc_out):
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    qkv = layers.qdense(qcfg, "attn", enc_out, p["x_wqkv"], p["x_bqkv"])
+    _, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
+    return {"k": attn.split_heads(k, nkv, hd), "v": attn.split_heads(v, nkv, hd)}
+
+
+def encode(cfg, params, frames, qcfg: QuantConfig):
+    """frames: [B, enc_seq, d] stub embeddings -> encoder hidden states."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + layers.sinusoidal_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(qc):
+        def fn(carry, inp):
+            p, _ = inp
+            h = run_norm(cfg, p["ln1"], carry)
+            a, _ = _self_attention(qc, cfg, p, h, None, causal=False)
+            x2 = carry + a
+            h = run_norm(cfg, p["ln2"], x2)
+            x2 = x2 + layers.gelu_mlp(qc, h, p["wi"], p["wd"], p["bi"], p["bd"])
+            return x2, None
+        return fn
+
+    x, _ = common.scan_layers(body, x, params["enc_layers"], None, qcfg,
+                              0, 0, cfg.remat)
+    return run_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_block(qcfg, cfg, p, x, enc_out, pos, mode, cache_sl, pos_idx):
+    h = run_norm(cfg, p["ln1"], x)
+    a, new_cache = _self_attention(qcfg, cfg, p, h, pos, True, mode,
+                                   cache_sl, pos_idx)
+    x = x + a
+    h = run_norm(cfg, p["ln_x"], x)
+    enc_kv = _cross_kv(qcfg, cfg, p, enc_out)
+    x = x + _cross_attention(qcfg, cfg, p, h, enc_kv)
+    h = run_norm(cfg, p["ln2"], x)
+    x = x + layers.gelu_mlp(qcfg, h, p["wi"], p["wd"], p["bi"], p["bd"])
+    return x, new_cache
+
+
+def apply(cfg, params, batch, qcfg: QuantConfig, output: str = "logits"):
+    """batch: tokens [B,S] (decoder), enc_frames [B,enc_seq,d] (stub)."""
+    enc_out = encode(cfg, params, batch["enc_frames"], qcfg)
+    x = params["embed"][batch["tokens"]]
+    s = x.shape[1]
+    x = x + layers.sinusoidal_pos(s, cfg.d_model).astype(x.dtype)
+
+    def body(qc):
+        def fn(carry, inp):
+            p, _ = inp
+            y, _ = _dec_block(qc, cfg, p, carry, enc_out, None, "train",
+                              None, None)
+            return y, None
+        return fn
+
+    x, _ = common.scan_layers(body, x, params["dec_layers"], None, qcfg,
+                              0, 0, cfg.remat)
+    x = run_norm(cfg, params["final_norm"], x)
+    if output == "hidden":
+        return x
+    return layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+
+
+def cache_specs(cfg, batch_size, s_max):
+    P = common.ParamSpec
+    L, hd = cfg.n_layers, cfg.head_dim
+    kv_shape = (L, batch_size, s_max, cfg.n_kv_heads, hd)
+    kv_axes = ("layers", "batch", "seq", "kv", "headdim")
+    enc_shape = (batch_size, cfg.enc_seq, cfg.d_model)
+    return {
+        "k": P(kv_shape, kv_axes, dtype=jnp.bfloat16, init="zeros"),
+        "v": P(kv_shape, kv_axes, dtype=jnp.bfloat16, init="zeros"),
+        "enc_out": P(enc_shape, ("batch", "seq", "embed"),
+                     dtype=jnp.bfloat16, init="zeros"),
+        "pos": P((), (), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def init_cache(cfg, batch_size, s_max):
+    return common.zeros_from_specs(cache_specs(cfg, batch_size, s_max))
+
+
+def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
+    x = params["embed"][batch["tokens"]]
+    pos_idx = cache["pos"]
+    s_max = cache["k"].shape[2]
+    pe = layers.sinusoidal_pos(s_max, cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, pos_idx, 1, 0).astype(x.dtype)
+    enc_out = cache["enc_out"]
+
+    def body(qc):
+        def fn(carry, inp):
+            p, csl = inp
+            y, new_c = _dec_block(qc, cfg, p, carry, enc_out, None, "decode",
+                                  csl, pos_idx)
+            return y, new_c
+        return fn
+
+    xs = {k: cache[k] for k in ("k", "v")}
+    x, new_kv = common.scan_layers(body, x, params["dec_layers"], xs, qcfg,
+                                   0, 0, "none")
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    new_cache = dict(new_kv, enc_out=enc_out, pos=pos_idx + 1)
+    return logits, new_cache
+
+
+def prefill(cfg, params, batch, qcfg: QuantConfig, s_max: int | None = None):
+    enc_out = encode(cfg, params, batch["enc_frames"], qcfg)
+    x = params["embed"][batch["tokens"]]
+    b, s = batch["tokens"].shape
+    x = x + layers.sinusoidal_pos(s, cfg.d_model).astype(x.dtype)
+
+    def body(qc):
+        def fn(carry, inp):
+            p, _ = inp
+            y, kv = _dec_block(qc, cfg, p, carry, enc_out, None, "prefill",
+                               None, None)
+            return y, kv
+        return fn
+
+    x, kv = common.scan_layers(body, x, params["dec_layers"], None, qcfg,
+                               0, 0, cfg.remat)
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x[:, -1:], unembed(cfg, params))
+    if s_max and s_max > s:
+        kv = jax.tree.map(
+            lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, s_max - s), (0, 0),
+                                  (0, 0)]), kv)
+    cache = dict(kv, enc_out=enc_out, pos=jnp.asarray(s, jnp.int32))
+    return logits, cache

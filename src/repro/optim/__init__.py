@@ -1,0 +1,2 @@
+from .adamw import AdamW, AdamWState, constant, warmup_cosine
+from .compression import CompressionState, Int8Compressor

@@ -1,0 +1,89 @@
+"""AdamW in pure JAX (no optax in this container).
+
+Interface mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params, step) -> (updates, state)`` where
+``updates`` are *added* to params.
+
+Optimizer state inherits the params' sharding (FSDP-sharded params =>
+ZeRO-1 sharded moments for free).  ``state_dtype="bf16"`` halves moment
+memory (needed to fit arctic-480b QAD on a single pod — see EXPERIMENTS.md
+§Perf); master copies stay implicit (params are bf16, the update is fp32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 1e-6        # paper: 1e-6 .. 1e-5 (Table 6)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"       # float32 | bfloat16
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.state_dtype)
+        z = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(m=jax.tree.map(z, params), v=jax.tree.map(z, params))
+
+    def update(self, grads, state: AdamWState, params, step):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm:
+            gn = _global_norm(g32)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-12))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+
+        b1, b2 = self.b1, self.b2
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        def upd(g, m, v, p):
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m32 = b1 * m32 + (1 - b1) * g
+            v32 = b2 * v32 + (1 - b2) * g * g
+            mh, vh = m32 / bc1, v32 / bc2
+            u = -lr * (mh / (jnp.sqrt(vh) + self.eps)
+                       + self.weight_decay * p.astype(jnp.float32))
+            return u, m32.astype(m.dtype), v32.astype(v.dtype)
+
+        out = jax.tree.map(upd, g32, state.m, state.v, params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamWState(m=m, v=v)
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(tree)))
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, peak_lr * cos)
+    return lr
+
+
+def constant(lr_value: float) -> Callable:
+    return lambda step: jnp.full((), lr_value, jnp.float32)

@@ -1,0 +1,58 @@
+"""Gradient compression for the DP all-reduce: int8 quantization with error
+feedback (1-bit-Adam-style residual correction).
+
+At 1000+-node scale the DP gradient all-reduce is the dominant cross-pod
+collective; int8 with per-tensor scales cuts its payload 2x vs bf16 (4x vs
+fp32) at negligible accuracy cost when error feedback is enabled (the
+quantization residual is added back into the next step's gradient, so the
+bias telescopes).
+
+Usage: wrap the grads before ``opt.update``::
+
+    comp = Int8Compressor()
+    cstate = comp.init(params)
+    grads, cstate = comp.roundtrip(grads, cstate)   # emulates AR payload
+
+Under GSPMD the all-reduce itself is XLA-inserted; ``roundtrip`` applies the
+quantize -> (collective would run here) -> dequantize transform so numerics
+and payload bytes match the deployed configuration.  The dry-run roofline
+credits the collective term with the reduced payload when enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor:
+    error_feedback: bool = True
+
+    def init(self, params) -> CompressionState:
+        return CompressionState(
+            residual=jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def roundtrip(self, grads, state: CompressionState):
+        def one(g, r):
+            g32 = g.astype(jnp.float32) + (r if self.error_feedback else 0.0)
+            amax = jnp.max(jnp.abs(g32))
+            scale = jnp.maximum(amax, 1e-30) / 127.0
+            q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+            dq = q.astype(jnp.float32) * scale
+            new_r = g32 - dq
+            return dq.astype(g.dtype), new_r
+
+        out = jax.tree.map(one, grads, state.residual)
+        dq = jax.tree.map(lambda o: o[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        res = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return dq, CompressionState(residual=res)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# src-layout import without install; tests run on the host's real device
+# count (1 CPU) — only launch/dryrun.py forces 512 placeholder devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

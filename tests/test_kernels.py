@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nvfp4
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(16, 16), (64, 128), (256, 512),
+                                   (33, 48), (4, 16), (130, 1040)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qdq_kernel_sweep(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(sum(shape)), shape) * 3
+         ).astype(dtype)
+    got = ops.nvfp4_qdq(x, tile_m=64, tile_k=128)
+    want = ref.nvfp4_qdq_ref(x)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=1e-2)
+
+
+def test_qdq_kernel_matches_exactly_fp32():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 256), jnp.float32)
+    got = ops.nvfp4_qdq(x)
+    want = ref.nvfp4_qdq_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_qdq_kernel_3d_input():
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 40, 64), jnp.float32)
+    got = ops.nvfp4_qdq(x, tile_m=32, tile_k=64)
+    want = ref.nvfp4_qdq_ref(x.reshape(-1, 64)).reshape(3, 40, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 64, 48), (48, 256, 320),
+                                   (128, 128, 128), (7, 96, 40)])
+def test_matmul_kernel_sweep(m, k, n):
+    key = jax.random.PRNGKey(m + k + n)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    p = ops.pack_weight(w)
+    got = ops.nvfp4_matmul(x, p, tile_m=32, tile_n=64, tile_k=64,
+                           out_dtype=jnp.float32)
+    want = ref.nvfp4_matmul_ref(x, p, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_kernel_quant_error_reasonable():
+    """The packed matmul approximates the BF16 matmul within fp4 noise."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (64, 512), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (512, 256), jnp.float32)
+    got = ops.nvfp4_matmul(x, ops.pack_weight(w), out_dtype=jnp.float32)
+    rel = float(jnp.linalg.norm(got - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.15          # weight-only fp4: ~5-10% on gaussian data
+
+
+@pytest.mark.parametrize("t,v,tt,tv", [(64, 512, 32, 128), (100, 3000, 32, 512),
+                                       (16, 128, 16, 128), (33, 257, 8, 64)])
+def test_kl_kernel_sweep(t, v, tt, tv):
+    key = jax.random.PRNGKey(t + v)
+    tl = jax.random.normal(key, (t, v), jnp.float32) * 2
+    sl = tl + 0.2 * jax.random.normal(jax.random.fold_in(key, 1), (t, v))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 2), (t,)) > 0.3
+            ).astype(jnp.float32)
+    got = ops.kl_loss(tl, sl, mask, tile_t=tt, tile_v=tv)
+    want = ref.kl_loss_ref(tl, sl, mask)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-7)
+
+
+def test_kl_kernel_gradient_matches_analytic():
+    key = jax.random.PRNGKey(7)
+    t, v = 48, 640
+    tl = jax.random.normal(key, (t, v)) * 2
+    sl = tl + 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (t, v))
+    mask = jnp.ones((t,))
+    g = jax.grad(lambda s: ops.kl_loss(tl, s, mask, 16, 128))(sl)
+    want = ref.kl_grad_ref(tl, sl, mask)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want),
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_kl_kernel_zero_for_identical():
+    tl = jax.random.normal(jax.random.PRNGKey(0), (32, 256))
+    loss = ops.kl_loss(tl, tl, jnp.ones((32,)))
+    assert abs(float(loss)) < 1e-5
+
+
+def test_kl_kernel_nonnegative():
+    key = jax.random.PRNGKey(11)
+    tl = jax.random.normal(key, (64, 128)) * 3
+    sl = jax.random.normal(jax.random.fold_in(key, 1), (64, 128)) * 3
+    assert float(ops.kl_loss(tl, sl, jnp.ones((64,)))) >= 0.0

@@ -1,0 +1,98 @@
+"""Distillation losses: properties + chunked == plain (fwd and bwd)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import losses
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_kl_zero_iff_equal():
+    t = _rand(0, 2, 8, 64)
+    assert abs(float(losses.kl_from_logits(t, t, jnp.ones((2, 8))))) < 1e-6
+
+
+def test_kl_shift_invariance():
+    """KL is invariant to per-token constant shifts of either input."""
+    t, s = _rand(1, 2, 8, 64), _rand(2, 2, 8, 64)
+    m = jnp.ones((2, 8))
+    base = float(losses.kl_from_logits(t, s, m))
+    shifted = float(losses.kl_from_logits(t + 5.0, s - 3.0, m))
+    np.testing.assert_allclose(base, shifted, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_kl_nonnegative(seed):
+    t = _rand(seed, 1, 4, 32) * 3
+    s = _rand(seed + 1, 1, 4, 32) * 3
+    assert float(losses.kl_from_logits(t, s, jnp.ones((1, 4)))) >= -1e-7
+
+
+def test_kl_masking():
+    t, s = _rand(3, 1, 4, 16), _rand(4, 1, 4, 16)
+    m0 = jnp.asarray([[1.0, 1.0, 0.0, 0.0]])
+    full = losses.kl_from_logits(t[:, :2], s[:, :2], jnp.ones((1, 2)))
+    masked = losses.kl_from_logits(t, s, m0)
+    np.testing.assert_allclose(float(full), float(masked), rtol=1e-5)
+
+
+def test_ce_matches_manual():
+    logits = _rand(5, 2, 4, 16)
+    labels = jnp.zeros((2, 4), jnp.int32)
+    m = jnp.ones((2, 4))
+    want = -jnp.mean(jax.nn.log_softmax(logits, -1)[..., 0])
+    got = losses.ce_from_logits(logits, labels, m)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n_chunks", [1, 4, 16])
+def test_chunked_kl_matches_plain(n_chunks):
+    B, S, D, V = 2, 8, 16, 128
+    ht, hs = _rand(6, B, S, D), _rand(7, B, S, D)
+    wt, ws = _rand(8, D, V) * 0.2, _rand(9, D, V) * 0.2
+    m = jnp.ones((B, S))
+    want = losses.kl_from_logits(ht @ wt, hs @ ws, m)
+    got = losses.chunked_kl_loss(ht, wt, hs, ws, m, n_chunks)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-7)
+
+
+def test_chunked_kl_grads_match_plain():
+    B, S, D, V = 2, 4, 8, 64
+    ht, hs = _rand(10, B, S, D), _rand(11, B, S, D)
+    wt, ws = _rand(12, D, V) * 0.2, _rand(13, D, V) * 0.2
+    m = jnp.ones((B, S))
+    g1 = jax.grad(lambda h, w: losses.kl_from_logits(ht @ wt, h @ w, m),
+                  argnums=(0, 1))(hs, ws)
+    g2 = jax.grad(lambda h, w: losses.chunked_kl_loss(ht, wt, h, w, m, 8),
+                  argnums=(0, 1))(hs, ws)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=1e-6)
+
+
+def test_chunked_ce_matches_plain():
+    B, S, D, V = 2, 8, 16, 96
+    h, w = _rand(14, B, S, D), _rand(15, D, V) * 0.2
+    labels = jax.random.randint(jax.random.PRNGKey(16), (B, S), 0, V)
+    m = jnp.ones((B, S))
+    want = losses.ce_from_logits(h @ w, labels, m)
+    got = losses.chunked_ce_loss(h, w, labels, m, 8)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+    g1 = jax.grad(lambda hh: losses.ce_from_logits(hh @ w, labels, m))(h)
+    g2 = jax.grad(lambda hh: losses.chunked_ce_loss(hh, w, labels, m, 8))(h)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=5e-4, atol=1e-6)
+
+
+def test_mse_and_top1():
+    t = _rand(20, 1, 4, 16)
+    m = jnp.ones((1, 4))
+    assert float(losses.mse_from_logits(t, t, m)) == 0.0
+    assert float(losses.top1_agreement(t, t, m)) == 1.0

@@ -1,0 +1,183 @@
+"""Per-architecture smoke tests: REDUCED configs of the same family run one
+forward + one QAD train step on CPU, asserting shapes and no NaNs.
+(The FULL configs are exercised only by the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import qad
+from repro.core.qconfig import BF16
+from repro.launch import specs
+from repro.models import get_model
+from repro.optim import AdamW
+
+ARCHS = configs.ALL_ARCHS
+
+
+def _smoke_batch(cfg, rng, b=2, s=32):
+    batch = {"tokens": jax.random.randint(rng, (b, s), 4, cfg.vocab_size),
+             "labels": jax.random.randint(rng, (b, s), 4, cfg.vocab_size),
+             "mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.mrope_sections:
+        batch["pos3"] = jnp.broadcast_to(
+            jnp.arange(s)[None, :, None], (b, s, 3)).astype(jnp.int32)
+        batch["vis_embeds"] = jax.random.normal(rng, (b, s, cfg.d_model),
+                                                jnp.bfloat16)
+        batch["vis_mask"] = ((jnp.arange(s) < 4)[None, :]
+                             * jnp.ones((b, 1), bool))
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jax.random.normal(rng, (b, cfg.enc_seq,
+                                                      cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = configs.get_smoke(arch)
+    model = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(cfg, rng)
+    batch = _smoke_batch(cfg, rng)
+    qcfg = specs.recipe_qconfig(cfg)
+    logits = model.apply(cfg, params, batch, qcfg)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    # hidden output mode for the chunked loss
+    h = model.apply(cfg, params, batch, qcfg, output="hidden")
+    assert h.shape == (2, 32, cfg.d_model)
+    assert model.unembed(cfg, params).shape == (cfg.d_model, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_qad_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    model = get_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    opt = AdamW(lr=1e-3)
+    state = qad.init_state(model, cfg, rng, opt)
+    qcfg = specs.recipe_qconfig(cfg)
+    step = jax.jit(qad.make_train_step(model, cfg, qcfg, opt))
+    batch = _smoke_batch(cfg, rng)
+    state2, metrics = step(state, batch)
+    assert int(state2.step) == 1
+    for k in ("loss", "kl", "ce", "grad_norm"):
+        assert np.isfinite(float(metrics[k])), (k, metrics[k])
+    # KL of a quantized model vs its own BF16 teacher starts > 0
+    assert float(metrics["kl"]) > 0.0
+    # params changed somewhere (bf16 rounding can freeze individual leaves)
+    changed = any(
+        not np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(state.student),
+                        jax.tree.leaves(state2.student)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "arctic-480b",
+                                  "recurrentgemma-2b", "rwkv6-3b",
+                                  "whisper-tiny", "qwen2-vl-2b"])
+def test_smoke_decode_consistency(arch):
+    """prefill + decode_step == teacher-forcing apply (BF16 numerics; the
+    arctic recipe quantizes its KV cache to FP8, so it gets E4M3-level
+    tolerance)."""
+    import dataclasses
+    cfg = configs.get_smoke(arch)
+    if cfg.mrope_sections:
+        pytest.skip("vlm decode exercised via decoder family (pos3 plumbing)")
+    # exactness check uses a BF16 cache: FP8 cache perturbations can flip
+    # discrete MoE routing (covered by test_fp8_cache_decode_correlates)
+    cfg = dataclasses.replace(cfg, quant_recipe="all") \
+        if cfg.quant_recipe == "moe_hybrid" else cfg
+    tol = 4e-2
+    model = get_model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params = model.init_params(cfg, rng)
+    batch = _smoke_batch(cfg, rng)
+    toks = batch["tokens"]
+    full = model.apply(cfg, params, batch, BF16)
+    pf_batch = dict(batch, tokens=toks[:, :24])
+    lp, cache = model.prefill(cfg, params, pf_batch, BF16, s_max=32)
+    np.testing.assert_allclose(
+        np.asarray(lp[:, 0], np.float32), np.asarray(full[:, 23], np.float32),
+        rtol=tol, atol=tol)
+    for i in range(24, 28):
+        ld, cache = model.decode_step(cfg, params, cache,
+                                      {"tokens": toks[:, i:i + 1]}, BF16)
+        np.testing.assert_allclose(
+            np.asarray(ld[:, 0], np.float32),
+            np.asarray(full[:, i], np.float32), rtol=tol, atol=tol)
+
+
+def test_fp8_cache_decode_correlates():
+    """FP8 KV cache (arctic recipe): decode logits stay highly correlated
+    with the exact BF16-cache decode despite E4M3 noise."""
+    cfg = configs.get_smoke("arctic-480b")
+    model = get_model(cfg)
+    rng = jax.random.PRNGKey(6)
+    params = model.init_params(cfg, rng)
+    toks = jax.random.randint(rng, (2, 28), 4, cfg.vocab_size)
+    full = model.apply(cfg, params, {"tokens": toks}, BF16)
+    lp, cache = model.prefill(cfg, params, {"tokens": toks[:, :24]}, BF16,
+                              s_max=32)
+    assert cache["k"].dtype == jnp.float8_e4m3fn
+    ld, _ = model.decode_step(cfg, params, cache,
+                              {"tokens": toks[:, 24:25]}, BF16)
+    a = np.asarray(ld[:, 0], np.float32).ravel()
+    b = np.asarray(full[:, 24], np.float32).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.98, corr
+
+
+def test_selective_quant_skips_layers():
+    """skip_first/skip_last BF16 segments change the output vs all-quant."""
+    from repro.core.qconfig import QuantConfig
+    cfg = configs.get_smoke("granite-34b")
+    model = get_model(cfg)
+    rng = jax.random.PRNGKey(3)
+    params = model.init_params(cfg, rng)
+    batch = _smoke_batch(cfg, rng)
+    full_q = model.apply(cfg, params, batch, QuantConfig())
+    sel_q = model.apply(cfg, params, batch,
+                        QuantConfig(skip_first_layers=1, skip_last_layers=1))
+    bf = model.apply(cfg, params, batch, BF16)
+    d_full = float(jnp.abs(full_q - bf).mean())
+    d_sel = float(jnp.abs(sel_q - bf).mean())
+    assert d_sel < d_full          # selective quant is closer to BF16
+
+
+def test_moe_local_dispatch_matches_global():
+    """The §Perf local (per-row) dispatch is numerically identical to the
+    global-sort reference when capacity is drop-free (fp32)."""
+    import dataclasses
+    from repro.models import layers as L
+    cfg = dataclasses.replace(configs.get_smoke("arctic-480b"),
+                              capacity_factor=8.0)
+    rng = jax.random.PRNGKey(11)
+    d, e, ffe = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    x = jax.random.normal(rng, (2, 32, d), jnp.float32)
+    ws = [jax.random.normal(jax.random.fold_in(rng, i), s) * 0.1
+          for i, s in enumerate([(d, e), (e, d, ffe), (e, d, ffe),
+                                 (e, ffe, d)])]
+    og, _ = L.moe_ffn(BF16, dataclasses.replace(cfg, moe_dispatch="global"),
+                      x, *ws)
+    ol, _ = L.moe_ffn(BF16, dataclasses.replace(cfg, moe_dispatch="local"),
+                      x, *ws)
+    np.testing.assert_allclose(np.asarray(og), np.asarray(ol),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_moe_metrics_and_capacity():
+    from repro.models import layers as L
+    cfg = configs.get_smoke("arctic-480b")
+    rng = jax.random.PRNGKey(4)
+    d, e, ffe = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    x = jax.random.normal(rng, (2, 16, d), jnp.bfloat16)
+    router = jax.random.normal(rng, (d, e)) * 0.1
+    wg = jax.random.normal(rng, (e, d, ffe), jnp.bfloat16) * 0.1
+    wu = jax.random.normal(rng, (e, d, ffe), jnp.bfloat16) * 0.1
+    wd = jax.random.normal(rng, (e, ffe, d), jnp.bfloat16) * 0.1
+    out, aux = L.moe_ffn(BF16, cfg, x, router, wg, wu, wd)
+    assert out.shape == x.shape
+    assert 0.0 <= float(aux["moe_dropped_frac"]) < 0.5

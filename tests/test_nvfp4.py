@@ -1,0 +1,110 @@
+"""NVFP4 quantization algebra: unit + property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import nvfp4
+
+
+def test_e2m1_grid_matches_ml_dtypes():
+    """Our arithmetic RNE == the reference float4_e2m1fn cast, exactly."""
+    x = np.linspace(-6, 6, 4001).astype(np.float32)
+    ours = np.asarray(nvfp4.e2m1_quantize(jnp.asarray(x)))
+    ref = x.astype(ml_dtypes.float4_e2m1fn).astype(np.float32)
+    np.testing.assert_array_equal(ours, ref)
+
+
+def test_e4m3_clamps_overflow():
+    s = nvfp4.e4m3_quantize(jnp.asarray([1e9, 500.0, 448.0, 1e-9]))
+    assert float(s[0]) == 448.0 and float(s[1]) == 448.0
+    assert float(s[2]) == 448.0
+    assert float(s[3]) > 0.0           # floored, not zero
+
+
+def test_qdq_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 5
+    once = nvfp4.qdq(x)
+    twice = nvfp4.qdq(once)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_qdq_zero_preserving():
+    x = jnp.zeros((4, 32))
+    np.testing.assert_array_equal(np.asarray(nvfp4.qdq(x)), 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 10_000))
+def test_qdq_bounded_error(rows, blocks, seed):
+    """Per-block relative error is bounded by half the coarsest E2M1 step
+    (1/6 of the block amax) plus E4M3 scale rounding (2^-3 relative)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed),
+                          (rows, blocks * nvfp4.BLOCK)) * 3
+    dq = np.asarray(nvfp4.qdq(x), np.float32)
+    xb = np.asarray(x, np.float32).reshape(rows, blocks, 16)
+    db = dq.reshape(rows, blocks, 16)
+    amax = np.abs(xb).max(-1, keepdims=True)
+    bound = amax * (1.0 / 6.0) * (1 + 2.0 ** -3) + 1e-6
+    assert np.all(np.abs(db - xb) <= bound)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(-8, 8), st.integers(0, 10_000))
+def test_qdq_pow2_scale_invariant(k, seed):
+    """qdq(x · 2^k) == qdq(x) · 2^k (two-level scaling is exact in pow-2)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+    a = np.asarray(nvfp4.qdq(x * (2.0 ** k)), np.float64)
+    b = np.asarray(nvfp4.qdq(x), np.float64) * (2.0 ** k)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_qdq_sign_symmetry():
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 48))
+    np.testing.assert_allclose(np.asarray(nvfp4.qdq(-x)),
+                               -np.asarray(nvfp4.qdq(x)), rtol=1e-6)
+
+
+def test_ste_gradient_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    g = jax.grad(lambda t: jnp.sum(nvfp4.fake_quant(t) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 12), st.integers(0, 10_000))
+def test_pack_unpack_roundtrip(rows, blocks, seed):
+    """packed(4-bit) -> unpack reproduces the QDQ values exactly."""
+    x = jax.random.normal(jax.random.PRNGKey(seed),
+                          (rows, blocks * 16)) * 2
+    p = nvfp4.pack(x)
+    assert p.codes.dtype == jnp.uint8
+    assert p.codes.shape == (rows, blocks * 8)
+    up = np.asarray(nvfp4.unpack(p, jnp.float32))
+    dq = np.asarray(nvfp4.qdq(x), np.float32)
+    np.testing.assert_allclose(up, dq, rtol=1e-2, atol=1e-3)
+
+
+def test_packed_footprint():
+    assert abs(nvfp4.BYTES_PER_ELEM - 0.5625) < 1e-9
+
+
+def test_fp8_kv_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 7, 3, 16)) * 4
+    t = nvfp4.fp8_quantize(x)
+    y = nvfp4.fp8_dequantize(t, jnp.float32)
+    rel = np.abs(np.asarray(y - x)) / (np.abs(np.asarray(x)) + 1e-6)
+    assert float(np.median(rel)) < 0.05
+
+
+def test_calibrated_amax_controls_clipping():
+    x = jnp.asarray([[1.0] * 15 + [100.0]])
+    dq_dyn = nvfp4.qdq(x)
+    dq_cal = nvfp4.qdq(x, tensor_amax=jnp.float32(8.0))
+    # calibrated: the outlier saturates but small values survive better
+    assert float(jnp.abs(dq_cal[0, 0] - 1.0)) <= float(
+        jnp.abs(dq_dyn[0, 0] - 1.0)) + 1e-6

@@ -1,0 +1,253 @@
+"""Substrate tests: data pipeline, optimizer, compression, checkpoint,
+fault tolerance, PTQ calibration."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ptq
+from repro.data import DataConfig, make_batch
+from repro.distributed import fault
+from repro.optim import AdamW, Int8Compressor, constant, warmup_cosine
+
+
+# ---------------------------------------------------------------- data
+
+
+def test_data_deterministic_replay():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4, seed=7)
+    a = make_batch(cfg, 3)
+    b = make_batch(cfg, 3)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+
+def test_data_steps_differ():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4)
+    a, b = make_batch(cfg, 0), make_batch(cfg, 1)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4)
+    b = make_batch(cfg, 0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_data_host_slicing_partitions_batch():
+    cfg = DataConfig(vocab_size=512, seq_len=8, global_batch=8)
+    full = make_batch(cfg, 5)
+    # host slices are independent but deterministic per (step, slice)
+    h0 = make_batch(cfg, 5, host_slice=(0, 4))
+    h0b = make_batch(cfg, 5, host_slice=(0, 4))
+    np.testing.assert_array_equal(np.asarray(h0["tokens"]),
+                                  np.asarray(h0b["tokens"]))
+    assert h0["tokens"].shape == (4, 8)
+
+
+def test_data_domain_structure_is_learnable():
+    """math-domain sequences follow the stride-progression law."""
+    cfg = DataConfig(vocab_size=512, seq_len=64, global_batch=16,
+                     domains=("math",), structure=1.0)
+    b = make_batch(cfg, 0)
+    t = np.asarray(b["tokens"])[:, 1:]       # skip BOS
+    width = (512 - 4) // 3
+    x = t - 4
+    d1 = (x[:, 1:2] - x[:, 0:1]) % width     # the per-sequence stride
+    pred = (x[:, :-1] + d1) % width
+    match = (pred == x[:, 1:]).mean()
+    assert match > 0.95
+
+
+# ---------------------------------------------------------------- optim
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, clip_norm=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+    for i in range(200):
+        grads = {"w": 2 * params["w"]}
+        upd, state = opt.update(grads, state, params, step + i)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_bf16_states():
+    opt = AdamW(lr=1e-3, state_dtype="bfloat16")
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.m["w"].dtype == jnp.bfloat16
+    upd, state2 = opt.update({"w": jnp.ones((4,))}, state, params,
+                             jnp.zeros((), jnp.int32))
+    assert np.isfinite(np.asarray(upd["w"], np.float32)).all()
+
+
+def test_warmup_cosine_schedule():
+    lr = warmup_cosine(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(lr(jnp.asarray(10))), 1e-3, rtol=1e-5)
+    assert float(lr(jnp.asarray(100))) < 2e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000))
+def test_int8_compression_error_feedback_telescopes(seed):
+    """With error feedback the accumulated dequantized sum tracks the true
+    gradient sum (bias does not accumulate)."""
+    comp = Int8Compressor()
+    g_true = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 0.1
+    state = comp.init({"g": g_true})
+    tot_dq = jnp.zeros((64,))
+    for i in range(20):
+        dq, state = comp.roundtrip({"g": g_true}, state)
+        tot_dq = tot_dq + dq["g"]
+    err = float(jnp.abs(tot_dq - 20 * g_true).max())
+    scale = float(jnp.abs(g_true).max())
+    assert err < scale * 0.02 * 2      # ≤ ~2 quantization steps, not 20
+
+
+# ---------------------------------------------------------------- ptq
+
+
+def test_amax_observer_methods():
+    x = jnp.concatenate([jnp.ones((1000,)), jnp.asarray([100.0])])
+    amaxes = {}
+    for method in ("max", "percentile", "mse"):
+        obs = ptq.AmaxObserver(method=method)
+        obs.observe(x)
+        amaxes[method] = obs.amax()
+    assert amaxes["max"] == pytest.approx(100.0)
+    assert amaxes["percentile"] < 100.0      # percentile clips the outlier
+    # NVFP4's block-16 scales localize outliers, so MSE search may rightly
+    # keep the full range (the paper's §2.1 point: small blocks neutralize
+    # outlier-clipping tricks) — it must never pick something *worse* than
+    # max calibration:
+    from repro.core import nvfp4
+
+    def qerr(amax):
+        pad = (-x.size) % nvfp4.BLOCK
+        xp = jnp.pad(x, (0, pad))
+        return float(jnp.mean((nvfp4.qdq(xp, jnp.float32(amax)) - xp) ** 2))
+
+    assert qerr(amaxes["mse"]) <= qerr(amaxes["max"]) + 1e-9
+
+
+def test_quantize_weights_respects_policy():
+    from repro.core.qconfig import QuantConfig
+    from repro.models.common import ParamSpec
+    params = {"mlp_w": jnp.ones((32, 8)), "router": jnp.ones((8, 4))}
+    specs = {"mlp_w": ParamSpec((32, 8), ("mlp", "embed"), kind="mlp"),
+             "router": ParamSpec((8, 4), ("embed", "expert"), kind="router")}
+    out = ptq.quantize_weights(params, specs, QuantConfig())
+    # router never quantized; ones quantize exactly
+    np.testing.assert_array_equal(np.asarray(out["router"]), 1.0)
+    np.testing.assert_allclose(np.asarray(out["mlp_w"], np.float32), 1.0,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------- fault
+
+
+def test_replan_preserves_global_batch():
+    p = fault.replan(total_pods=4, failed_pods=[2], chips_per_pod=256,
+                     global_batch=1024, model_parallel=16)
+    assert p.n_pods == 3
+    assert p.mesh_shape == (3, 16, 16)
+    assert p.grad_accum * (p.n_pods * 16) * (1024 // (4 * 16)) >= 1024
+
+
+def test_replan_single_pod_drops_pod_axis():
+    p = fault.replan(4, [0, 1, 2], 256, 1024)
+    assert p.mesh_shape == (16, 16)
+    assert p.mesh_axes == ("data", "model")
+
+
+def test_replan_all_failed_raises():
+    with pytest.raises(RuntimeError):
+        fault.replan(2, [0, 1], 256, 64)
+
+
+def test_host_batch_slices_cover_everything():
+    sl = fault.host_batch_slices(103, 7)
+    assert sl[0][0] == 0 and sl[-1][1] == 103
+    covered = sum(e - s for s, e in sl)
+    assert covered == 103
+
+
+def test_straggler_monitor_flags_persistent():
+    mon = fault.StragglerMonitor(patience=3)
+    actions = [mon.feed(1.0 + 0.01 * (i % 3)) for i in range(30)]
+    assert all(a is None for a in actions)
+    acts = [mon.feed(10.0) for _ in range(3)]
+    assert acts[-1] == "replan"
+    assert "timeout_bump" in acts[:2]
+
+
+def test_heartbeat_detects_dead_pod():
+    hb = fault.Heartbeat(timeout_s=5.0)
+    hb.mark(0, 100.0)
+    hb.mark(1, 100.0)
+    hb.mark(0, 110.0)
+    assert hb.dead(now=111.0) == [1]
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones((4,))}}
+    mgr.save(5, tree)
+    got = mgr.restore(5, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"w": jnp.ones((3,))}
+    for s in (1, 2, 3):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [2, 3]
+    assert mgr.latest_step() == 3
+
+
+def test_checkpoint_skips_corrupt(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    tree = {"w": jnp.ones((3,))}
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    # corrupt the newest
+    with open(os.path.join(str(tmp_path), "step_0000000002", "arrays.npz"),
+              "wb") as f:
+        f.write(b"garbage")
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_async(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(7, {"w": jnp.zeros((2,))})
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_train_auto_resume(tmp_path):
+    """Kill-and-restart: the second train() call resumes from checkpoint."""
+    from repro.launch.train import train
+    kw = dict(arch="olmo-1b", smoke=True, steps=6, lr=1e-3, method="qad",
+              batch=2, seq=16, ckpt_dir=str(tmp_path), eval_every=3,
+              log=lambda *a: None)
+    train(**kw)
+    _, hist = train(**{**kw, "steps": 9})
+    assert any(h["step"] == 9 for h in hist)
