@@ -20,10 +20,11 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     only = set(filter(None, args.only.split(",")))
 
-    from . import dryrun_summary, kernel_bench, paper_tables
+    from . import dryrun_summary, kernel_bench, paper_tables, serve_bench
 
     benches = [
         ("kernels", kernel_bench.kernels),
+        ("serve", serve_bench.serve_rows),
         ("table1", paper_tables.table1_kl_vs_ce),
         ("table2", paper_tables.table2_sft_models),
         ("table3", paper_tables.table3_rl_models),

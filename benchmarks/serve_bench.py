@@ -1,0 +1,87 @@
+"""Serve-path benchmark: QDQ vs packed-NVFP4 weight bytes and decode tok/s.
+
+Runs the real serving driver (prefill + greedy decode) at smoke scale in
+both weight formats, then records the deployed weight footprint and decode
+throughput to ``BENCH_serve.json`` (and the harness CSV via ``emit``):
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen1.5-0.5b]
+
+Also registered as the "serve" row group in ``benchmarks.run``.
+
+On this CPU container the packed numbers go through the interpret-mode
+Pallas kernel, so tok/s is a correctness-weighted smoke signal; the byte
+accounting (0.5625 vs 2.0 B/param on quantized GEMMs) is exact and is the
+quantity that bounds memory-bound TPU decode.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import jax                                                  # noqa: E402
+
+from repro import configs                                   # noqa: E402
+from repro.launch import serve                              # noqa: E402
+
+from .common import emit                                    # noqa: E402
+
+
+def bench_format(cfg, weight_format: str, batch: int, prompt_len: int,
+                 gen: int) -> dict:
+    rng = jax.random.PRNGKey(0)
+    params, _ = serve.load_quantized(cfg, rng, weight_format)
+    prompts = jax.random.randint(rng, (batch, prompt_len), 4, cfg.vocab_size)
+    toks, stats = serve.serve_batch(cfg, params, prompts, gen)
+    wr = serve.weight_report(params)
+    return {"weight_format": weight_format,
+            "tokens_head": [int(t) for t in toks[0, :8]],
+            "decode_tok_s": stats["decode_tok_s"],
+            "prefill_s": stats["prefill_s"],
+            "total_weight_bytes": wr["total_bytes"],
+            "q_weight_bytes": wr["q_bytes"],
+            "q_params": wr["q_params"],
+            "q_bytes_per_param": wr["q_bytes_per_param"]}
+
+
+def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
+               out="BENCH_serve.json") -> dict:
+    cfg = configs.get_smoke(arch)
+    results = {"arch": arch, "batch": batch, "prompt_len": prompt_len,
+               "gen": gen, "formats": {}}
+    for fmt in ("qdq", "packed"):
+        r = bench_format(cfg, fmt, batch, prompt_len, gen)
+        results["formats"][fmt] = r
+        emit(f"serve/{arch}/{fmt}_decode",
+             1e6 / max(r["decode_tok_s"], 1e-9),
+             f"tok_s={r['decode_tok_s']:.1f};"
+             f"q_bytes_per_param={r['q_bytes_per_param']:.4f}")
+
+    q, p = results["formats"]["qdq"], results["formats"]["packed"]
+    results["tokens_match"] = q["tokens_head"] == p["tokens_head"]
+    results["weight_bytes_ratio"] = (p["total_weight_bytes"]
+                                     / max(q["total_weight_bytes"], 1))
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[serve_bench] wrote {out}: tokens_match="
+          f"{results['tokens_match']} "
+          f"packed/qdq bytes={results['weight_bytes_ratio']:.3f}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b",
+                    choices=configs.ALL_ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    serve_rows(args.arch, args.batch, args.prompt_len, args.gen, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,18 +11,17 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
-from repro.core import nvfp4
-from repro.launch.serve import load_quantized, serve_batch
-from repro.models import common
+from repro.launch.serve import load_quantized, serve_batch, weight_report
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b",
                     choices=configs.ALL_ARCHS)
+    ap.add_argument("--weight-format", choices=("qdq", "packed"),
+                    default="packed")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=12)
@@ -31,16 +30,17 @@ def main():
     cfg = configs.get_smoke(args.arch)
     rng = jax.random.PRNGKey(0)
 
-    # deployment numerics: weights on the E2M1 grid (QDQ); the packed layout
-    # stores the same values at 0.5625 B/param for the memory-bound decode
-    params, qcfg = load_quantized(cfg, rng, weight_format="qdq")
-    n_params = common.param_count(
-        __import__("repro.models", fromlist=["get_model"])
-        .get_model(cfg).param_specs(cfg))
-    print(f"arch={cfg.name}  params={n_params/1e6:.2f}M  "
-          f"bf16={n_params*2/2**20:.1f}MiB -> "
-          f"nvfp4={n_params*nvfp4.BYTES_PER_ELEM/2**20:.1f}MiB "
-          f"({2/nvfp4.BYTES_PER_ELEM:.2f}x smaller)")
+    # deployment numerics: weights on the E2M1 grid.  "packed" stores the
+    # true 4-bit layout (0.5625 B/param on quantized GEMMs) and serves it
+    # through the Pallas dequant-on-the-fly matmul; "qdq" stores the same
+    # values as BF16 (paper-faithful accuracy eval).
+    params, qcfg = load_quantized(cfg, rng, weight_format=args.weight_format)
+    wr = weight_report(params)
+    q_line = (f"quantized GEMMs: {wr['q_params']/1e6:.2f}M params @ "
+              f"{wr['q_bytes_per_param']:.4f} B/param" if wr["q_params"]
+              else "all dense: QDQ values stored as BF16, 2 B/param")
+    print(f"arch={cfg.name}  format={args.weight_format}  "
+          f"weights={wr['total_bytes']/2**20:.2f}MiB ({q_line})")
     print(f"kv cache dtype: {qcfg.kv_cache_dtype}")
 
     prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 4,

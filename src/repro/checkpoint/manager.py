@@ -47,6 +47,8 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 def _path_str(p) -> str:
     if hasattr(p, "key"):
         return str(p.key)
+    if hasattr(p, "name"):           # GetAttrKey — PackedNVFP4 etc. fields
+        return str(p.name)
     if hasattr(p, "idx"):
         return str(p.idx)
     return str(p)

@@ -21,17 +21,19 @@ always the LAST axis and must be divisible by ``BLOCK`` (callers pad).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 
 BLOCK = 16                      # NVFP4 block size
 E2M1_MAX = 6.0                  # max magnitude representable in E2M1
 E4M3_MAX = 448.0                # max magnitude representable in E4M3 (fn)
 FP8_E4M3 = jnp.float8_e4m3fn
-FP4_E2M1 = jnp.float4_e2m1fn
+FP4_E2M1 = ml_dtypes.float4_e2m1fn   # not re-exported by jnp on all versions
 
 # Weight-memory footprint of one NVFP4 element, in bytes:
 #   4 bits code + 8 bits E4M3 scale / 16 elems  (+ amortized fp32 tensor scale)
@@ -182,30 +184,69 @@ def _f32_to_nibble(q: jax.Array) -> jax.Array:
     return sign | code
 
 
-class PackedNVFP4(NamedTuple):
-    """A tensor stored in true NVFP4 memory layout.
+@dataclasses.dataclass(frozen=True)
+class PackedNVFP4:
+    """A tensor stored in true NVFP4 memory layout — the deployment QTensor.
+
+    The packed (contraction) axis is always LAST; callers that quantize a
+    weight along ``contract_axis`` first move that axis to the end, so the
+    stored layout is W^T-style: codes[..., N, K//2].
 
     ``codes``  uint8 [..., K//2]   — two E2M1 nibbles per byte (even idx = low)
     ``scales`` float8_e4m3fn [..., K//16] — per-block scales
-    ``tensor_scale`` f32 scalar
-    ``orig_dtype``   the dtype to dequantize back to
+    ``tensor_scale`` f32 — scalar, or shape [*lead, 1, ..., 1] when the
+        leading (layer-stack) axes carry independent per-slice scales (so the
+        pytree slices cleanly through ``jax.lax.scan`` over layers)
+    ``orig_k``  static: the un-padded logical K (0 → codes K*2, no padding)
+
+    Registered as a pytree node: codes/scales/tensor_scale are leaves (they
+    flow through jit / scan / checkpointing), ``orig_k`` is static metadata.
     """
     codes: jax.Array
     scales: jax.Array
     tensor_scale: jax.Array
+    orig_k: int = 0
+
+    @property
+    def k(self) -> int:
+        return self.orig_k or self.codes.shape[-1] * 2
 
     @property
     def shape(self):
-        *lead, kh = self.codes.shape
-        return (*lead, kh * 2)
+        *lead, _ = self.codes.shape
+        return (*lead, self.k)
+
+    @property
+    def ndim(self) -> int:
+        return self.codes.ndim
+
+    @property
+    def nbytes(self) -> int:
+        return (self.codes.nbytes + self.scales.nbytes
+                + self.tensor_scale.size * 4)
 
     def nbytes_per_elem(self) -> float:
         return BYTES_PER_ELEM
 
 
-def pack(x: jax.Array) -> PackedNVFP4:
-    """Quantize ``x`` to the packed NVFP4 deployment layout."""
-    scales = compute_scales(x)
+jax.tree_util.register_dataclass(
+    PackedNVFP4,
+    data_fields=["codes", "scales", "tensor_scale"],
+    meta_fields=["orig_k"])
+
+
+def pack(x: jax.Array, n_lead: int = 0) -> PackedNVFP4:
+    """Quantize ``x`` to the packed NVFP4 deployment layout.
+
+    ``n_lead``: number of leading axes (layer-stack dims) that each get an
+    independent per-tensor scale — required so a stacked [L, ...] weight
+    sliced per-layer by ``jax.lax.scan`` carries the right scalar scale.
+    """
+    tensor_amax = None
+    if n_lead:
+        tensor_amax = jnp.max(jnp.abs(x.astype(jnp.float32)),
+                              axis=tuple(range(n_lead, x.ndim)), keepdims=True)
+    scales = compute_scales(x, tensor_amax)
     q = quantize_blocked(x, scales)          # [..., K//16, 16] on grid
     *lead, k = x.shape
     nib = _f32_to_nibble(q).reshape(*lead, k)
@@ -214,6 +255,7 @@ def pack(x: jax.Array) -> PackedNVFP4:
         codes=(lo | (hi << 4)).astype(jnp.uint8),
         scales=scales.block.astype(FP8_E4M3),
         tensor_scale=scales.tensor,
+        orig_k=k,
     )
 
 
@@ -223,6 +265,7 @@ def unpack(p: PackedNVFP4, dtype=jnp.bfloat16) -> jax.Array:
     The Pallas kernel ``repro.kernels.nvfp4_matmul`` performs this dequant
     on-the-fly in VMEM fused with the GEMM; this function is its oracle and
     the GSPMD-shardable fallback used by the distributed serve path.
+    Returns the full (padded) K; see ``unpack_layout`` for the logical view.
     """
     codes = p.codes
     lo = _nibble_to_f32(codes & jnp.uint8(0xF))
@@ -232,6 +275,21 @@ def unpack(p: PackedNVFP4, dtype=jnp.bfloat16) -> jax.Array:
     vb = vals.reshape(*lead, kh * 2 // BLOCK, BLOCK)
     s = (p.scales.astype(jnp.float32) * p.tensor_scale)[..., None]
     return (vb * s).reshape(*lead, kh * 2).astype(dtype)
+
+
+def unpack_layout(p: PackedNVFP4, contract_axis: int,
+                  dtype=jnp.bfloat16) -> jax.Array:
+    """Dequantize to the ORIGINAL weight layout.
+
+    Inverse of ``moveaxis(w, contract_axis, -1); pad; pack``: strips K
+    padding and moves the packed axis back to ``contract_axis``.  This is the
+    dequant-then-einsum fallback used for >2-D (MoE expert) weights and
+    non-kernel backends.
+    """
+    w = unpack(p, dtype)
+    if p.orig_k and p.orig_k != w.shape[-1]:
+        w = w[..., : p.orig_k]
+    return jnp.moveaxis(w, -1, contract_axis % w.ndim)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,15 @@ per-tensor FP32 scale.  Three calibration methods are provided:
                      surprisingly well")
   * ``percentile`` — amax = percentile of per-sample amaxes (clips outliers)
   * ``mse``        — grid-search the amax that minimizes QDQ MSE
+
+``quantize_weights`` is also the deployment packer: with
+``weight_format="packed"`` it emits ``PackedNVFP4`` QTensor leaves (true
+4-bit codes + E4M3 block scales, 0.5625 B/param) that every model forward
+consumes directly — ``layers.qeinsum`` dispatches them to the Pallas
+``nvfp4_matmul`` kernel or the dequant-einsum fallback, ``scan_layers``
+slices them per layer, checkpointing round-trips them, and
+``launch.serve --weight-format packed`` serves them end-to-end with greedy
+tokens matching the QDQ path.
 """
 from __future__ import annotations
 
@@ -70,40 +79,66 @@ def quantize_weights(params, specs, qcfg: QuantConfig):
 
     ``specs`` mirrors ``params`` with ``ParamSpec`` leaves carrying the GEMM
     ``kind`` and contraction axis; leaves whose kind the policy quantizes are
-    QDQ'd (weight_format="qdq") or packed to true 4-bit
-    (weight_format="packed" — handled by the serving loader, which keeps a
-    ``PackedNVFP4`` in place of the array).
+    QDQ'd (weight_format="qdq") or packed to true 4-bit NVFP4
+    (weight_format="packed").  Packed leaves are ``PackedNVFP4`` pytree nodes
+    in the kernel's W^T layout (contraction axis moved last) and flow through
+    every model forward unchanged — ``layers.qeinsum`` dispatches them to the
+    Pallas ``nvfp4_matmul`` kernel (2-D) or a dequant-then-einsum fallback
+    (MoE experts, non-kernel backends).
+
+    Leading layer-stack axes (named "layers"/"inner" by ``stack_specs``) get
+    independent per-layer tensor scales for BOTH formats, so the per-layer
+    slices a ``jax.lax.scan`` sees match what runtime fake-quant would
+    compute, and the two formats stay numerically identical to each other.
     """
     def one(spec, w):
         if spec is None or not qcfg.quantizes(spec.kind) or not qcfg.quantize_weights:
             return w
+        n_lead = _n_stack_axes(spec)
         if qcfg.weight_format == "packed":
-            return _pack_along(w, spec.contract_axis)
-        return _qdq_along(w, spec.contract_axis)
+            return _pack_along(w, spec.contract_axis, n_lead)
+        return _qdq_along(w, spec.contract_axis, n_lead)
 
     return jax.tree.map(one, specs, params,
                         is_leaf=lambda s: s is None or hasattr(s, "kind"))
 
 
-def _qdq_along(w, axis):
-    axis = axis % w.ndim
-    wm = jnp.moveaxis(w, axis, -1)
+def _n_stack_axes(spec) -> int:
+    """Leading scan-stacked axes (each gets its own per-tensor scale)."""
+    n = 0
+    for ax in spec.axes:
+        if ax not in ("layers", "inner"):
+            break
+        n += 1
+    return n
+
+
+def _moved_padded(w, axis):
+    wm = jnp.moveaxis(w, axis % w.ndim, -1)
     k = wm.shape[-1]
     pad = (-k) % nvfp4.BLOCK
     if pad:
         wm = jnp.pad(wm, [(0, 0)] * (wm.ndim - 1) + [(0, pad)])
-    dq = nvfp4.qdq(wm)[..., :k]
-    return jnp.moveaxis(dq, -1, axis)
+    return wm, k
 
 
-def _pack_along(w, axis):
-    axis = axis % w.ndim
-    wm = jnp.moveaxis(w, axis, -1)
-    k = wm.shape[-1]
-    pad = (-k) % nvfp4.BLOCK
-    if pad:
-        wm = jnp.pad(wm, [(0, 0)] * (wm.ndim - 1) + [(0, pad)])
-    return nvfp4.pack(wm)          # caller is responsible for layout at use
+def _lead_amax(wm, n_lead):
+    if not n_lead:
+        return None
+    return jnp.max(jnp.abs(wm.astype(jnp.float32)),
+                   axis=tuple(range(n_lead, wm.ndim)), keepdims=True)
+
+
+def _qdq_along(w, axis, n_lead=0):
+    wm, k = _moved_padded(w, axis)
+    dq = nvfp4.qdq(wm, _lead_amax(wm, n_lead))[..., :k]
+    return jnp.moveaxis(dq, -1, axis % w.ndim)
+
+
+def _pack_along(w, axis, n_lead=0):
+    wm, k = _moved_padded(w, axis)
+    p = nvfp4.pack(wm, n_lead=n_lead)
+    return dataclasses.replace(p, orig_k=k)   # remember the un-padded K
 
 
 def calibrate_activations(fwd: Callable, batches: Iterable,

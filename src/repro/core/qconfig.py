@@ -54,6 +54,13 @@ class QuantConfig:
     #   "packed" — true 4-bit storage + dequant-on-the-fly (TPU memory win)
     weight_format: Literal["qdq", "packed"] = "qdq"
 
+    # --- packed-GEMM backend ---
+    #   "auto"    — Pallas nvfp4_matmul for 2-D packed weights, dequant-then-
+    #               einsum for >2-D (MoE experts)
+    #   "dequant" — always dequantize then einsum (GSPMD-shardable fallback;
+    #               bitwise-identical to serving the QDQ'd BF16 weights)
+    packed_backend: Literal["auto", "dequant"] = "auto"
+
     # --- activation tensor-scale source ---
     #   "dynamic"    — amax from the tensor itself (default)
     #   "calibrated" — amax from a PTQ calibration pass (repro.core.ptq)
@@ -61,8 +68,8 @@ class QuantConfig:
 
     def quantizes(self, kind: Kind) -> bool:
         """Does this policy quantize GEMMs of the given kind?"""
-        if not self.enabled:
-            return False
+        if not self.enabled or not kind:
+            return False        # kind "" = not a GEMM weight (norms, biases)
         if kind in ("router", "embed"):
             return False
         if kind == "lm_head":
@@ -84,10 +91,26 @@ class QuantConfig:
         return _fq_lastdim(x)
 
     def q_weight(self, w: jax.Array, kind: Kind, contract_axis: int = 0) -> jax.Array:
-        """Fake-quantize a weight, blocked along the contraction axis."""
+        """Fake-quantize a DENSE weight, blocked along the contraction axis."""
+        if isinstance(w, nvfp4.PackedNVFP4):
+            raise TypeError("q_weight expects a dense array; packed weights "
+                            "go through resolve_weight / layers.qeinsum")
         if not (self.quantizes(kind) and self.quantize_weights):
             return w
         return _fq_axis(w, contract_axis)
+
+    def resolve_weight(self, w, kind: Kind, contract_axis: int = 0):
+        """GEMM-ready weight for any QTensor representation.
+
+        ``PackedNVFP4`` leaves (weights quantized offline by PTQ with
+        weight_format="packed") pass through untouched — they are already on
+        the E2M1 grid and the GEMM dispatch dequantizes them (in the Pallas
+        kernel or the einsum fallback).  Dense leaves get the policy's
+        fake-quant, exactly as before.
+        """
+        if isinstance(w, nvfp4.PackedNVFP4):
+            return w
+        return self.q_weight(w, kind, contract_axis)
 
 
 BF16 = QuantConfig(enabled=False)

@@ -7,13 +7,25 @@ memory-bound, so the win on TPU is streaming 0.5625 B/param instead of
 (TN, TK) weight tile is unpacked and rescaled in VMEM/VREGs and fed to the
 BF16 MXU with FP32 accumulation.
 
+This kernel is wired into the live serving path: PTQ with
+``weight_format="packed"`` leaves ``PackedNVFP4`` pytree nodes in the param
+tree, and every 2-D quantized GEMM (``layers.qeinsum`` dispatch) lands here
+— including M=1 decode steps, whose tiles are padded up to the fp32 sublane
+minimum (8).  Dequantized weight tiles are rounded to BF16 before the dot so
+the kernel is numerically interchangeable with serving the QDQ'd BF16
+weights through XLA (that is what the MXU consumes either way).
+
 Layout: for y = x @ W with x:[M,K], the weight is stored transposed,
 W^T:[N,K], packed along K (the contraction dim — NVFP4 blocks must run along
 K so a GEMM consumes whole blocks):
 
     codes  uint8          [N, K//2]    two E2M1 nibbles / byte
     scales float8_e4m3fn  [N, K//16]
-    tensor_scale f32      []
+    tensor_scale f32      [] (or any size-1 shape, e.g. a scan-sliced [1,1])
+
+``packed.orig_k`` (the un-padded logical K) may be smaller than the stored
+K; ``x`` is padded with zeros to match — the pad region of the codes is
+zero, so it contributes nothing.
 
 Grid (n, m, k) with K innermost; an FP32 VMEM scratch tile accumulates
 across K steps and is flushed to the output on the last step.
@@ -53,10 +65,12 @@ def _matmul_kernel(s_tensor_ref, x_ref, codes_ref, scales_ref, o_ref, acc_ref,
     tn, tk2 = codes.shape
     w = jnp.stack([lo, hi], axis=-1).reshape(tn, tk2 * 2)
 
-    # apply two-level scales
+    # apply two-level scales, then round to BF16 — the MXU operand precision,
+    # and exactly the values the QDQ serving path stores
     s = scales_ref[...].astype(jnp.float32) * s_tensor_ref[0, 0]   # [tn, tk/16]
     w = (w.reshape(tn, tk2 * 2 // BLOCK, BLOCK) * s[..., None]
          ).reshape(tn, tk2 * 2)
+    w = w.astype(jnp.bfloat16).astype(jnp.float32)
 
     x = x_ref[...].astype(jnp.float32)
     acc_ref[...] += jax.lax.dot_general(
@@ -75,18 +89,30 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, *,
                  out_dtype=jnp.bfloat16, interpret: bool = True) -> jax.Array:
     """y = x @ W where W is stored packed-NVFP4 as W^T:[N,K].
 
-    Leading dims of x are flattened into M.  K and N must be multiples of the
-    tile sizes after internal padding (handled here); K must be a multiple
-    of 16.
+    Leading dims of x are flattened into M; x's last dim is the logical
+    (un-padded) K and may be smaller than the stored K.  Shapes need not be
+    tile multiples — tiles are shrunk to the (sublane, lane)-aligned
+    envelope of the problem and inputs are zero-padded to tile multiples, so
+    M=1 decode and odd K/N sizes work.
     """
     *lead, k = x.shape
     xm = x.reshape(-1, k)
     m = xm.shape[0]
     n = packed.codes.shape[0]
-    assert packed.codes.shape[1] * 2 == k, "weight K mismatch"
+    kp = packed.codes.shape[1] * 2               # stored (block-padded) K
+    assert (packed.orig_k or kp) == k, "weight K mismatch"
+    if kp > k:
+        xm = jnp.pad(xm, ((0, 0), (0, kp - k)))  # pad codes are zero
 
-    tm, tn, tk = min(tile_m, m), min(tile_n, n), min(tile_k, k)
-    pm, pn, pk = (-m) % tm, (-n) % tn, (-k) % tk
+    def rup(v, mult):
+        return v + (-v) % mult
+
+    # shrink tiles to the problem, but keep TPU (sublane, lane) alignment:
+    # fp32 x/out tiles want (8, 128); the K tile must stay a BLOCK multiple
+    tm = min(tile_m, rup(m, 8))
+    tn = min(tile_n, rup(n, 128))
+    tk = min(tile_k, rup(kp, 128))
+    pm, pn, pk = (-m) % tm, (-n) % tn, (-kp) % tk
     if pm or pk:
         xm = jnp.pad(xm, ((0, pm), (0, pk)))
     codes, scales = packed.codes, packed.scales
@@ -96,6 +122,7 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, *,
 
     mm, nn, kk = xm.shape[0], codes.shape[0], xm.shape[1]
     grid = (nn // tn, mm // tm, kk // tk)        # K innermost for accumulation
+    # accepts a scalar or any size-1 tensor_scale (a scan-sliced [1, 1] slab)
     s_tensor = packed.tensor_scale.astype(jnp.float32).reshape(1, 1)
 
     out = pl.pallas_call(

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.nvfp4 import PackedNVFP4, pack
+from repro.core.nvfp4 import PackedNVFP4, pack, unpack_layout
 
 from . import ref
 from .kl_loss import kl_loss as _kl_loss
@@ -36,6 +36,17 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, **kw) -> jax.Array:
     return _nvfp4_matmul(x, packed, **kw)
 
 
+def dequant_weight(packed: PackedNVFP4, contract_axis: int,
+                   dtype=jnp.bfloat16) -> jax.Array:
+    """Dequantize a packed weight back to its original dense layout.
+
+    The non-kernel half of the packed-GEMM dispatch: >2-D (MoE expert)
+    weights and ``packed_backend="dequant"`` configs take this path, then a
+    plain einsum — which XLA/GSPMD can shard freely.
+    """
+    return unpack_layout(packed, contract_axis, dtype)
+
+
 def kl_loss(t_logits: jax.Array, s_logits: jax.Array, mask: jax.Array,
             tile_t: int = 256, tile_v: int = 2048,
             interpret: bool | None = None) -> jax.Array:
@@ -45,5 +56,5 @@ def kl_loss(t_logits: jax.Array, s_logits: jax.Array, mask: jax.Array,
     return _kl_loss(t_logits, s_logits, mask, tile_t, tile_v, interpret)
 
 
-__all__ = ["nvfp4_qdq", "nvfp4_matmul", "pack_weight", "kl_loss", "ref",
-           "INTERPRET"]
+__all__ = ["nvfp4_qdq", "nvfp4_matmul", "pack_weight", "dequant_weight",
+           "kl_loss", "ref", "INTERPRET"]

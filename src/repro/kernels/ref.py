@@ -22,9 +22,13 @@ def nvfp4_matmul_ref(x: jax.Array, packed: nvfp4.PackedNVFP4,
     ``packed`` stores W in [K, N] layout with blocks along K — note the
     blocks run along the *contraction* dim, so the packed layout is
     [N, K]-major internally; here codes are [N, K//2] and we transpose after
-    dequant to keep the kernel's x @ W convention.
+    dequant to keep the kernel's x @ W convention.  Dequantized weights are
+    rounded to BF16 (MXU operand precision — matching both the kernel and
+    the QDQ'd-BF16 serving path) before the fp32-accumulated dot.
     """
-    w = nvfp4.unpack(packed, dtype=jnp.float32)        # [N, K]
+    w = nvfp4.unpack(packed, dtype=jnp.bfloat16).astype(jnp.float32)  # [N, K]
+    if packed.orig_k and packed.orig_k != w.shape[-1]:
+        w = w[:, : packed.orig_k]
     return jnp.dot(x.astype(jnp.float32), w.T,
                    preferred_element_type=jnp.float32).astype(out_dtype)
 

@@ -1,10 +1,17 @@
 """Batched serving driver: NVFP4 weights + (optional) FP8 KV cache.
 
-Serving path = offline weight PTQ (QDQ or true-packed) + prefill + batched
-decode.  CPU-runnable at smoke scale:
+Serving path = offline weight PTQ (QDQ or true-packed 4-bit) + prefill +
+batched decode.  ``--weight-format packed`` serves real ``PackedNVFP4``
+weights end-to-end: 2-D GEMMs stream 0.5625 B/param through the Pallas
+``nvfp4_matmul`` kernel, MoE expert slabs dequantize on the fly.  CPU-
+runnable at smoke scale:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --batch 4 --prompt-len 16 --gen 16
+        --weight-format packed --batch 4 --prompt-len 16 --gen 16
+
+``--no-smoke`` runs the full-size config.  In packed mode the driver also
+replays the prompt batch through the QDQ path and reports whether the greedy
+tokens agree (``--no-parity`` to skip).
 """
 from __future__ import annotations
 
@@ -17,7 +24,6 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.core import ptq
-from repro.core.qconfig import BF16
 from repro.launch import specs
 from repro.models import common, get_model
 
@@ -32,10 +38,16 @@ def load_quantized(cfg, rng, weight_format: str = "qdq"):
     return ptq.quantize_weights(params, pspecs, qcfg), qcfg
 
 
-def serve_batch(cfg, params, prompts, n_gen: int, sample_rng=None):
-    """Prefill + greedy decode ``n_gen`` tokens for a [B, P] prompt batch."""
+def serve_batch(cfg, params, prompts, n_gen: int, sample_rng=None, qcfg=None):
+    """Prefill + greedy decode ``n_gen`` tokens for a [B, P] prompt batch.
+
+    ``qcfg`` overrides the recipe-derived serving config; serving always
+    disables runtime weight fake-quant (weights are pre-quantized offline —
+    re-QDQ'ing already-gridded weights would derive fresh, different scales).
+    """
     model = get_model(cfg)
-    sq = specs.serve_qconfig(cfg)
+    sq = (dataclasses.replace(qcfg, quantize_weights=False)
+          if qcfg is not None else specs.serve_qconfig(cfg))
     s_max = prompts.shape[1] + n_gen
 
     prefill = jax.jit(lambda p, b: model.prefill(cfg, p, b, sq, s_max=s_max))
@@ -60,25 +72,69 @@ def serve_batch(cfg, params, prompts, n_gen: int, sample_rng=None):
                     / max(t_decode, 1e-9)}
 
 
-def main():
+def weight_report(params) -> dict:
+    """Deployed weight footprint; packed GEMM weights cost ~0.5625 B/param."""
+    st = common.weight_stats(params)
+    st["q_bytes_per_param"] = (st["q_bytes"] / st["q_params"]
+                               if st["q_params"] else 0.0)
+    return st
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b", choices=configs.ALL_ARCHS)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True, help="reduced config (--no-smoke = full size)")
+    ap.add_argument("--weight-format", choices=("qdq", "packed"),
+                    default="qdq")
+    ap.add_argument("--parity", action=argparse.BooleanOptionalAction,
+                    default=None, help="packed mode: also run the QDQ path "
+                    "and compare greedy tokens (default: on)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args()
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     rng = jax.random.PRNGKey(0)
-    params, qcfg = load_quantized(cfg, rng)
+    params, qcfg = load_quantized(cfg, rng, weight_format=args.weight_format)
+    wr = weight_report(params)
+    if wr["q_params"]:
+        print(f"[serve] weights: total={wr['total_bytes']/2**20:.2f}MiB  "
+              f"quantized-gemm={wr['q_bytes']/2**20:.2f}MiB over "
+              f"{wr['q_params']/1e6:.2f}M params "
+              f"({wr['q_bytes_per_param']:.4f} B/param; bf16 would be 2.0)")
+    else:
+        print(f"[serve] weights: total={wr['total_bytes']/2**20:.2f}MiB, "
+              f"all dense (qdq stores quantized values as BF16, 2 B/param)")
+
     prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 4,
                                  cfg.vocab_size)
     toks, stats = serve_batch(cfg, params, prompts, args.gen)
     print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"format={args.weight_format} "
           f"prefill={stats['prefill_s']*1e3:.1f}ms "
           f"decode={stats['decode_tok_s']:.1f} tok/s")
     print("[serve] sample:", toks[0, :12].tolist())
+
+    result = {"tokens": toks, "stats": stats, "weights": wr}
+    parity = (args.weight_format == "packed"
+              if args.parity is None else args.parity)
+    if parity and args.weight_format != "packed":
+        print("[serve] --parity only applies to --weight-format packed; "
+              "nothing to compare")
+    if parity and args.weight_format == "packed":
+        qdq_params, _ = load_quantized(cfg, rng, weight_format="qdq")
+        ref_toks, _ = serve_batch(cfg, qdq_params, prompts, args.gen)
+        match = bool(jnp.all(toks == ref_toks))
+        print(f"[serve] packed-vs-qdq greedy tokens "
+              f"{'AGREE' if match else 'DISAGREE'}")
+        result["tokens_match_qdq"] = match
+    return result
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.nvfp4 import E4M3_MAX
+from repro.core import nvfp4
 from repro.distributed.ctx import cst
 
 NEG_INF = -1e30
@@ -135,15 +135,13 @@ def init_kv_cache(n_layers, batch, s_max, n_kv, head_dim, dtype_str="bf16"):
 
 
 def _quant_kv(x):
-    """[B,S,H,hd] -> (e4m3 values, [B,S,H] scales)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), -1)
-    scale = jnp.maximum(amax, 1e-30) / E4M3_MAX
-    vals = (x.astype(jnp.float32) / scale[..., None]).astype(jnp.float8_e4m3fn)
-    return vals, scale
+    """[B,S,H,hd] -> (e4m3 values, [B,S,H] scales) via the core FP8 algebra."""
+    t = nvfp4.fp8_quantize(x, axis=-1)
+    return t.values, t.scale[..., 0]
 
 
 def _dequant_kv(vals, scale, dtype=jnp.bfloat16):
-    return (vals.astype(jnp.float32) * scale[..., None]).astype(dtype)
+    return nvfp4.fp8_dequantize(nvfp4.FP8Tensor(vals, scale[..., None]), dtype)
 
 
 def cache_update_layer(layer_cache, k_new, v_new, pos):

@@ -81,6 +81,36 @@ def param_count(specs) -> int:
     return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=is_spec))
 
 
+def weight_stats(params) -> dict:
+    """Weight-memory accounting over a (possibly mixed) parameter pytree.
+
+    Understands both dense ``jax.Array`` leaves and ``PackedNVFP4`` nodes
+    (whose codes + block scales + tensor scale are charged together), so the
+    serve driver can report the true deployed footprint:
+
+      q_params / q_bytes         — elements / bytes of quantized-GEMM weights
+      dense_params / dense_bytes — everything kept dense
+      total_bytes                — q_bytes + dense_bytes
+    """
+    from repro.core.nvfp4 import PackedNVFP4
+
+    stats = {"q_params": 0, "q_bytes": 0, "dense_params": 0, "dense_bytes": 0}
+
+    def one(leaf):
+        if isinstance(leaf, PackedNVFP4):
+            stats["q_params"] += int(np.prod(leaf.shape))
+            stats["q_bytes"] += int(leaf.nbytes)
+        else:
+            stats["dense_params"] += int(np.prod(leaf.shape))
+            stats["dense_bytes"] += int(leaf.nbytes)
+        return leaf
+
+    jax.tree.map(one, params,
+                 is_leaf=lambda l: isinstance(l, PackedNVFP4))
+    stats["total_bytes"] = stats["q_bytes"] + stats["dense_bytes"]
+    return stats
+
+
 def zeros_from_specs(specs):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
                         is_leaf=is_spec)
@@ -100,6 +130,13 @@ def scan_layers(body_fn, carry, stacked_params, stacked_xs, qcfg,
     (BF16 segments of the paper's selective recipe); the middle segment uses
     ``qcfg``.  Segments are separate scans — the layer body is compiled once
     per segment, keeping HLO size O(1) in depth.
+
+    ``stacked_params`` may mix dense leaves with ``PackedNVFP4`` nodes
+    (packed serving weights): both the segment slicing below and the scan
+    itself operate on the underlying array leaves, all of which carry the
+    stacked [n, ...] leading dim (PTQ gives packed leaves per-layer tensor
+    scales shaped [n, 1, ...] for exactly this reason), so the body receives
+    per-layer ``PackedNVFP4`` slices with their static metadata intact.
     """
     from repro.core.qconfig import BF16
 

@@ -1,32 +1,74 @@
-"""Shared building blocks.  Every GEMM routes through ``qdense`` — the single
-NVFP4 injection point (weights blocked along the contraction axis,
-activations along their last dim, per the NVFP4 GEMM convention)."""
+"""Shared building blocks.  Every GEMM routes through ``qeinsum`` /
+``qdense`` — the single NVFP4 injection point (weights blocked along the
+contraction axis, activations along their last dim, per the NVFP4 GEMM
+convention).
+
+The weight operand is a *QTensor*: either a dense ``jax.Array`` (BF16, or
+QDQ'd BF16 after PTQ) or a ``PackedNVFP4`` (true 4-bit deployment layout).
+``qeinsum`` dispatches packed 2-D weights to the Pallas ``nvfp4_matmul``
+kernel (dequant-on-the-fly in VMEM) and everything else — MoE expert slabs,
+``packed_backend="dequant"`` configs — to a dequant-then-einsum fallback
+that is numerically identical to serving the QDQ'd BF16 weights.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.nvfp4 import PackedNVFP4
 from repro.core.qconfig import QuantConfig
 from repro.distributed.ctx import cst
+from repro.kernels import ops
 
 
 # ---------------------------------------------------------------------------
-# quantized GEMM
+# quantized GEMM — the single dispatch point
 # ---------------------------------------------------------------------------
 
+_DENSE_EQ = "...k,ko->...o"
 
-def qdense(qcfg: QuantConfig, kind: str, x: jax.Array, w: jax.Array,
-           b: jax.Array | None = None, contract_axis: int = 0) -> jax.Array:
+
+def qeinsum(qcfg: QuantConfig, kind: str, eq: str, x: jax.Array, w,
+            contract_axis: int = 0, quantize_act: bool = True) -> jax.Array:
+    """``einsum(eq, q_act(x), resolve(w))`` for any QTensor weight ``w``.
+
+    ``eq`` contracts x's last dim against ``w``'s ``contract_axis``; for a
+    ``PackedNVFP4`` weight the stored layout already has that axis moved
+    last.  2-D packed weights with the standard dense equation run the
+    Pallas kernel (unless ``qcfg.packed_backend == "dequant"``); everything
+    else dequantizes to the original layout and einsums.
+
+    ``quantize_act=False`` lets callers (MoE) fake-quant an activation once
+    and reuse it across several GEMMs.
+    """
+    xq = qcfg.q_act(x, kind) if quantize_act else x
+    wr = qcfg.resolve_weight(w, kind, contract_axis)
+    if isinstance(wr, PackedNVFP4):
+        if (wr.ndim == 2 and contract_axis == 0 and eq == _DENSE_EQ
+                and qcfg.packed_backend == "auto"):
+            return ops.nvfp4_matmul(xq, wr, out_dtype=xq.dtype)
+        return jnp.einsum(eq, xq, ops.dequant_weight(wr, contract_axis,
+                                                     xq.dtype))
+    return jnp.einsum(eq, xq, wr)
+
+
+def qdense(qcfg: QuantConfig, kind: str, x: jax.Array, w,
+           b: jax.Array | None = None, contract_axis: int = 0,
+           quantize_act: bool = True) -> jax.Array:
     """y = x @ w (+ b) with NVFP4 fake-quant per the policy.
 
-    ``w``'s contraction axis defaults to 0 ([in, out] layout); MoE expert
-    weights [E, in, out] pass contract_axis=1.
+    ``w``'s contraction axis defaults to 0 ([in, out] layout); batched MoE
+    expert weights [E, in, out] pass contract_axis=1 with x [..., E, C, in].
+    ``w`` may be dense or ``PackedNVFP4``.
     """
-    xq = qcfg.q_act(x, kind)
-    wq = qcfg.q_weight(w, kind, contract_axis)
-    y = jnp.einsum("...k,ko->...o", xq, wq) if w.ndim == 2 else None
-    if y is None:
-        raise ValueError("use explicit einsum for >2D weights")
+    ndim = w.ndim
+    if ndim == 2 and contract_axis == 0:
+        y = qeinsum(qcfg, kind, _DENSE_EQ, x, w, 0, quantize_act)
+    elif ndim == 3 and contract_axis == 1:
+        y = qeinsum(qcfg, kind, "...eck,eko->...eco", x, w, 1, quantize_act)
+    else:
+        raise ValueError(f"unsupported weight rank/contract_axis: "
+                         f"{ndim}/{contract_axis}")
     if b is not None:
         y = y + b
     return y
@@ -167,6 +209,25 @@ def moe_ffn(qcfg, cfg, x, router_w, wg, wu, wd):
     return out.reshape(b, s, d), aux
 
 
+def _expert_ffn(qcfg, xe, wg, wu, wd, hid_axes, out_axes):
+    """Quantized SwiGLU over per-expert token slabs: xe [..., E, C, d].
+
+    Shared by both dispatch scopes (this used to be two copy-pasted
+    ``q_act``/``q_weight``+einsum blocks).  Expert weights [E, in, out]
+    contract on axis 1; packed NVFP4 expert slabs take the dequant-then-
+    einsum path inside ``qdense`` (the Pallas kernel is 2-D-only).
+    The activation is fake-quanted once and reused for the g/u GEMMs.
+    """
+    xq = qcfg.q_act(xe, "mlp")
+    g = cst(qdense(qcfg, "mlp", xq, wg, contract_axis=1, quantize_act=False),
+            hid_axes)
+    u = cst(qdense(qcfg, "mlp", xq, wu, contract_axis=1, quantize_act=False),
+            hid_axes)
+    h = qcfg.q_act(jax.nn.silu(g) * u, "mlp")
+    return cst(qdense(qcfg, "mlp", h, wd, contract_axis=1,
+                      quantize_act=False), out_axes)
+
+
 def _moe_dispatch_local(qcfg, cfg, x, router_w, wg, wu, wd):
     """Per-batch-row dispatch, written as BATCHED ops (take_along_axis /
     batched scatter) rather than vmap: the batch dim stays a real sharded
@@ -206,15 +267,9 @@ def _moe_dispatch_local(qcfg, cfg, x, router_w, wg, wu, wd):
     xe = jnp.take_along_axis(x, buf_tok[:, :, None], axis=1)       # [B,EC,d]
     xe = cst(xe.reshape(b, e, cap, d), ("batch", eax, "none", "none"))
 
-    xq = qcfg.q_act(xe, "mlp")
-    g = cst(jnp.einsum("becd,edf->becf", xq, qcfg.q_weight(wg, "mlp", 1)),
-            ("batch", eax, "none", "mlp"))
-    u = cst(jnp.einsum("becd,edf->becf", xq, qcfg.q_weight(wu, "mlp", 1)),
-            ("batch", eax, "none", "mlp"))
-    h = jax.nn.silu(g) * u
-    ye = cst(jnp.einsum("becf,efd->becd", qcfg.q_act(h, "mlp"),
-                        qcfg.q_weight(wd, "mlp", 1)),
-             ("batch", eax, "none", "none"))
+    ye = _expert_ffn(qcfg, xe, wg, wu, wd,
+                     hid_axes=("batch", eax, "none", "mlp"),
+                     out_axes=("batch", eax, "none", "none"))
 
     yw = ye.reshape(b, e * cap, d).astype(jnp.float32) * buf_w[:, :, None]
     out = _batched_scatter_add(b, s, d, buf_tok, yw)
@@ -261,16 +316,9 @@ def _moe_dispatch_flat(qcfg, cfg, xf, router_w, wg, wu, wd):
     buf_w = jnp.zeros((e * cap + 1,), jnp.float32).at[dst].set(sw)[:-1]
     xe = cst(xf[buf_tok].reshape(e, cap, d), ("expert", "none", "none"))
 
-    # expert GEMMs (blocked along the contraction axis: dims 1 of wg/wu, 1 of wd)
-    xq = qcfg.q_act(xe, "mlp")
-    g = cst(jnp.einsum("ecd,edf->ecf", xq, qcfg.q_weight(wg, "mlp", 1)),
-            ("expert", "none", "mlp"))
-    u = cst(jnp.einsum("ecd,edf->ecf", xq, qcfg.q_weight(wu, "mlp", 1)),
-            ("expert", "none", "mlp"))
-    h = jax.nn.silu(g) * u
-    ye = cst(jnp.einsum("ecf,efd->ecd", qcfg.q_act(h, "mlp"),
-                        qcfg.q_weight(wd, "mlp", 1)),
-             ("expert", "none", "none"))                               # [E,C,d]
+    ye = _expert_ffn(qcfg, xe, wg, wu, wd,
+                     hid_axes=("expert", "none", "mlp"),
+                     out_axes=("expert", "none", "none"))              # [E,C,d]
 
     # weighted scatter-add back to tokens
     yw = (ye.reshape(e * cap, d).astype(jnp.float32)

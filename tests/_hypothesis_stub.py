@@ -1,0 +1,49 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The container bakes the jax toolchain but not hypothesis; rather than losing
+the property tests, this shim re-implements the tiny surface they use
+(``given`` + ``settings`` + ``strategies.integers``) with a seeded RNG, so
+each property runs against ``max_examples`` deterministic samples.  If real
+hypothesis is importable, ``conftest.py`` never installs this module.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Integers:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng: random.Random) -> int:
+        return rng.randint(self.lo, self.hi)
+
+
+class strategies:                                   # mirrors hypothesis.strategies
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Integers):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = random.Random(0)                  # deterministic examples
+            for _ in range(n):
+                fn(*args, *(s.sample(rng) for s in strats), **kwargs)
+        # hide the sampled params from pytest's fixture resolution
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

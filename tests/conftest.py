@@ -8,3 +8,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-minute integration tests (subprocess meshes)")
+
+try:                                   # hypothesis isn't baked into the image;
+    import hypothesis                  # fall back to the deterministic shim
+except ImportError:
+    import types
+
+    import _hypothesis_stub as _hs
+
+    _mod = types.ModuleType("hypothesis")
+    _mod.given, _mod.settings = _hs.given, _hs.settings
+    _mod.strategies = types.ModuleType("hypothesis.strategies")
+    _mod.strategies.integers = _hs.strategies.integers
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies

@@ -177,11 +177,12 @@ def test_small_mesh_train_step_runs():
         step = qad.make_train_step(model, cfg, qcfg, opt)
         _, m_single = jax.jit(step)(state, batch)   # 1-logical-device baseline
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
         rules = shd.make_rules(mesh, "fsdp_tp")
         shard_p = shd.tree_shardings(model.param_specs(cfg), mesh, rules)
-        with jax.set_mesh(mesh), ctx.use(mesh, rules):
+        # (jax.sharding.AxisType / jax.set_mesh are newer-jax APIs; on 0.4.x
+        # NamedSharding-annotated inputs + the repo's cst() context suffice)
+        with ctx.use(mesh, rules):
             state_sh = qad.TrainState(
                 step=state.step,
                 student=jax.device_put(state.student, shard_p),
