@@ -1,8 +1,13 @@
-"""Serve-path benchmark: QDQ vs packed-NVFP4 weight bytes and decode tok/s.
+"""Serve-path benchmark: QDQ vs packed-NVFP4 bytes + tok/s, and the
+continuous-batching engine.
 
 Runs the real serving driver (prefill + greedy decode) at smoke scale in
-both weight formats, then records the deployed weight footprint and decode
-throughput to ``BENCH_serve.json`` (and the harness CSV via ``emit``):
+both weight formats across a dense, a MoE, and a recurrent arch, prices
+the full-scale joint memory win (packed 0.5625 B/param weights + the
+recipe's FP8-vs-BF16 KV cache at decode_32k), and serves a mixed-length
+staggered workload through the ``repro.serve`` engine (qdq and packed),
+recording everything to ``BENCH_serve.json`` (and the harness CSV via
+``emit``):
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen1.5-0.5b]
 
@@ -10,8 +15,8 @@ Also registered as the "serve" row group in ``benchmarks.run``.
 
 On this CPU container the packed numbers go through the interpret-mode
 Pallas kernel, so tok/s is a correctness-weighted smoke signal; the byte
-accounting (0.5625 vs 2.0 B/param on quantized GEMMs) is exact and is the
-quantity that bounds memory-bound TPU decode.
+accounting (0.5625 vs 2.0 B/param on quantized GEMMs, 1 B/elem FP8 KV) is
+exact and is the quantity that bounds memory-bound TPU decode.
 """
 from __future__ import annotations
 
@@ -24,9 +29,13 @@ sys.path.insert(0, "src")
 import jax                                                  # noqa: E402
 
 from repro import configs                                   # noqa: E402
-from repro.launch import serve                              # noqa: E402
+from repro.configs import SHAPES                            # noqa: E402
+from repro.launch import serve, specs                       # noqa: E402
 
 from .common import emit                                    # noqa: E402
+
+# dense / MoE / recurrent coverage per the roadmap
+SWEEP_ARCHS = ("qwen1.5-0.5b", "qwen2-moe-a2.7b", "rwkv6-3b")
 
 
 def bench_format(cfg, weight_format: str, batch: int, prompt_len: int,
@@ -39,6 +48,7 @@ def bench_format(cfg, weight_format: str, batch: int, prompt_len: int,
     return {"weight_format": weight_format,
             "tokens_head": [int(t) for t in toks[0, :8]],
             "decode_tok_s": stats["decode_tok_s"],
+            "e2e_tok_s": stats["e2e_tok_s"],
             "prefill_s": stats["prefill_s"],
             "total_weight_bytes": wr["total_bytes"],
             "q_weight_bytes": wr["q_bytes"],
@@ -46,28 +56,86 @@ def bench_format(cfg, weight_format: str, batch: int, prompt_len: int,
             "q_bytes_per_param": wr["q_bytes_per_param"]}
 
 
-def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
-               out="BENCH_serve.json") -> dict:
+def arch_rows(arch: str, batch: int, prompt_len: int, gen: int) -> dict:
     cfg = configs.get_smoke(arch)
-    results = {"arch": arch, "batch": batch, "prompt_len": prompt_len,
-               "gen": gen, "formats": {}}
+    rows = {"formats": {}}
     for fmt in ("qdq", "packed"):
         r = bench_format(cfg, fmt, batch, prompt_len, gen)
-        results["formats"][fmt] = r
+        rows["formats"][fmt] = r
         emit(f"serve/{arch}/{fmt}_decode",
              1e6 / max(r["decode_tok_s"], 1e-9),
              f"tok_s={r['decode_tok_s']:.1f};"
              f"q_bytes_per_param={r['q_bytes_per_param']:.4f}")
+    q, p = rows["formats"]["qdq"], rows["formats"]["packed"]
+    rows["tokens_match"] = q["tokens_head"] == p["tokens_head"]
+    rows["weight_bytes_ratio"] = (p["total_weight_bytes"]
+                                  / max(q["total_weight_bytes"], 1))
+    # full-scale analytic pricing: packed weights + recipe KV vs all-BF16
+    rows["memory_full_scale"] = specs.serve_memory_report(
+        configs.get_config(arch), SHAPES["decode_32k"])
+    return rows
 
-    q, p = results["formats"]["qdq"], results["formats"]["packed"]
-    results["tokens_match"] = q["tokens_head"] == p["tokens_head"]
-    results["weight_bytes_ratio"] = (p["total_weight_bytes"]
-                                     / max(q["total_weight_bytes"], 1))
+
+def engine_rows(arch: str, requests: int, gen: int, slots: int) -> dict:
+    """Mixed-length staggered workload through the continuous-batching
+    engine, qdq and packed: tok/s, pool utilization, weight + KV bytes."""
+    cfg = configs.get_smoke(arch)
+    # the real CLI parser supplies every engine knob's default; parity is
+    # asserted by tests + CI, not re-run here
+    args = serve.build_parser().parse_args(
+        ["--engine", "--arch", arch, "--requests", str(requests),
+         "--gen", str(gen), "--slots", str(slots), "--no-parity"])
+    out = {"arch": arch, "requests": requests, "min_prompt": args.min_prompt,
+           "max_prompt": args.max_prompt, "gen": gen, "slots": slots,
+           "formats": {}}
+    for fmt in ("qdq", "packed"):
+        rng = jax.random.PRNGKey(0)
+        params, qcfg = serve.load_quantized(cfg, rng, fmt)
+        res = serve.run_engine(cfg, params, qcfg, args)
+        st, wr = res["stats"], serve.weight_report(params)
+        out["formats"][fmt] = {
+            "completed": res["ok"], "pool_drained": res["pool_drained"],
+            "decode_tok_s": st["decode_tok_s"], "e2e_tok_s": st["e2e_tok_s"],
+            "steps": st["steps"], "peak_pool_utilization":
+            st["peak_utilization"], "kv_pool_bytes": st["pool_bytes"],
+            "weight_bytes": wr["total_bytes"],
+            "serving_bytes": wr["total_bytes"] + st["pool_bytes"]}
+        emit(f"serve/engine/{arch}/{fmt}",
+             1e6 / max(st["decode_tok_s"], 1e-9),
+             f"tok_s={st['decode_tok_s']:.1f};"
+             f"pool_util={st['peak_utilization']:.2f}")
+    return out
+
+
+def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
+               out="BENCH_serve.json", archs=SWEEP_ARCHS,
+               engine_requests=6, engine_slots=3) -> dict:
+    results = {"arch": arch, "batch": batch, "prompt_len": prompt_len,
+               "gen": gen, "archs": {}}
+    for a in dict.fromkeys((arch, *archs)):
+        results["archs"][a] = arch_rows(a, batch, prompt_len, gen)
+        m = results["archs"][a]["memory_full_scale"]
+        joint = (f" joint(pkd+kv)={m['joint_ratio']:.3f}"
+                 if "joint_ratio" in m else "")
+        print(f"[serve_bench] {a}: tokens_match="
+              f"{results['archs'][a]['tokens_match']} packed/qdq bytes="
+              f"{results['archs'][a]['weight_bytes_ratio']:.3f}{joint}")
+    # legacy top-level keys for the primary arch
+    results.update({k: results["archs"][arch][k]
+                    for k in ("formats", "tokens_match",
+                              "weight_bytes_ratio")})
+
+    results["engine"] = engine_rows(arch, engine_requests, gen,
+                                    engine_slots)
+    e = results["engine"]["formats"]
+    print(f"[serve_bench] engine({arch}): "
+          f"qdq={e['qdq']['decode_tok_s']:.1f} tok/s "
+          f"packed={e['packed']['decode_tok_s']:.1f} tok/s "
+          f"peak-pool-util={e['packed']['peak_pool_utilization']:.2f}")
+
     with open(out, "w") as f:
         json.dump(results, f, indent=2)
-    print(f"[serve_bench] wrote {out}: tokens_match="
-          f"{results['tokens_match']} "
-          f"packed/qdq bytes={results['weight_bytes_ratio']:.3f}")
+    print(f"[serve_bench] wrote {out}")
     return results
 
 
@@ -79,8 +147,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--archs", nargs="*", default=list(SWEEP_ARCHS),
+                    help="sweep archs (dense + MoE + recurrent by default)")
+    ap.add_argument("--engine-requests", type=int, default=6)
+    ap.add_argument("--engine-slots", type=int, default=3)
     args = ap.parse_args()
-    serve_rows(args.arch, args.batch, args.prompt_len, args.gen, args.out)
+    serve_rows(args.arch, args.batch, args.prompt_len, args.gen, args.out,
+               tuple(args.archs), args.engine_requests, args.engine_slots)
 
 
 if __name__ == "__main__":

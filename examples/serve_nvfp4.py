@@ -4,6 +4,13 @@ Shows the deployment path: offline weight PTQ (QDQ numerics or the true
 packed 4-bit layout), prefill, then batched greedy decode.
 
     PYTHONPATH=src python examples/serve_nvfp4.py --arch recurrentgemma-2b
+
+``--engine`` demos the continuous-batching engine instead (decoder archs):
+requests with different prompt lengths, generation budgets, and sampling
+settings are submitted to ``repro.serve.Engine``, scheduled into decode
+slots over a paged KV pool, and drained as they finish.
+
+    PYTHONPATH=src python examples/serve_nvfp4.py --engine
 """
 import argparse
 import sys
@@ -11,9 +18,40 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
+import numpy as np
 
 from repro import configs
 from repro.launch.serve import load_quantized, serve_batch, weight_report
+
+
+def run_engine_demo(cfg, params, qcfg, args):
+    from repro.serve import Engine, SamplingParams
+
+    eng = Engine(cfg, params, qcfg, n_slots=4, block_size=16, n_blocks=16,
+                 max_blocks_per_slot=4)
+    rng = jax.random.PRNGKey(7)
+    jobs = [  # (prompt_len, max_new, sampling)
+        (4, args.gen, SamplingParams()),                      # greedy
+        (16, args.gen, SamplingParams()),                     # 4x longer
+        (9, args.gen + 4, SamplingParams(temperature=0.8, top_k=20, seed=1)),
+        (6, args.gen, SamplingParams(temperature=1.2, seed=2)),
+    ]
+    rids = []
+    for i, (plen, gen, sp) in enumerate(jobs):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(rng, i), (plen,), 4, cfg.vocab_size))
+        rids.append(eng.submit(prompt, gen, sampling=sp))
+    outputs = eng.drain()
+    st = eng.stats()
+    print(f"engine: {st['requests_finished']} requests, "
+          f"{st['decode_tok_s']:.1f} decode tok/s, peak pool util "
+          f"{st['peak_utilization']:.2f}, pool drained="
+          f"{eng.pool.used_blocks == 0}")
+    for rid, (plen, gen, sp) in zip(rids, jobs):
+        mode = ("greedy" if sp.temperature == 0
+                else f"T={sp.temperature} top_k={sp.top_k}")
+        print(f"  req{rid} (prompt {plen}, {mode}): "
+              f"{outputs[rid].tolist()}")
 
 
 def main():
@@ -25,6 +63,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine demo (mixed lengths, "
+                    "per-request sampling)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -43,11 +84,16 @@ def main():
           f"weights={wr['total_bytes']/2**20:.2f}MiB ({q_line})")
     print(f"kv cache dtype: {qcfg.kv_cache_dtype}")
 
+    if args.engine:
+        run_engine_demo(cfg, params, qcfg, args)
+        return
+
     prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 4,
                                  cfg.vocab_size)
     toks, stats = serve_batch(cfg, params, prompts, args.gen)
     print(f"prefill {stats['prefill_s']*1e3:.1f} ms | "
-          f"decode {stats['decode_tok_s']:.1f} tok/s (batch {args.batch})")
+          f"decode {stats['decode_tok_s']:.1f} tok/s | "
+          f"e2e {stats['e2e_tok_s']:.1f} tok/s (batch {args.batch})")
     for i in range(min(2, args.batch)):
         print(f"seq{i}: {toks[i].tolist()}")
 

@@ -66,6 +66,17 @@ class QuantConfig:
     #   "calibrated" — amax from a PTQ calibration pass (repro.core.ptq)
     act_scale_mode: Literal["dynamic", "calibrated"] = "dynamic"
 
+    # --- activation tensor-scale scope ---
+    #   "tensor" — one dynamic amax over the whole activation (default; the
+    #              QAD training semantics)
+    #   "row"    — independent amax per leading-axis element.  The serving
+    #              engine uses this so a request's numerics never depend on
+    #              which other requests are co-batched in its decode step
+    #              (with "tensor" scope, continuous batching would make each
+    #              request's tokens a function of the batch composition).
+    #              For a single-request batch the two scopes are identical.
+    act_scope: Literal["tensor", "row"] = "tensor"
+
     def quantizes(self, kind: Kind) -> bool:
         """Does this policy quantize GEMMs of the given kind?"""
         if not self.enabled or not kind:
@@ -88,6 +99,10 @@ class QuantConfig:
         """Fake-quantize an activation (blocked along its last dim)."""
         if not (self.quantizes(kind) and self.quantize_activations):
             return x
+        if self.act_scope == "row":
+            amax = jnp.max(jnp.abs(x.astype(jnp.float32)),
+                           axis=tuple(range(1, x.ndim)), keepdims=True)
+            return _fq_lastdim(x, amax)
         return _fq_lastdim(x)
 
     def q_weight(self, w: jax.Array, kind: Kind, contract_axis: int = 0) -> jax.Array:
@@ -121,14 +136,20 @@ NVFP4_MOE_HYBRID = QuantConfig(                 # Nemotron 3 Nano recipe
     skip_attention=True, kv_cache_dtype="fp8")
 
 
-def _fq_lastdim(x: jax.Array) -> jax.Array:
-    """fake_quant along the last dim, padding to the block size if needed."""
+def _fq_lastdim(x: jax.Array, tensor_amax: jax.Array | None = None) -> jax.Array:
+    """fake_quant along the last dim, padding to the block size if needed.
+
+    ``tensor_amax`` (broadcastable to the padded ``x``) overrides the dynamic
+    whole-tensor amax — used for "row"-scope and calibrated scales.
+    """
+    fq = (nvfp4.fake_quant if tensor_amax is None
+          else lambda y: nvfp4.fake_quant_calibrated(y, tensor_amax))
     k = x.shape[-1]
     pad = (-k) % nvfp4.BLOCK
     if pad:
         xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-        return nvfp4.fake_quant(xp)[..., :k]
-    return nvfp4.fake_quant(x)
+        return fq(xp)[..., :k]
+    return fq(x)
 
 
 def _fq_axis(w: jax.Array, axis: int) -> jax.Array:

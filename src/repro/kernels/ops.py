@@ -2,9 +2,13 @@
 
 On this CPU container, kernels run in interpret mode (the kernel body is
 executed in Python for correctness validation); on TPU, ``interpret=False``
-lowers through Mosaic.  ``INTERPRET`` auto-detects.
+lowers through Mosaic.  ``interpret_default()`` auto-detects — lazily, so
+importing this module never initializes the jax backend (the multi-pod
+dry-run must set its forced device count before first backend use).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -16,12 +20,15 @@ from .kl_loss import kl_loss as _kl_loss
 from .nvfp4_matmul import nvfp4_matmul as _nvfp4_matmul
 from .nvfp4_qdq import nvfp4_qdq as _nvfp4_qdq
 
-INTERPRET = jax.default_backend() != "tpu"
+
+@functools.cache
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
 
 
 def nvfp4_qdq(x: jax.Array, tensor_amax=None, **kw) -> jax.Array:
     """Fused NVFP4 fake-quant (blocked along last dim)."""
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", interpret_default())
     return _nvfp4_qdq(x, tensor_amax, **kw)
 
 
@@ -32,7 +39,7 @@ def pack_weight(w: jax.Array) -> PackedNVFP4:
 
 def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, **kw) -> jax.Array:
     """y = x @ W from packed NVFP4 weights, dequantized on the fly in VMEM."""
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", interpret_default())
     return _nvfp4_matmul(x, packed, **kw)
 
 
@@ -52,9 +59,9 @@ def kl_loss(t_logits: jax.Array, s_logits: jax.Array, mask: jax.Array,
             interpret: bool | None = None) -> jax.Array:
     """Streaming masked-mean KL(p_t || p_s) over [T, V] logits."""
     if interpret is None:
-        interpret = INTERPRET
+        interpret = interpret_default()
     return _kl_loss(t_logits, s_logits, mask, tile_t, tile_v, interpret)
 
 
 __all__ = ["nvfp4_qdq", "nvfp4_matmul", "pack_weight", "dequant_weight",
-           "kl_loss", "ref", "INTERPRET"]
+           "kl_loss", "ref", "interpret_default"]

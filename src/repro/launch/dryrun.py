@@ -30,13 +30,19 @@ from repro.core.qconfig import BF16
 from repro.distributed import ctx as shd_ctx
 from repro.distributed import sharding as shd
 from repro.launch import hlo_analysis, roofline, specs
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, set_mesh_ctx
 from repro.models import get_model
 from repro.optim import AdamW
 
 
-def build_step(cfg, shape, qadcfg=None):
-    """The jit-able function + abstract inputs for one cell."""
+def build_step(cfg, shape, qadcfg=None, weight_format="qdq"):
+    """The jit-able function + abstract inputs for one cell.
+
+    ``weight_format="packed"`` lowers serve steps against abstract
+    ``PackedNVFP4`` weights through the GSPMD-shardable dequant-einsum
+    backend — the dry-run then prices the 0.5625 B/param footprint.
+    """
+    import dataclasses
     model = get_model(cfg)
     qcfg = specs.recipe_qconfig(cfg)
 
@@ -45,14 +51,15 @@ def build_step(cfg, shape, qadcfg=None):
         step = qad_mod.make_train_step(model, cfg, qcfg, opt,
                                        qadcfg or qad_mod.QADConfig())
         return step, "train"
-    if shape.kind == "prefill":
-        sq = specs.serve_qconfig(cfg)
 
+    sq = specs.serve_qconfig(cfg)
+    if weight_format == "packed":
+        sq = dataclasses.replace(sq, weight_format="packed",
+                                 packed_backend="dequant")
+    if shape.kind == "prefill":
         def prefill_step(params, batch):
             return model.prefill(cfg, params, batch, sq, s_max=shape.seq_len)
         return prefill_step, "prefill"
-
-    sq = specs.serve_qconfig(cfg)
 
     def serve_step(params, cache, batch):
         return model.decode_step(cfg, params, cache, batch, sq)
@@ -61,7 +68,8 @@ def build_step(cfg, shape, qadcfg=None):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              rules_mode: str = "fsdp_tp", qadcfg=None,
-             donate: bool = True, overrides: dict | None = None) -> dict:
+             donate: bool = True, overrides: dict | None = None,
+             weight_format: str = "qdq") -> dict:
     import dataclasses
     cfg = configs.get_config(arch)
     if overrides:
@@ -74,7 +82,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "variant": dict(overrides or {},
                             **({"chunked_loss": True} if qadcfg and
                                getattr(qadcfg, "use_chunked_loss", False)
-                               else {}))}
+                               else {}),
+                            **({"weight_format": weight_format}
+                               if weight_format != "qdq" else {}))}
+    if shape.kind in ("prefill", "decode"):
+        # analytic deployment pricing: packed 4-bit weights, FP8-vs-BF16 KV
+        cell["serve_memory"] = specs.serve_memory_report(cfg, shape)
 
     if shape_name in cfg.skip_shapes:
         cell["status"] = "SKIP"
@@ -84,23 +97,25 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     rules = shd.make_rules(mesh, rules_mode)
-    step, kind = build_step(cfg, shape, qadcfg)
+    step, kind = build_step(cfg, shape, qadcfg, weight_format)
 
     dump_dir = tempfile.mkdtemp(prefix="xdump_")
     copts = {"xla_dump_to": dump_dir,
              "xla_dump_hlo_pass_re": "spmd-partitioning"}
     t0 = time.time()
-    with jax.set_mesh(mesh), shd_ctx.use(mesh, rules):
+    with set_mesh_ctx(mesh), shd_ctx.use(mesh, rules):
         if kind == "train":
             state, batch = specs.train_inputs(cfg, shape, mesh, rules,
                                               AdamW(state_dtype="float32"))
             fn = jax.jit(step, donate_argnums=(0,) if donate else ())
             lowered = fn.lower(state, batch)
         elif kind == "prefill":
-            params, _, batch = specs.serve_inputs(cfg, shape, mesh, rules)
+            params, _, batch = specs.serve_inputs(cfg, shape, mesh, rules,
+                                                  weight_format)
             lowered = jax.jit(step).lower(params, batch)
         else:
-            params, cache, batch = specs.serve_inputs(cfg, shape, mesh, rules)
+            params, cache, batch = specs.serve_inputs(cfg, shape, mesh, rules,
+                                                      weight_format)
             fn = jax.jit(step, donate_argnums=(1,) if donate else ())
             lowered = fn.lower(params, cache, batch)
         t1 = time.time()
@@ -109,6 +124,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):          # older jax returns [dict]
+        ca = ca[0] if ca else {}
     # analyze the post-SPMD, pre-backend HLO (per-device shapes, original
     # scan trip counts — see hlo_analysis docstring)
     spmd_files = sorted(glob.glob(
@@ -156,6 +173,10 @@ def main():
                     choices=["global", "local"])
     ap.add_argument("--moe-shard", default=None, choices=["ep", "tp"])
     ap.add_argument("--remat", default=None, choices=["none", "dots", "full"])
+    ap.add_argument("--weight-format", default="qdq",
+                    choices=["qdq", "packed"],
+                    help="packed: lower serve cells against abstract "
+                    "PackedNVFP4 weights (4-bit deployment footprint)")
     ap.add_argument("--tag", default="", help="suffix for the output json")
     args = ap.parse_args()
 
@@ -180,12 +201,15 @@ def main():
             tag += f"__{args.rules}"
         if args.chunked_loss:
             tag += "__chunkedkl"
+        if args.weight_format != "qdq":
+            tag += f"__{args.weight_format}"
         if args.tag:
             tag += f"__{args.tag}"
         path = os.path.join(args.out, tag + ".json")
         try:
             cell = run_cell(arch, shape, args.multi_pod, args.rules, qadcfg,
-                            overrides=overrides or None)
+                            overrides=overrides or None,
+                            weight_format=args.weight_format)
         except Exception as e:
             cell = {"arch": arch, "shape": shape, "status": "FAIL",
                     "error": f"{type(e).__name__}: {e}",

@@ -12,15 +12,32 @@ runnable at smoke scale:
 ``--no-smoke`` runs the full-size config.  In packed mode the driver also
 replays the prompt batch through the QDQ path and reports whether the greedy
 tokens agree (``--no-parity`` to skip).
+
+``--engine`` switches from the static [B, P] batch to the continuous-
+batching engine (``repro.serve``): a mixed-length request population is
+submitted with staggered arrivals, scheduled into decode slots over a paged
+(BF16 or FP8-with-scales) KV pool, and drained; per-request greedy outputs
+are checked token-for-token against single-request ``serve_batch`` runs,
+and the pool must drain back to empty.  Engine knobs:
+
+  --requests N            number of requests (default 8)
+  --min-prompt/--max-prompt   prompt-length spread (default 4..16, >= 4x)
+  --slots / --block-size / --n-blocks   decode slots and pool geometry
+  --prefill-mode exact|chunked   whole-prompt (bitwise-parity) vs fixed-size
+                          chunked prefill; --prefill-chunk sets the size
+
+Exit status is nonzero if any engine invariant fails (CI runs this).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.core import ptq
@@ -67,9 +84,16 @@ def serve_batch(cfg, params, prompts, n_gen: int, sample_rng=None, qcfg=None):
     jax.block_until_ready(out[-1])
     t_decode = time.time() - t0
     tokens = jnp.concatenate(out, axis=1)
+    # n_gen tokens come back, but only n_gen - 1 passed through decode steps
+    # (the first was sampled from the prefill logits): decode_tok_s rates the
+    # decode loop alone, e2e_tok_s rates all returned tokens over prefill +
+    # decode wall time.
+    b = prompts.shape[0]
     return tokens, {"prefill_s": t_prefill, "decode_s": t_decode,
-                    "decode_tok_s": prompts.shape[0] * (n_gen - 1)
-                    / max(t_decode, 1e-9)}
+                    "decode_steps": n_gen - 1, "n_tokens": b * n_gen,
+                    "decode_tok_s": b * (n_gen - 1) / max(t_decode, 1e-9),
+                    "e2e_tok_s": b * n_gen
+                    / max(t_prefill + t_decode, 1e-9)}
 
 
 def weight_report(params) -> dict:
@@ -78,6 +102,81 @@ def weight_report(params) -> dict:
     st["q_bytes_per_param"] = (st["q_bytes"] / st["q_params"]
                                if st["q_params"] else 0.0)
     return st
+
+
+def mixed_prompts(rng, n: int, min_len: int, max_len: int, vocab: int):
+    """n prompts with lengths spread min..max (>= 4x when max >= 4*min)."""
+    lens = np.linspace(min_len, max_len, n).round().astype(int)
+    return [jax.random.randint(jax.random.fold_in(rng, i), (int(l),), 4,
+                               vocab) for i, l in enumerate(lens)]
+
+
+def run_engine(cfg, params, qcfg, args) -> dict:
+    """Serve a mixed staggered workload through the engine; verify parity
+    and pool-drain invariants.  Returns a result dict (also used by CI and
+    ``benchmarks.serve_bench``)."""
+    from repro.serve import Engine
+
+    bs = args.block_size
+    mb = max(1, math.ceil((args.max_prompt + args.gen - 1) / bs))
+    n_blocks = args.n_blocks or args.slots * mb
+    eng = Engine(cfg, params, qcfg, n_slots=args.slots, block_size=bs,
+                 n_blocks=n_blocks, max_blocks_per_slot=mb,
+                 prefill_mode=args.prefill_mode,
+                 prefill_chunk=args.prefill_chunk)
+
+    rng = jax.random.PRNGKey(1)
+    prompts = mixed_prompts(rng, args.requests, args.min_prompt,
+                            args.max_prompt, cfg.vocab_size)
+    # staggered arrivals: half up front, the rest trickle in while the
+    # first wave is already decoding
+    rids = [eng.submit(np.asarray(p), args.gen) for p in prompts[: len(prompts) // 2]]
+    for p in prompts[len(prompts) // 2:]:
+        eng.step()
+        rids.append(eng.submit(np.asarray(p), args.gen))
+    outputs = eng.drain(max_steps=10_000)
+    st = eng.stats()
+
+    ok = len(outputs) == args.requests
+    if not ok:
+        print(f"[engine] FAIL: {len(outputs)}/{args.requests} completed")
+    if eng.pool.used_blocks != 0:
+        ok = False
+        print(f"[engine] FAIL: {eng.pool.used_blocks} pool blocks leaked")
+
+    # chunked prefill is numerically approximate vs whole-prompt prefill
+    # (dynamic NVFP4 activation amaxes become chunk-granular), so strict
+    # token parity is only asserted in exact mode unless forced
+    check = (args.parity if args.parity is not None
+             else args.prefill_mode == "exact")
+    parity = None
+    if check:
+        parity = True
+        for rid, prompt in zip(rids, prompts):
+            # reference: single-request static batch on the engine's cfg
+            # (MoE archs force per-row dispatch)
+            ref, _ = serve_batch(eng.cfg, params, prompt[None], args.gen,
+                                 qcfg=qcfg)
+            if not np.array_equal(np.asarray(ref[0]), outputs[rid]):
+                parity = False
+                print(f"[engine] FAIL: request {rid} diverges from "
+                      f"serve_batch: {outputs[rid][:8].tolist()} vs "
+                      f"{np.asarray(ref[0][:8]).tolist()}")
+        ok = ok and parity
+
+    print(f"[engine] arch={cfg.name} requests={args.requests} "
+          f"prompts={args.min_prompt}..{args.max_prompt} gen={args.gen} "
+          f"slots={args.slots} pool={n_blocks}x{bs} "
+          f"prefill={args.prefill_mode}")
+    print(f"[engine] decode={st['decode_tok_s']:.1f} tok/s "
+          f"e2e={st['e2e_tok_s']:.1f} tok/s "
+          f"peak-pool-util={st['peak_utilization']:.2f} "
+          f"steps={st['steps']} "
+          f"parity={'AGREE' if parity else ('skipped' if parity is None else 'DISAGREE')} "
+          f"pool-drained={eng.pool.used_blocks == 0}")
+    return {"ok": ok, "outputs": outputs, "stats": st,
+            "tokens_match_serve_batch": parity, "n_blocks": n_blocks,
+            "pool_drained": eng.pool.used_blocks == 0}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -89,10 +188,25 @@ def build_parser() -> argparse.ArgumentParser:
                     default="qdq")
     ap.add_argument("--parity", action=argparse.BooleanOptionalAction,
                     default=None, help="packed mode: also run the QDQ path "
-                    "and compare greedy tokens (default: on)")
+                    "and compare greedy tokens; engine mode: compare each "
+                    "request against serve_batch (default: on)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    # --- continuous-batching engine mode ---
+    ap.add_argument("--engine", action="store_true",
+                    help="serve a mixed-length staggered workload through "
+                    "the repro.serve continuous-batching engine")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--min-prompt", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="pool blocks (0 = slots * blocks-per-request)")
+    ap.add_argument("--prefill-mode", choices=("exact", "chunked"),
+                    default="exact")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     return ap
 
 
@@ -112,13 +226,21 @@ def main(argv=None):
         print(f"[serve] weights: total={wr['total_bytes']/2**20:.2f}MiB, "
               f"all dense (qdq stores quantized values as BF16, 2 B/param)")
 
+    if args.engine:
+        res = run_engine(cfg, params, qcfg, args)
+        res["weights"] = wr
+        if not res["ok"]:
+            raise SystemExit(1)
+        return res
+
     prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 4,
                                  cfg.vocab_size)
     toks, stats = serve_batch(cfg, params, prompts, args.gen)
     print(f"[serve] arch={cfg.name} batch={args.batch} "
           f"format={args.weight_format} "
           f"prefill={stats['prefill_s']*1e3:.1f}ms "
-          f"decode={stats['decode_tok_s']:.1f} tok/s")
+          f"decode={stats['decode_tok_s']:.1f} tok/s "
+          f"e2e={stats['e2e_tok_s']:.1f} tok/s")
     print("[serve] sample:", toks[0, :12].tolist())
 
     result = {"tokens": toks, "stats": stats, "weights": wr}

@@ -81,6 +81,101 @@ def _abstract(specs, mesh, rules):
     return common.abstract_params(specs, shd.sharding_fn(mesh, rules))
 
 
+# ---------------------------------------------------------------------------
+# packed-NVFP4 abstract params (true 4-bit deployment footprint)
+# ---------------------------------------------------------------------------
+
+
+def packed_abstract_leaf(spec: common.ParamSpec, sfn=None):
+    """Abstract ``PackedNVFP4`` mirroring ``ptq._pack_along`` shape-for-shape.
+
+    Contraction axis moved last and padded to the NVFP4 block; codes pack two
+    E2M1 nibbles per byte, scales are E4M3 per 16 elements, and leading
+    layer-stack axes carry independent per-layer tensor scales.  Codes and
+    block scales shard by the spec's (moved) logical axes — the contraction
+    axis stays unsharded (the packed byte/block layout must not split a
+    16-element block across shards); the dequant-einsum backend handles the
+    rest under GSPMD.
+    """
+    from repro.core import ptq
+    from repro.core.nvfp4 import BLOCK, FP8_E4M3, PackedNVFP4
+
+    n_lead = ptq._n_stack_axes(spec)
+    ax = spec.contract_axis % len(spec.shape)
+    lead = tuple(d for i, d in enumerate(spec.shape) if i != ax)
+    lead_ax = tuple(a for i, a in enumerate(spec.axes) if i != ax)
+    k = spec.shape[ax]
+    kp = k + (-k) % BLOCK
+
+    def sds(shape, dtype, axes=None):
+        sh = (sfn(common.ParamSpec(shape, axes, dtype=dtype))
+              if sfn and axes is not None else None)
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+    ts_shape = ((*spec.shape[:n_lead], *(1,) * (1 + len(lead) - n_lead))
+                if n_lead else ())
+    return PackedNVFP4(
+        codes=sds((*lead, kp // 2), jnp.uint8, (*lead_ax, "none")),
+        scales=sds((*lead, kp // BLOCK), FP8_E4M3, (*lead_ax, "none")),
+        tensor_scale=sds(ts_shape, jnp.float32),
+        orig_k=k)
+
+
+def packed_param_abstract(cfg: ModelConfig, mesh=None, rules=None):
+    """Abstract param tree with ``PackedNVFP4`` leaves for every GEMM weight
+    the recipe quantizes — what ``ptq.quantize_weights(weight_format=
+    "packed")`` produces, as ShapeDtypeStructs.  The dry-run lowers serve
+    steps against this to price the 0.5625 B/param deployment footprint."""
+    model = get_model(cfg)
+    qcfg = recipe_qconfig(cfg)
+    sfn = shd.sharding_fn(mesh, rules) if mesh is not None else None
+
+    def one(spec):
+        if qcfg.quantizes(spec.kind):
+            return packed_abstract_leaf(spec, sfn)
+        sh = sfn(spec) if sfn else None
+        return jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sh)
+
+    return jax.tree.map(one, model.param_specs(cfg), is_leaf=common.is_spec)
+
+
+def serve_memory_report(cfg: ModelConfig, shape: ShapeConfig | None = None,
+                        n_blocks: int | None = None,
+                        block_size: int = 16) -> dict:
+    """Analytic deployment-memory pricing for one arch (+ optional shape).
+
+    Weights: packed NVFP4 (quantized GEMMs at ~0.5625 B/param, the rest
+    dense BF16) vs all-BF16.  KV: the recipe's cache dtype (FP8 + scales for
+    moe_hybrid) vs BF16, for the dense [B, S] cache of ``shape`` and — when
+    ``n_blocks`` is given — the engine's paged pool geometry.
+    """
+    model = get_model(cfg)
+    pspecs = model.param_specs(cfg)
+    report = {
+        "weight_bytes_bf16": common.spec_bytes(pspecs),
+        # spec_bytes works leaf-wise on ShapeDtypeStructs too
+        "weight_bytes_packed": common.spec_bytes(packed_param_abstract(cfg)),
+    }
+    if shape is not None and hasattr(model, "cache_specs"):
+        rec = model.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        bf = dataclasses.replace(cfg, quant_recipe="all")
+        bf16 = model.cache_specs(bf, shape.global_batch, shape.seq_len)
+        report["kv_bytes_recipe"] = common.spec_bytes(rec)
+        report["kv_bytes_bf16"] = common.spec_bytes(bf16)
+    if n_blocks is not None and cfg.family == "decoder":
+        from repro.models import decoder
+        report["kv_pool_bytes"] = common.spec_bytes(
+            decoder.paged_pool_specs(cfg, n_blocks, block_size))
+    if "kv_bytes_recipe" in report:
+        report["joint_bytes_deployed"] = (report["weight_bytes_packed"]
+                                          + report["kv_bytes_recipe"])
+        report["joint_bytes_bf16"] = (report["weight_bytes_bf16"]
+                                      + report["kv_bytes_bf16"])
+        report["joint_ratio"] = (report["joint_bytes_deployed"]
+                                 / max(report["joint_bytes_bf16"], 1))
+    return report
+
+
 def train_state_abstract(cfg: ModelConfig, mesh, rules,
                          opt: AdamW) -> qad.TrainState:
     model = get_model(cfg)
@@ -105,10 +200,18 @@ def train_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules, opt):
     return state, batch
 
 
-def serve_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
-    """(params, cache, batch) abstract trees for decode/prefill shapes."""
+def serve_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                 weight_format: str = "qdq"):
+    """(params, cache, batch) abstract trees for decode/prefill shapes.
+
+    ``weight_format="packed"`` swaps the dense BF16 weight structs for
+    ``PackedNVFP4`` abstract leaves, so the lowered serve step is priced at
+    the true 4-bit deployment footprint.
+    """
     model = get_model(cfg)
-    params = _abstract(model.param_specs(cfg), mesh, rules)
+    params = (packed_param_abstract(cfg, mesh, rules)
+              if weight_format == "packed"
+              else _abstract(model.param_specs(cfg), mesh, rules))
     batch = _abstract(batch_specs(cfg, shape), mesh, rules)
     cache = None
     if shape.kind == "decode":

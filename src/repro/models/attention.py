@@ -39,11 +39,18 @@ def repeat_kv(k, n_rep: int):
 
 def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
                         q_chunk: int = 1024, kv_chunk: int = 1024,
-                        q_offset: int = 0) -> jax.Array:
+                        q_offset=0, kv_valid=None) -> jax.Array:
     """q: [B,Sq,H,hd], k/v: [B,Sk,Hkv,hd] -> [B,Sq,H,hd].
 
     ``q_offset``: absolute position of q[0] (for prefill-continuation).
+    It may be a traced scalar (the engine's chunked prefill jits one step
+    function for every chunk offset).
     ``window`` > 0 masks keys older than ``window`` positions (local attn).
+    ``kv_valid``: optional (traced) count of valid key positions — keys at
+    ``k_pos >= kv_valid`` are masked.  Defaults to the static key length,
+    so callers may right-pad k/v to a fixed allocation and mask the tail;
+    fully-masked kv chunks are exact no-ops in the online softmax (their
+    probabilities underflow to 0.0 and the max statistic is unchanged).
     """
     b, sq0, h, hd = q.shape
     sk0, hkv = k.shape[1], k.shape[2]
@@ -80,7 +87,9 @@ def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
             # halves score/probability HBM traffic vs fp32 operands)
             s = jnp.einsum("bhqd,bhkd->bhqk", qi, ki,
                            preferred_element_type=jnp.float32) * scale
-            mask = jnp.broadcast_to(kpos[None, :] < sk0, (q_chunk, kv_chunk))
+            mask = jnp.broadcast_to(
+                kpos[None, :] < (sk0 if kv_valid is None else kv_valid),
+                (q_chunk, kv_chunk))
             if causal:
                 mask = mask & (qpos[:, None] >= kpos[None, :])
             if window:
@@ -199,6 +208,98 @@ def decode_attend(q, layer_cache, pos, *, window: int = 0):
     else:
         valid = slot < pos
     s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool (continuous-batching engine)
+#
+# The pool stores one layer's cache as [n_blocks, block_size, Hkv, hd]
+# (+ per-(slot-in-block, head) fp32 scales when FP8).  Requests own disjoint
+# block sets; a per-request block table maps logical position p to pool
+# location (table[p // block_size], p % block_size).  Unlike the dense
+# ring-buffer cache above there is no wraparound: the slot index inside the
+# gathered view IS the absolute position, so per-request masking is plain
+# position arithmetic.
+# ---------------------------------------------------------------------------
+
+
+def paged_update_layer(pool_sl, k_new, v_new, block_tables, positions, active):
+    """Scatter one new KV per batch row into a paged pool layer slice.
+
+    pool_sl: {"k","v": [n_blocks, bs, Hkv, hd], optional "k_scale"/"v_scale"
+    [n_blocks, bs, Hkv]}.  k_new/v_new: [B, 1, Hkv, hd].  positions: [B]
+    absolute write positions; active: [B] bool — inactive rows scatter out of
+    bounds and are dropped (never corrupting live blocks).  FP8 pools
+    quantize through the same ``_quant_kv`` as the dense cache path, so a
+    paged request's stored values match the static-batch cache bit for bit.
+    """
+    n_blocks, bs = pool_sl["k"].shape[:2]
+    blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None],
+                              axis=1)[:, 0]
+    blk = jnp.where(active, blk, n_blocks)          # OOB -> dropped
+    off = positions % bs
+    out = dict(pool_sl)
+    if pool_sl.get("k_scale") is not None:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        out["k"] = pool_sl["k"].at[blk, off].set(kq[:, 0], mode="drop")
+        out["v"] = pool_sl["v"].at[blk, off].set(vq[:, 0], mode="drop")
+        out["k_scale"] = pool_sl["k_scale"].at[blk, off].set(ks[:, 0],
+                                                             mode="drop")
+        out["v_scale"] = pool_sl["v_scale"].at[blk, off].set(vs[:, 0],
+                                                             mode="drop")
+    else:
+        dt = pool_sl["k"].dtype
+        out["k"] = pool_sl["k"].at[blk, off].set(k_new[:, 0].astype(dt),
+                                                 mode="drop")
+        out["v"] = pool_sl["v"].at[blk, off].set(v_new[:, 0].astype(dt),
+                                                 mode="drop")
+    return out
+
+
+def paged_gather_layer(pool_sl, block_tables, dtype=jnp.bfloat16):
+    """Gather per-request dense KV views [B, MB*bs, Hkv, hd] from the pool.
+
+    block_tables: [B, MB] pool block ids (entries for unallocated logical
+    blocks may be arbitrary in-range ids — callers mask by position).
+    """
+    b, mb = block_tables.shape
+    def dense(name):
+        g = pool_sl[name][block_tables]               # [B, MB, bs, ...]
+        return g.reshape(b, mb * g.shape[2], *g.shape[3:])
+    if pool_sl.get("k_scale") is not None:
+        return (_dequant_kv(dense("k"), dense("k_scale"), dtype),
+                _dequant_kv(dense("v"), dense("v_scale"), dtype))
+    return dense("k").astype(dtype), dense("v").astype(dtype)
+
+
+def paged_attend(q, pool_sl, block_tables, pos, *, window: int = 0):
+    """One-token decode against the paged pool: q [B,1,H,hd].
+
+    ``pos``: [B] per-request valid lengths (the new token's KV must already
+    be written).  Numerically this is ``decode_attend`` with a per-row
+    validity mask: masked positions reach the softmax as exp(-1e30-...) = 0
+    exactly, so a request's probabilities are identical however many pool
+    blocks its table addresses.  ``window`` masks by absolute position (the
+    pool keeps every block live for simplicity — no ring buffer).
+    """
+    k, v = paged_gather_layer(pool_sl, block_tables, q.dtype)
+    b, s_alloc, hkv, hd = k.shape
+    h = q.shape[2]
+    k = repeat_kv(k, h // hkv)
+    v = repeat_kv(v, h // hkv)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    slot = jnp.arange(s_alloc)
+    valid = slot[None, :] < pos[:, None]              # [B, S_alloc]
+    if window:
+        valid = valid & (slot[None, :] >= pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, -1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v,
                      preferred_element_type=jnp.float32)

@@ -81,6 +81,12 @@ def param_count(specs) -> int:
     return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=is_spec))
 
 
+def spec_bytes(specs) -> int:
+    """Total bytes of a ParamSpec tree (abstract pricing — no allocation)."""
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
 def weight_stats(params) -> dict:
     """Weight-memory accounting over a (possibly mixed) parameter pytree.
 

@@ -275,6 +275,195 @@ def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
     return logits, new_cache
 
 
+# ---------------------------------------------------------------------------
+# paged-pool forwards (continuous-batching engine, repro.serve)
+# ---------------------------------------------------------------------------
+
+
+def paged_pool_specs(cfg, n_blocks: int, block_size: int):
+    """ParamSpecs for the block-granular KV pool shared by all requests.
+
+    Layout [L, n_blocks, block_size, Hkv, hd]; FP8 pools (moe_hybrid recipe)
+    carry per-(slot, head) fp32 scales next to the E4M3 pages, exactly like
+    the dense cache.  Also used abstractly by the dry-run to price the pool.
+    """
+    P = common.ParamSpec
+    fp8 = _kv_fp8(cfg)
+    kdt = jnp.float8_e4m3fn if fp8 else jnp.bfloat16
+    shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("layers", "blocks", "blockslot", "kv", "headdim")
+    c = {"k": P(shape, axes, dtype=kdt, init="zeros"),
+         "v": P(shape, axes, dtype=kdt, init="zeros")}
+    if fp8:
+        c["k_scale"] = P(shape[:-1], axes[:-1], dtype=jnp.float32,
+                         init="zeros")
+        c["v_scale"] = P(shape[:-1], axes[:-1], dtype=jnp.float32,
+                         init="zeros")
+    return c
+
+
+def init_paged_pool(cfg, n_blocks: int, block_size: int):
+    return common.zeros_from_specs(paged_pool_specs(cfg, n_blocks, block_size))
+
+
+def prefill_scratch_specs(cfg, s_alloc: int):
+    """BF16 per-layer KV scratch for one request's chunked prefill.
+
+    Chunked prefill must attend the BF16 prompt prefix (whole-prompt prefill
+    quantizes the cache only AFTER blockwise attention ran on BF16 KV), so
+    the in-flight request keeps its prefix here; the pool gets the
+    (possibly FP8) copy for later decode reads.
+    """
+    P = common.ParamSpec
+    shape = (cfg.n_layers, 1, s_alloc, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("layers", "batch", "seq", "kv", "headdim")
+    return {"k": P(shape, axes, dtype=jnp.bfloat16, init="zeros"),
+            "v": P(shape, axes, dtype=jnp.bfloat16, init="zeros")}
+
+
+def write_prompt_to_pool(pool, cache, block_ids):
+    """Scatter a batch=1 ``prefill`` cache (logical length P) into pool blocks.
+
+    ``cache``: the dict ``prefill(..., s_max=None)`` returns, minus "pos";
+    ``block_ids``: [ceil(P / block_size)] pool block ids.  Tail positions of
+    the last block are zero-filled (masked by the request length at read).
+    """
+    bs = pool["k"].shape[2]
+    out = dict(pool)
+    ids = jnp.asarray(block_ids, jnp.int32)
+    for name in [k for k in pool if k in cache]:
+        c = cache[name]                               # [L, 1, P, ...]
+        l, _, p_len = c.shape[:3]
+        pad = (-p_len) % bs
+        if pad:
+            c = jnp.pad(c, [(0, 0), (0, 0), (0, pad)]
+                        + [(0, 0)] * (c.ndim - 3))
+        blocks = c[:, 0].reshape(l, (p_len + pad) // bs, bs, *c.shape[3:])
+        out[name] = pool[name].at[:, ids].set(blocks.astype(pool[name].dtype))
+    return out
+
+
+def _attention_paged(qcfg, cfg, p, h, pos, psl, block_tables, lens, active):
+    b, s, _ = h.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"))
+    q, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
+    q = _rope(cfg, attn.split_heads(q, nh, hd), pos)
+    k = _rope(cfg, attn.split_heads(k, nkv, hd), pos)
+    v = attn.split_heads(v, nkv, hd)
+    new_psl = attn.paged_update_layer(psl, k, v, block_tables, lens, active)
+    out = attn.paged_attend(q, new_psl, block_tables, lens + 1,
+                            window=cfg.window)
+    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"]),
+              ("batch", "seq", "none"))
+    return out, new_psl
+
+
+def decode_step_paged(cfg, params, pool, block_tables, lens, active, batch,
+                      qcfg: QuantConfig):
+    """One-token decode for a slot batch against the paged KV pool.
+
+    batch["tokens"]: [n_slots, 1]; block_tables: [n_slots, MB] pool block
+    ids; lens: [n_slots] cached-token counts; active: [n_slots] bool.
+    Inactive slots compute garbage logits (the engine ignores them) but
+    their pool writes are dropped, so live blocks are never corrupted.
+    Returns (logits [n_slots, 1, V], new_pool).
+    """
+    if cfg.mrope_sections:
+        raise NotImplementedError("paged decode does not support M-RoPE")
+    x = _embed_inputs(cfg, params, batch)
+    pos = lens[:, None]                               # per-slot RoPE positions
+
+    def body(qc):
+        def fn(carry, inp):
+            p, psl = inp
+            h = run_norm(cfg, p["ln1"], carry)
+            a, new_psl = _attention_paged(qc, cfg, p, h, pos, psl,
+                                          block_tables, lens, active)
+            y = carry + a
+            h = run_norm(cfg, p["ln2"], y)
+            f, _ = _ffn(qc, cfg, p, h)
+            return y + f, new_psl
+        return fn
+
+    x, new_pool = common.scan_layers(
+        body, x, params["layers"], pool, qcfg,
+        qcfg.skip_first_layers, qcfg.skip_last_layers, "none")
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    return logits, new_pool
+
+
+def _attention_prefill_chunk(qcfg, cfg, p, h, pos, ssl, psl, bt, positions,
+                             tok_active, start, n_valid):
+    b, c, _ = h.shape                                 # b == 1
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"))
+    q, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
+    q = _rope(cfg, attn.split_heads(q, nh, hd), pos)
+    k = _rope(cfg, attn.split_heads(k, nkv, hd), pos)
+    v = attn.split_heads(v, nkv, hd)
+    new_ssl = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            ssl["k"], k.astype(ssl["k"].dtype), start, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            ssl["v"], v.astype(ssl["v"].dtype), start, axis=1),
+    }
+    out = attn.blockwise_attention(q, new_ssl["k"], new_ssl["v"], causal=True,
+                                   window=cfg.window, q_offset=start,
+                                   kv_valid=start + n_valid)
+    # pool copy (FP8 pools quantize here) for later decode reads; one write
+    # per chunk token, pad tokens dropped
+    new_psl = attn.paged_update_layer(psl, k.swapaxes(0, 1), v.swapaxes(0, 1),
+                                      bt, positions, tok_active)
+    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, c, nh * hd), p["wo"]),
+              ("batch", "seq", "none"))
+    return out, new_ssl, new_psl
+
+
+def prefill_chunk_paged(cfg, params, scratch, pool, block_table, start,
+                        n_valid, batch, qcfg: QuantConfig):
+    """Prefill one fixed-size prompt chunk for a single request.
+
+    batch["tokens"]: [1, C] (the chunk, right-padded past ``n_valid``);
+    ``scratch``: BF16 prefix KV (see ``prefill_scratch_specs``);
+    ``block_table``: [MB] this request's pool blocks; ``start``: tokens
+    already prefilled (traced); ``n_valid``: valid tokens in this chunk
+    (traced, 1..C).  Returns (logits at the last valid position [1, 1, V],
+    new_scratch, new_pool).  Shapes are static across chunks and requests,
+    so the engine compiles this once per chunk size.
+    """
+    if cfg.mrope_sections:
+        raise NotImplementedError("paged prefill does not support M-RoPE")
+    x = _embed_inputs(cfg, params, batch)
+    c = x.shape[1]
+    pos = (jnp.arange(c) + start)[None, :]            # [1, C]
+    positions = start + jnp.arange(c)                 # [C] pool positions
+    tok_active = jnp.arange(c) < n_valid
+    bt = jnp.broadcast_to(block_table[None, :], (c, block_table.shape[0]))
+
+    def body(qc):
+        def fn(carry, inp):
+            p, (ssl, psl) = inp
+            h = run_norm(cfg, p["ln1"], carry)
+            a, new_ssl, new_psl = _attention_prefill_chunk(
+                qc, cfg, p, h, pos, ssl, psl, bt, positions, tok_active,
+                start, n_valid)
+            y = carry + a
+            h = run_norm(cfg, p["ln2"], y)
+            f, _ = _ffn(qc, cfg, p, h)
+            return y + f, (new_ssl, new_psl)
+        return fn
+
+    x, (new_scratch, new_pool) = common.scan_layers(
+        body, x, params["layers"], (scratch, pool), qcfg,
+        qcfg.skip_first_layers, qcfg.skip_last_layers, "none")
+    x = run_norm(cfg, params["final_norm"], x)
+    x_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = layers.qdense(qcfg, "lm_head", x_last, unembed(cfg, params))
+    return logits, new_scratch, new_pool
+
+
 def prefill(cfg, params, batch, qcfg: QuantConfig, s_max: int | None = None):
     """Prompt pass: returns (last-token logits, populated cache)."""
     x = _embed_inputs(cfg, params, batch)

@@ -1,0 +1,25 @@
+"""Continuous-batching serving engine on top of packed NVFP4 weights.
+
+The subsystem between the model forwards and the CLI:
+
+  * ``paged_kv``  — block-granular KV cache pool (BF16 or FP8-with-scales)
+                    with per-request block tables and a host-side allocator
+  * ``scheduler`` — request admission / slot assignment / retirement
+  * ``sampling``  — greedy, temperature, top-k with per-request seeds
+  * ``engine``    — the ``submit / step / drain`` facade wiring jitted paged
+                    decode + prefill steps to the scheduler
+
+Quickstart::
+
+    from repro.serve import Engine, Request, SamplingParams
+    eng = Engine(cfg, params, qcfg)
+    eng.submit(prompt_tokens, max_new_tokens=16)
+    outputs = eng.drain()          # {request id: generated tokens}
+"""
+from .engine import Engine
+from .paged_kv import PagedKVPool
+from .sampling import SamplingParams, sample_tokens
+from .scheduler import Request, Scheduler
+
+__all__ = ["Engine", "PagedKVPool", "Request", "SamplingParams",
+           "Scheduler", "sample_tokens"]

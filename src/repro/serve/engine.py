@@ -1,0 +1,294 @@
+"""The continuous-batching engine facade: ``submit`` / ``step`` / ``drain``.
+
+One ``step()`` = (admission + prefill under a token budget) + one jitted
+batched decode over the active slots.  All device computation happens in a
+fixed set of compiled functions with static shapes:
+
+  * decode — ``decoder.decode_step_paged`` over [n_slots, 1] tokens against
+    the paged pool (compiled once),
+  * prefill — either "exact" mode (``decoder.prefill`` at the request's own
+    prompt length: bit-identical to the static ``serve_batch`` path,
+    compiled once per distinct prompt length) or "chunked" mode
+    (``decoder.prefill_chunk_paged`` at a fixed chunk size: compiled once,
+    interleaves long prompts across steps; numerically *approximate* vs
+    whole-prompt prefill because dynamic NVFP4 activation amaxes become
+    chunk-granular),
+  * sampling — ``sampling.sample_tokens`` (compiled once).
+
+Requests are numerically independent: the engine serves with
+``act_scope="row"`` activation scales (see ``core.qconfig``), per-request
+RoPE positions / attention masks, and — for MoE archs — per-row ("local")
+expert dispatch, so a request's tokens match a single-request static
+``serve_batch`` run regardless of co-scheduled traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common, decoder
+
+from .paged_kv import PagedKVPool
+from .sampling import SamplingParams, sample_tokens_seeded
+from .scheduler import RUNNING, Request, Scheduler
+
+
+class Engine:
+    """Continuous-batching serving engine over a paged KV pool.
+
+    ``qcfg`` is the (recipe) quantization policy the weights were prepared
+    with — e.g. the second return of ``launch.serve.load_quantized``; the
+    engine derives the serving config from it (runtime weight fake-quant
+    off, per-row activation scales).  Defaults cover smoke scale; size
+    ``n_blocks`` / ``n_slots`` to the deployment.
+    """
+
+    def __init__(self, cfg, params, qcfg=None, *, n_slots: int = 8,
+                 block_size: int = 16, n_blocks: int = 48,
+                 max_blocks_per_slot: int = 8,
+                 prefill_mode: str = "exact", prefill_chunk: int = 8,
+                 prefill_budget: int | None = None, eos_id: int | None = None):
+        if cfg.family != "decoder":
+            raise ValueError(f"engine supports the decoder family only "
+                             f"(paged KV); got {cfg.family!r}")
+        if cfg.mrope_sections:
+            raise ValueError("engine does not support M-RoPE archs")
+        if prefill_mode not in ("exact", "chunked"):
+            raise ValueError(prefill_mode)
+        if cfg.n_experts and cfg.moe_dispatch != "local":
+            # per-row dispatch makes MoE routing independent of co-batched
+            # requests — a hard requirement for continuous batching
+            cfg = dataclasses.replace(cfg, moe_dispatch="local")
+        self.cfg = cfg
+        self.params = params
+        if qcfg is None:
+            from repro.launch import specs
+            qcfg = specs.recipe_qconfig(cfg)
+        self.sq = dataclasses.replace(qcfg, quantize_weights=False,
+                                      act_scope="row")
+
+        self.n_slots = n_slots
+        self.max_blocks_per_slot = max_blocks_per_slot
+        self.s_alloc = max_blocks_per_slot * block_size
+        self.prefill_mode = prefill_mode
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget or max(self.s_alloc,
+                                                    prefill_chunk)
+        self.eos_id = eos_id
+
+        self.pool = PagedKVPool(
+            decoder.init_paged_pool(cfg, n_blocks, block_size), block_size)
+        self.sched = Scheduler(self.pool, n_slots, max_blocks_per_slot)
+        self.scratch = (common.zeros_from_specs(
+            decoder.prefill_scratch_specs(cfg, self.s_alloc))
+            if prefill_mode == "chunked" else None)
+
+        self._decode = jax.jit(
+            lambda params, pool, bt, lens, active, toks:
+            decoder.decode_step_paged(self.cfg, params, pool, bt, lens,
+                                      active, {"tokens": toks}, self.sq),
+            donate_argnums=(1,))
+        self._chunk = jax.jit(
+            lambda params, scratch, pool, bt, start, n_valid, toks:
+            decoder.prefill_chunk_paged(self.cfg, params, scratch, pool, bt,
+                                        start, n_valid, {"tokens": toks},
+                                        self.sq),
+            donate_argnums=(1, 2))
+        self._sample = jax.jit(sample_tokens_seeded)
+        self._prefill_fns: dict[int, object] = {}
+        self._write_fns: dict[int, object] = {}
+
+        self.step_count = 0
+        self.decode_steps = 0
+        self.tokens_generated = 0
+        self.decode_tokens = 0
+        self.prefill_tokens = 0
+        self.decode_s = 0.0
+        self.prefill_s = 0.0
+
+    # -- public API --------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               sampling: SamplingParams | None = None) -> int:
+        """Queue a request; returns its id.  Admission happens in step()."""
+        req = self.sched.submit(prompt, max_new_tokens, sampling,
+                                step=self.step_count)
+        return req.rid
+
+    def step(self) -> list[Request]:
+        """Advance the engine by one scheduling round.
+
+        Admits + prefills queued requests under ``prefill_budget`` tokens,
+        then runs one batched decode step for all running slots.  Returns
+        the requests that finished during this step.
+        """
+        finished: list[Request] = []
+        self._do_prefills(finished)
+        self._do_decode(finished)
+        self.step_count += 1
+        return finished
+
+    def drain(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
+        """Run ``step()`` until no request is waiting or in flight."""
+        steps = 0
+        while self.sched.has_work():
+            if max_steps is not None and steps >= max_steps:
+                raise RuntimeError(f"drain exceeded {max_steps} steps")
+            self.step()
+            steps += 1
+        return self.outputs()
+
+    def outputs(self) -> dict[int, np.ndarray]:
+        return {rid: np.asarray(r.output, np.int32)
+                for rid, r in self.sched.finished.items()}
+
+    def stats(self) -> dict:
+        d = {"steps": self.step_count, "decode_steps": self.decode_steps,
+             "requests_finished": len(self.sched.finished),
+             "tokens_generated": self.tokens_generated,
+             "prefill_tokens": self.prefill_tokens,
+             "prefill_s": self.prefill_s, "decode_s": self.decode_s,
+             "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
+             "e2e_tok_s": self.tokens_generated
+             / max(self.decode_s + self.prefill_s, 1e-9)}
+        d.update(self.pool.stats())
+        return d
+
+    # -- prefill -----------------------------------------------------------
+
+    def _do_prefills(self, finished: list[Request]) -> None:
+        budget = self.prefill_budget
+        t0 = time.time()
+        while budget > 0:
+            req = self._in_flight_prefill()
+            if req is None:
+                req = self.sched.admit_next()
+            if req is None:
+                break
+            if self.prefill_mode == "exact":
+                if req.prompt_len > budget and budget < self.prefill_budget:
+                    break                  # defer to next step; never livelock
+                logits = self._prefill_exact(req)
+                used = req.prompt_len
+            else:
+                logits, used = self._prefill_chunked(req, budget)
+            budget -= used
+            self.prefill_tokens += used
+            if logits is None:
+                break                      # budget ran out mid-prompt
+            self._emit(req, self._sample_one(req, logits), finished)
+        self.prefill_s += time.time() - t0
+
+    def _in_flight_prefill(self) -> Request | None:
+        """An admitted request whose prefill hasn't completed (chunked mode
+        mid-prompt, or an exact-mode admission deferred by the budget)."""
+        for r in self.sched.in_flight():
+            if r.state == "prefill":
+                return r
+        return None
+
+    def _prefill_exact(self, req: Request) -> jax.Array:
+        p = req.prompt_len
+        if p not in self._prefill_fns:
+            self._prefill_fns[p] = jax.jit(
+                lambda params, toks: decoder.prefill(
+                    self.cfg, params, {"tokens": toks}, self.sq, s_max=None))
+            self._write_fns[p] = jax.jit(decoder.write_prompt_to_pool,
+                                         donate_argnums=(0,))
+        logits, cache = self._prefill_fns[p](self.params,
+                                             jnp.asarray(req.prompt[None]))
+        cache = {k: v for k, v in cache.items() if k != "pos"}
+        ids = np.asarray(req.block_ids[: self.pool.blocks_for(p)], np.int32)
+        self.pool.data = self._write_fns[p](self.pool.data, cache,
+                                            jnp.asarray(ids))
+        req.n_prefilled = req.n_cached = p
+        return logits[:, -1, :]
+
+    def _prefill_chunked(self, req: Request, budget: int):
+        """Advance chunked prefill by up to ``budget`` tokens; returns
+        (last-position logits [1, V] | None, tokens consumed)."""
+        c = self.prefill_chunk
+        consumed, logits = 0, None
+        bt = np.zeros((self.max_blocks_per_slot,), np.int32)
+        bt[: len(req.block_ids)] = req.block_ids
+        bt = jnp.asarray(bt)
+        while req.n_prefilled < req.prompt_len and consumed < budget:
+            n_valid = min(c, req.prompt_len - req.n_prefilled)
+            toks = np.zeros((1, c), np.int32)
+            toks[0, :n_valid] = req.prompt[req.n_prefilled:
+                                           req.n_prefilled + n_valid]
+            lg, self.scratch, self.pool.data = self._chunk(
+                self.params, self.scratch, self.pool.data, bt,
+                jnp.asarray(req.n_prefilled, jnp.int32),
+                jnp.asarray(n_valid, jnp.int32), jnp.asarray(toks))
+            req.n_prefilled += n_valid
+            req.n_cached = req.n_prefilled
+            consumed += n_valid
+            if req.n_prefilled >= req.prompt_len:
+                logits = lg[:, -1, :]
+        return logits, consumed
+
+    # -- decode ------------------------------------------------------------
+
+    def _do_decode(self, finished: list[Request]) -> None:
+        reqs = self.sched.running()
+        if not reqs:
+            return
+        t0 = time.time()
+        ns, mb = self.n_slots, self.max_blocks_per_slot
+        toks = np.zeros((ns, 1), np.int32)
+        lens = np.zeros((ns,), np.int32)
+        active = np.zeros((ns,), bool)
+        bt = np.zeros((ns, mb), np.int32)
+        temps = np.zeros((ns,), np.float32)
+        topks = np.zeros((ns,), np.int32)
+        seeds = np.zeros((ns,), np.int32)
+        idxs = np.zeros((ns,), np.int32)
+        for r in reqs:
+            s = r.slot
+            toks[s, 0] = r.next_input_token()
+            lens[s] = r.n_cached
+            active[s] = True
+            bt[s, : len(r.block_ids)] = r.block_ids
+            temps[s] = r.sampling.temperature
+            topks[s] = r.sampling.top_k
+            seeds[s] = r.sampling.seed
+            idxs[s] = len(r.output)
+        logits, self.pool.data = self._decode(
+            self.params, self.pool.data, jnp.asarray(bt), jnp.asarray(lens),
+            jnp.asarray(active), jnp.asarray(toks))
+        sampled = np.asarray(self._sample(logits[:, 0, :], jnp.asarray(temps),
+                                          jnp.asarray(topks),
+                                          jnp.asarray(seeds),
+                                          jnp.asarray(idxs)))
+        self.decode_s += time.time() - t0
+        self.decode_steps += 1
+        self.decode_tokens += len(reqs)
+        for r in reqs:
+            r.n_cached += 1
+            self._emit(r, int(sampled[r.slot]), finished)
+
+    # -- shared ------------------------------------------------------------
+
+    def _sample_one(self, req: Request, logits: jax.Array) -> int:
+        req.state = RUNNING
+        tok = self._sample(
+            logits, jnp.asarray([req.sampling.temperature], jnp.float32),
+            jnp.asarray([req.sampling.top_k], jnp.int32),
+            jnp.asarray([req.sampling.seed], jnp.int32),
+            jnp.asarray([len(req.output)], jnp.int32))
+        return int(tok[0])
+
+    def _emit(self, req: Request, tok: int, finished: list[Request]) -> None:
+        req.output.append(tok)
+        self.tokens_generated += 1
+        if self.eos_id is not None and tok == self.eos_id:
+            self.sched.finish(req, "eos", self.step_count)
+            finished.append(req)
+        elif len(req.output) >= req.max_new_tokens:
+            self.sched.finish(req, "length", self.step_count)
+            finished.append(req)

@@ -1,0 +1,96 @@
+"""Paged KV cache pool: fixed block inventory shared by all requests.
+
+The pool owns the device tensors ([L, n_blocks, block_size, Hkv, hd] per
+K/V, plus fp32 scale planes for FP8 layouts) and a host-side free-list
+allocator.  Requests hold disjoint block sets; the engine passes per-slot
+block tables into the jitted paged forwards (``repro.models.decoder``),
+which gather/scatter through them.  Allocation and free are host-side and
+O(blocks); the device tensors never reallocate, so jitted step shapes stay
+static for the life of the engine.
+
+Admission is capacity-based: a request reserves its worst-case block count
+(prompt + generation budget) up front, so decode can never run out of pool
+mid-flight and no preemption path is needed.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+class PoolExhausted(RuntimeError):
+    """Raised by ``alloc`` when the pool cannot satisfy a reservation."""
+
+
+class PagedKVPool:
+    """Block allocator + device storage for the paged KV cache.
+
+    ``data`` is a dict of device arrays (leading dims [L, n_blocks,
+    block_size]): "k"/"v" pages and, for FP8 layouts, "k_scale"/"v_scale"
+    fp32 planes — FP8 pages always travel with their scales.  The engine
+    replaces ``data`` wholesale after each jitted step (buffers are donated).
+    """
+
+    def __init__(self, data: dict, block_size: int):
+        self.data = data
+        self.block_size = int(block_size)
+        self.n_blocks = int(data["k"].shape[1])
+        assert data["k"].shape[2] == block_size, (data["k"].shape, block_size)
+        self._free = list(range(self.n_blocks - 1, -1, -1))
+        self._free_set = set(self._free)
+        self.peak_used = 0
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def fp8(self) -> bool:
+        return "k_scale" in self.data
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_blocks / max(self.n_blocks, 1)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.block_size))
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in jax.tree.leaves(self.data))
+
+    # -- alloc / free ------------------------------------------------------
+
+    def alloc(self, n: int) -> list[int]:
+        if not self.can_alloc(n):
+            raise PoolExhausted(
+                f"need {n} blocks, {len(self._free)} free of {self.n_blocks}")
+        ids = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(ids)
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return ids
+
+    def free(self, ids: list[int]) -> None:
+        for b in ids:
+            if not (0 <= b < self.n_blocks):
+                raise ValueError(f"block id {b} out of range")
+            if b in self._free_set:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)
+            self._free_set.add(b)
+
+    def stats(self) -> dict:
+        return {"n_blocks": self.n_blocks, "block_size": self.block_size,
+                "used_blocks": self.used_blocks,
+                "peak_used_blocks": self.peak_used,
+                "utilization": self.utilization(),
+                "peak_utilization": self.peak_used / max(self.n_blocks, 1),
+                "fp8": self.fp8, "pool_bytes": self.nbytes()}

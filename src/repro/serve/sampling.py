@@ -1,0 +1,74 @@
+"""Per-request sampling: greedy, temperature, top-k, deterministic seeds.
+
+One vectorized ``sample_tokens`` covers the whole slot batch: every request
+carries its own (temperature, top_k, seed) and the engine folds the
+request's generation index into its seed, so a request samples the same
+tokens wherever and whenever its decode steps land — scheduling order,
+co-batched neighbors, and slot assignment cannot change its output.
+
+``temperature == 0`` is exact greedy (``jnp.argmax``, bit-identical to the
+static ``serve_batch`` path).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 -> greedy
+    top_k: int = 0               # 0 -> full vocabulary
+    seed: int = 0                # per-request; folded with the token index
+
+
+def request_key(params: SamplingParams, token_index: int) -> jax.Array:
+    """Deterministic PRNG key for one request's ``token_index``-th sample."""
+    return jax.random.fold_in(jax.random.PRNGKey(params.seed), token_index)
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, keys: jax.Array) -> jax.Array:
+    """logits [B, V], temperature [B] f32, top_k [B] i32, keys [B] PRNG keys
+    -> sampled token ids [B] i32.
+
+    Rows with temperature <= 0 take the argmax; otherwise logits outside the
+    row's top-k (top_k <= 0 means all V) are masked to -inf and a categorical
+    draw is taken at the row's temperature with the row's key.  The sort /
+    draw branch is skipped at runtime when the whole batch is greedy (the
+    engine's default), so pure-greedy decode never pays the O(V log V) mask.
+    """
+    v = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    def draw(_):
+        k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+        sorted_desc = jnp.sort(lf, axis=-1)[:, ::-1]
+        thresh = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None],
+                                     axis=1)
+        masked = jnp.where(lf >= thresh, lf, -jnp.inf)
+        scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+        drawn = jax.vmap(jax.random.categorical)(keys,
+                                                 scaled).astype(jnp.int32)
+        return jnp.where(temperature > 0, drawn, greedy)
+
+    return jax.lax.cond(jnp.any(temperature > 0), draw, lambda _: greedy,
+                        None)
+
+
+def fold_keys(seeds: jax.Array, token_idx: jax.Array) -> jax.Array:
+    """[B] request seeds + [B] generation indices -> [B] PRNG keys."""
+    return jax.vmap(lambda s, i: jax.random.fold_in(jax.random.PRNGKey(s), i)
+                    )(seeds, token_idx)
+
+
+def sample_tokens_seeded(logits: jax.Array, temperature: jax.Array,
+                         top_k: jax.Array, seeds: jax.Array,
+                         token_idx: jax.Array) -> jax.Array:
+    """``sample_tokens`` with the per-request key derivation done inside the
+    jitted computation (one dispatch per decode step instead of per slot)."""
+    return sample_tokens(logits, temperature, top_k,
+                         fold_keys(seeds, token_idx))

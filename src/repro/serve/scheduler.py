@@ -1,0 +1,159 @@
+"""Request lifecycle + slot scheduling for the continuous-batching engine.
+
+Requests move WAITING -> PREFILL -> RUNNING -> FINISHED.  The scheduler owns
+a fixed set of decode slots (the static batch rows of the jitted decode
+step) and the admission policy:
+
+  * FIFO, head-of-line: requests are admitted in arrival order; the queue
+    head waits until a slot AND its worst-case block reservation are both
+    available (no small-request bypass, so admission order is predictable
+    and starvation-free).
+  * Capacity-based: a request reserves ceil((P + max_new - 1) / block_size)
+    pool blocks up front — P prompt positions plus one cache slot for every
+    generated token except the last (whose KV is never attended).  Decode
+    therefore never exhausts the pool mid-flight and no preemption path is
+    needed.
+
+Retiring a request (EOS, token budget) frees its slot and blocks the same
+step, so the next queued request backfills on the following ``step()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from .paged_kv import PagedKVPool
+from .sampling import SamplingParams
+
+WAITING, PREFILL, RUNNING, FINISHED = "waiting", "prefill", "running", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its runtime bookkeeping."""
+
+    rid: int
+    prompt: np.ndarray                    # [P] int32
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+
+    state: str = WAITING
+    slot: Optional[int] = None
+    block_ids: list = dataclasses.field(default_factory=list)
+    n_prefilled: int = 0                  # prompt tokens processed so far
+    n_cached: int = 0                     # KV positions written to the pool
+    output: list = dataclasses.field(default_factory=list)
+    finish_reason: str = ""
+    submit_step: int = -1
+    finish_step: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def max_cached(self) -> int:
+        # the last generated token is returned but its KV is never attended
+        return self.prompt_len + self.max_new_tokens - 1
+
+    @property
+    def done(self) -> bool:
+        return self.state == FINISHED
+
+    def next_input_token(self) -> int:
+        """The token the next decode step feeds for this request."""
+        return int(self.output[-1])
+
+
+class Scheduler:
+    def __init__(self, pool: PagedKVPool, n_slots: int,
+                 max_blocks_per_slot: int):
+        self.pool = pool
+        self.n_slots = n_slots
+        self.max_blocks_per_slot = max_blocks_per_slot
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self.waiting: deque[Request] = deque()
+        self.finished: dict[int, Request] = {}
+        self._rid = itertools.count()
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               sampling: SamplingParams | None = None, step: int = -1) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req = Request(rid=next(self._rid), prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      sampling=sampling or SamplingParams(), submit_step=step)
+        need = self.pool.blocks_for(req.max_cached)
+        if need > self.max_blocks_per_slot or need > self.pool.n_blocks:
+            raise ValueError(
+                f"request needs {need} blocks > "
+                f"max_blocks_per_slot={self.max_blocks_per_slot} or "
+                f"pool capacity={self.pool.n_blocks} "
+                f"(prompt {req.prompt_len} + gen {max_new_tokens}); "
+                "it could never be admitted")
+        self.waiting.append(req)
+        return req
+
+    # -- admission ---------------------------------------------------------
+
+    def free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def admit_next(self) -> Optional[Request]:
+        """Admit the queue head if a slot + its block reservation fit.
+
+        Returns the admitted request (state PREFILL, blocks allocated) or
+        None — either the queue is empty or capacity refuses admission.
+        """
+        if not self.waiting:
+            return None
+        slot = self.free_slot()
+        if slot is None:
+            return None
+        req = self.waiting[0]
+        need = self.pool.blocks_for(req.max_cached)
+        if not self.pool.can_alloc(need):
+            return None
+        self.waiting.popleft()
+        req.block_ids = self.pool.alloc(need)
+        req.slot = slot
+        req.state = PREFILL
+        self.slots[slot] = req
+        return req
+
+    # -- retirement --------------------------------------------------------
+
+    def finish(self, req: Request, reason: str, step: int = -1) -> None:
+        req.state = FINISHED
+        req.finish_reason = reason
+        req.finish_step = step
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            req.slot = None
+        if req.block_ids:
+            self.pool.free(req.block_ids)
+            req.block_ids = []
+        self.finished[req.rid] = req
+
+    # -- views -------------------------------------------------------------
+
+    def running(self) -> list[Request]:
+        return [r for r in self.slots if r is not None and r.state == RUNNING]
+
+    def in_flight(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(r is not None for r in self.slots)
