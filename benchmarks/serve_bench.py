@@ -4,10 +4,13 @@ continuous-batching engine.
 Runs the real serving driver (prefill + greedy decode) at smoke scale in
 both weight formats across a dense, a MoE, and a recurrent arch, prices
 the full-scale joint memory win (packed 0.5625 B/param weights + the
-recipe's FP8-vs-BF16 KV cache at decode_32k), and serves a mixed-length
-staggered workload through the ``repro.serve`` engine (qdq and packed),
-recording everything to ``BENCH_serve.json`` (and the harness CSV via
-``emit``):
+recipe's FP8-vs-BF16 KV cache at decode_32k), serves a mixed-length
+staggered workload through the ``repro.serve`` engine (qdq and packed,
+with TTFT / per-token latency percentiles), and sweeps speculative
+decoding (``repro.spec``) over draft length k — acceptance rate, per-slot
+accepted tokens, and tok/s vs the plain-engine baseline for a dense and a
+MoE/FP8-KV arch plus a two-model draft — recording everything to
+``BENCH_serve.json`` (and the harness CSV via ``emit``):
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen1.5-0.5b]
 
@@ -99,11 +102,59 @@ def engine_rows(arch: str, requests: int, gen: int, slots: int) -> dict:
             "steps": st["steps"], "peak_pool_utilization":
             st["peak_utilization"], "kv_pool_bytes": st["pool_bytes"],
             "weight_bytes": wr["total_bytes"],
-            "serving_bytes": wr["total_bytes"] + st["pool_bytes"]}
+            "serving_bytes": wr["total_bytes"] + st["pool_bytes"],
+            "ttft_p50_s": st["ttft_p50_s"], "ttft_p95_s": st["ttft_p95_s"],
+            "decode_lat_p50_s": st["decode_lat_p50_s"],
+            "decode_lat_p95_s": st["decode_lat_p95_s"]}
         emit(f"serve/engine/{arch}/{fmt}",
              1e6 / max(st["decode_tok_s"], 1e-9),
              f"tok_s={st['decode_tok_s']:.1f};"
              f"pool_util={st['peak_utilization']:.2f}")
+    return out
+
+
+def speculative_rows(dense_arch: str, moe_arch: str, gen: int,
+                     ks=(2, 4)) -> dict:
+    """Speculative decoding on the engine: acceptance rate, per-slot-round
+    accepted tokens, and tok/s vs draft length k, for a dense (packed) and
+    a MoE/FP8-KV (qdq) arch, plus a two-model draft row.  ``k0`` rows are
+    the plain-engine baseline the speedup is measured against."""
+
+    def one(arch, k, draft):
+        cfg = configs.get_smoke(arch)
+        argv = ["--engine", "--arch", arch, "--requests", "4", "--gen",
+                str(gen), "--slots", "2", "--no-parity"]
+        if k:
+            argv += ["--speculative", str(k), "--draft", draft]
+        args = serve.build_parser().parse_args(argv)
+        fmt = "qdq" if cfg.n_experts else "packed"
+        params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0), fmt)
+        res = serve.run_engine(cfg, params, qcfg, args)
+        st = res["stats"]
+        row = {"arch": arch, "k": k, "draft": draft if k else None,
+               "weight_format": fmt, "completed": res["ok"],
+               "pool_drained": res["pool_drained"],
+               "decode_tok_s": st["decode_tok_s"],
+               "e2e_tok_s": st["e2e_tok_s"],
+               "ttft_p50_s": st["ttft_p50_s"],
+               "decode_lat_p50_s": st["decode_lat_p50_s"]}
+        if k:
+            row.update({"acceptance_rate": st["acceptance_rate"],
+                        "accepted_per_step": st["accepted_per_step"],
+                        "rolled_back_tokens": st["rolled_back_tokens"],
+                        "draft_pool_bytes": st["draft_pool_bytes"]})
+            emit(f"serve/spec/{arch}/{draft}/k{k}",
+                 1e6 / max(st["decode_tok_s"], 1e-9),
+                 f"acceptance={st['acceptance_rate']:.3f};"
+                 f"accepted_per_step={st['accepted_per_step']:.2f}")
+        return row
+
+    out = {"dense": [one(dense_arch, 0, "self-qdq")],
+           "moe": [one(moe_arch, 0, "self-qdq")]}
+    for k in ks:
+        out["dense"].append(one(dense_arch, k, "self-qdq"))
+    out["moe"].append(one(moe_arch, ks[0], "self-qdq"))
+    out["two_model"] = [one(dense_arch, ks[0], "two-model")]
     return out
 
 
@@ -132,6 +183,17 @@ def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
           f"qdq={e['qdq']['decode_tok_s']:.1f} tok/s "
           f"packed={e['packed']['decode_tok_s']:.1f} tok/s "
           f"peak-pool-util={e['packed']['peak_pool_utilization']:.2f}")
+
+    results["speculative"] = speculative_rows(arch, "arctic-480b", gen)
+    for row in (results["speculative"]["dense"]
+                + results["speculative"]["moe"]
+                + results["speculative"]["two_model"]):
+        extra = (f" acceptance={row['acceptance_rate']:.3f} "
+                 f"accepted/step={row['accepted_per_step']:.2f}"
+                 if row["k"] else " (baseline)")
+        print(f"[serve_bench] spec {row['arch']} k={row['k']} "
+              f"draft={row['draft']}: {row['decode_tok_s']:.1f} tok/s"
+              + extra)
 
     with open(out, "w") as f:
         json.dump(results, f, indent=2)

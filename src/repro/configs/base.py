@@ -55,7 +55,8 @@ class ModelConfig:
     shared_d_ff: int = 0           # qwen2-moe shared expert hidden
     moe_dense_residual: bool = False   # arctic: parallel dense FFN
     capacity_factor: float = 1.25
-    moe_dispatch: str = "global"       # global | local (see §Perf hillclimb)
+    moe_dispatch: str = "global"       # global | local (§Perf hillclimb) |
+    #                                    token (speculative verify parity)
     moe_shard: str = "ep"              # ep (experts over model) | tp (ffn over model)
 
     # --- hybrid (RG-LRU) ---

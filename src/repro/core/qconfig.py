@@ -75,7 +75,15 @@ class QuantConfig:
     #              (with "tensor" scope, continuous batching would make each
     #              request's tokens a function of the batch composition).
     #              For a single-request batch the two scopes are identical.
-    act_scope: Literal["tensor", "row"] = "tensor"
+    #   "token"  — independent amax per element of every leading axis (i.e.
+    #              per last-dim vector).  The speculative-decoding verify
+    #              step scores k+1 positions in ONE forward; "token" scope
+    #              makes each position's activation scale identical to the
+    #              scale a sequential q_len=1 decode would have derived, so
+    #              multi-token verification is bit-compatible with the
+    #              one-token decode path.  For [B, 1, d] activations (plain
+    #              decode) "token" and "row" coincide.
+    act_scope: Literal["tensor", "row", "token"] = "tensor"
 
     def quantizes(self, kind: Kind) -> bool:
         """Does this policy quantize GEMMs of the given kind?"""
@@ -102,6 +110,10 @@ class QuantConfig:
         if self.act_scope == "row":
             amax = jnp.max(jnp.abs(x.astype(jnp.float32)),
                            axis=tuple(range(1, x.ndim)), keepdims=True)
+            return _fq_lastdim(x, amax)
+        if self.act_scope == "token":
+            amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                           keepdims=True)
             return _fq_lastdim(x, amax)
         return _fq_lastdim(x)
 

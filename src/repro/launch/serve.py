@@ -25,6 +25,12 @@ and the pool must drain back to empty.  Engine knobs:
   --slots / --block-size / --n-blocks   decode slots and pool geometry
   --prefill-mode exact|chunked   whole-prompt (bitwise-parity) vs fixed-size
                           chunked prefill; --prefill-chunk sets the size
+  --speculative K         speculative decoding (repro.spec): draft K tokens
+                          per slot, verify all K+1 in one paged forward;
+                          greedy output stays token-identical to the plain
+                          engine (asserted by the parity check)
+  --draft MODE            self-qdq | self-truncate | two-model proposer
+  --draft-layers N        draft depth for self-truncate / two-model
 
 Exit status is nonzero if any engine invariant fails (CI runs this).
 """
@@ -111,19 +117,44 @@ def mixed_prompts(rng, n: int, min_len: int, max_len: int, vocab: int):
                                vocab) for i, l in enumerate(lens)]
 
 
-def run_engine(cfg, params, qcfg, args) -> dict:
-    """Serve a mixed staggered workload through the engine; verify parity
-    and pool-drain invariants.  Returns a result dict (also used by CI and
-    ``benchmarks.serve_bench``)."""
+def build_engine(cfg, params, qcfg, args):
+    """Engine (or SpecEngine when --speculative k > 0) from CLI args."""
     from repro.serve import Engine
 
     bs = args.block_size
     mb = max(1, math.ceil((args.max_prompt + args.gen - 1) / bs))
     n_blocks = args.n_blocks or args.slots * mb
-    eng = Engine(cfg, params, qcfg, n_slots=args.slots, block_size=bs,
-                 n_blocks=n_blocks, max_blocks_per_slot=mb,
-                 prefill_mode=args.prefill_mode,
-                 prefill_chunk=args.prefill_chunk)
+    kw = dict(n_slots=args.slots, block_size=bs, n_blocks=n_blocks,
+              max_blocks_per_slot=mb, prefill_mode=args.prefill_mode,
+              prefill_chunk=args.prefill_chunk)
+    spec_k = getattr(args, "speculative", 0)
+    if not spec_k:
+        return Engine(cfg, params, qcfg, **kw), n_blocks
+    from repro.spec import SpecEngine
+
+    draft_model = None
+    if args.draft == "two-model":
+        # stand-in for a small distilled student (in a real deployment the
+        # QAD student drafts for its teacher): a fresh PTQ'd model at
+        # draft-layers depth.  Acceptance is near-chance with random
+        # weights, but greedy output must STILL match the plain engine —
+        # losslessness never depends on draft quality.
+        dl = args.draft_layers or max(1, cfg.n_layers // 2)
+        dcfg = dataclasses.replace(cfg, n_layers=dl, name=f"{cfg.name}-2m")
+        dparams, dqcfg = load_quantized(dcfg, jax.random.PRNGKey(99), "qdq")
+        draft_model = (dcfg, dparams, dqcfg)
+    eng = SpecEngine(cfg, params, qcfg, draft_k=spec_k, draft=args.draft,
+                     draft_layers=args.draft_layers, draft_model=draft_model,
+                     **kw)
+    return eng, n_blocks
+
+
+def run_engine(cfg, params, qcfg, args) -> dict:
+    """Serve a mixed staggered workload through the engine; verify parity
+    and pool-drain invariants.  Returns a result dict (also used by CI and
+    ``benchmarks.serve_bench``)."""
+    eng, n_blocks = build_engine(cfg, params, qcfg, args)
+    bs = args.block_size
 
     rng = jax.random.PRNGKey(1)
     prompts = mixed_prompts(rng, args.requests, args.min_prompt,
@@ -164,16 +195,28 @@ def run_engine(cfg, params, qcfg, args) -> dict:
                       f"{np.asarray(ref[0][:8]).tolist()}")
         ok = ok and parity
 
+    spec = getattr(args, "speculative", 0)
     print(f"[engine] arch={cfg.name} requests={args.requests} "
           f"prompts={args.min_prompt}..{args.max_prompt} gen={args.gen} "
           f"slots={args.slots} pool={n_blocks}x{bs} "
-          f"prefill={args.prefill_mode}")
+          f"prefill={args.prefill_mode}"
+          + (f" speculative=k{spec}/{args.draft}" if spec else ""))
     print(f"[engine] decode={st['decode_tok_s']:.1f} tok/s "
           f"e2e={st['e2e_tok_s']:.1f} tok/s "
           f"peak-pool-util={st['peak_utilization']:.2f} "
           f"steps={st['steps']} "
+          f"ttft_p50={st['ttft_p50_s']*1e3:.1f}ms "
+          f"ttft_p95={st['ttft_p95_s']*1e3:.1f}ms "
+          f"tok_lat_p50={st['decode_lat_p50_s']*1e3:.1f}ms "
+          f"tok_lat_p95={st['decode_lat_p95_s']*1e3:.1f}ms "
           f"parity={'AGREE' if parity else ('skipped' if parity is None else 'DISAGREE')} "
           f"pool-drained={eng.pool.used_blocks == 0}")
+    if spec:
+        print(f"[engine] speculative: acceptance={st['acceptance_rate']:.3f} "
+              f"accepted/step={st['accepted_per_step']:.2f} "
+              f"drafted={st['drafted_tokens']} "
+              f"rolled-back={st['rolled_back_tokens']} "
+              f"verify-steps={st['verify_steps']}")
     return {"ok": ok, "outputs": outputs, "stats": st,
             "tokens_match_serve_batch": parity, "n_blocks": n_blocks,
             "pool_drained": eng.pool.used_blocks == 0}
@@ -207,6 +250,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--prefill-mode", choices=("exact", "chunked"),
                     default="exact")
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    # --- speculative decoding (repro.spec, engine mode only) ---
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="draft length k per verify step (0 = off); greedy "
+                    "outputs stay token-identical to the plain engine")
+    ap.add_argument("--draft", choices=("self-qdq", "self-truncate",
+                                        "two-model"), default="self-qdq",
+                    help="draft proposer: the target's own QDQ forward, its "
+                    "first --draft-layers layers, or a separate small "
+                    "student model")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="draft depth for self-truncate / two-model "
+                    "(0 = half the target)")
     return ap
 
 

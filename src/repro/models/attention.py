@@ -228,35 +228,40 @@ def decode_attend(q, layer_cache, pos, *, window: int = 0):
 
 
 def paged_update_layer(pool_sl, k_new, v_new, block_tables, positions, active):
-    """Scatter one new KV per batch row into a paged pool layer slice.
+    """Scatter new KV for S >= 1 positions per batch row into a pool layer.
 
     pool_sl: {"k","v": [n_blocks, bs, Hkv, hd], optional "k_scale"/"v_scale"
-    [n_blocks, bs, Hkv]}.  k_new/v_new: [B, 1, Hkv, hd].  positions: [B]
-    absolute write positions; active: [B] bool — inactive rows scatter out of
-    bounds and are dropped (never corrupting live blocks).  FP8 pools
-    quantize through the same ``_quant_kv`` as the dense cache path, so a
-    paged request's stored values match the static-batch cache bit for bit.
+    [n_blocks, bs, Hkv]}.  k_new/v_new: [B, S, Hkv, hd] — S == 1 is the
+    one-token decode step; S == k+1 is the speculative verify step writing a
+    whole draft chunk at per-slot position offsets.  positions: [B] (S == 1)
+    or [B, S] absolute write positions; active: [B] or [B, S] bool —
+    inactive entries scatter out of bounds and are dropped (never corrupting
+    live blocks), which is also how verify masks a slot's unused draft tail.
+    FP8 pools quantize through the same ``_quant_kv`` as the dense cache
+    path, so a paged request's stored values match the static-batch cache
+    bit for bit.
     """
     n_blocks, bs = pool_sl["k"].shape[:2]
-    blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None],
-                              axis=1)[:, 0]
-    blk = jnp.where(active, blk, n_blocks)          # OOB -> dropped
+    if positions.ndim == 1:
+        positions = positions[:, None]                # [B] -> [B, 1]
+    active = jnp.broadcast_to(active[:, None] if active.ndim == 1 else active,
+                              positions.shape)
+    blk = jnp.take_along_axis(block_tables, positions // bs, axis=1)  # [B, S]
+    blk = jnp.where(active, blk, n_blocks)            # OOB -> dropped
     off = positions % bs
     out = dict(pool_sl)
     if pool_sl.get("k_scale") is not None:
         kq, ks = _quant_kv(k_new)
         vq, vs = _quant_kv(v_new)
-        out["k"] = pool_sl["k"].at[blk, off].set(kq[:, 0], mode="drop")
-        out["v"] = pool_sl["v"].at[blk, off].set(vq[:, 0], mode="drop")
-        out["k_scale"] = pool_sl["k_scale"].at[blk, off].set(ks[:, 0],
-                                                             mode="drop")
-        out["v_scale"] = pool_sl["v_scale"].at[blk, off].set(vs[:, 0],
-                                                             mode="drop")
+        out["k"] = pool_sl["k"].at[blk, off].set(kq, mode="drop")
+        out["v"] = pool_sl["v"].at[blk, off].set(vq, mode="drop")
+        out["k_scale"] = pool_sl["k_scale"].at[blk, off].set(ks, mode="drop")
+        out["v_scale"] = pool_sl["v_scale"].at[blk, off].set(vs, mode="drop")
     else:
         dt = pool_sl["k"].dtype
-        out["k"] = pool_sl["k"].at[blk, off].set(k_new[:, 0].astype(dt),
+        out["k"] = pool_sl["k"].at[blk, off].set(k_new.astype(dt),
                                                  mode="drop")
-        out["v"] = pool_sl["v"].at[blk, off].set(v_new[:, 0].astype(dt),
+        out["v"] = pool_sl["v"].at[blk, off].set(v_new.astype(dt),
                                                  mode="drop")
     return out
 
@@ -278,14 +283,21 @@ def paged_gather_layer(pool_sl, block_tables, dtype=jnp.bfloat16):
 
 
 def paged_attend(q, pool_sl, block_tables, pos, *, window: int = 0):
-    """One-token decode against the paged pool: q [B,1,H,hd].
+    """Decode/verify attention against the paged pool: q [B, S, H, hd].
 
-    ``pos``: [B] per-request valid lengths (the new token's KV must already
-    be written).  Numerically this is ``decode_attend`` with a per-row
-    validity mask: masked positions reach the softmax as exp(-1e30-...) = 0
-    exactly, so a request's probabilities are identical however many pool
-    blocks its table addresses.  ``window`` masks by absolute position (the
-    pool keeps every block live for simplicity — no ring buffer).
+    ``pos``: per-query valid-key counts (every attended position's KV must
+    already be written) — [B] applies one count to every query (the S == 1
+    decode step), [B, S] gives each query its own count (the speculative
+    verify step passes lens + i + 1 for query i, which IS the causal
+    intra-chunk mask: draft position i sees the prompt, the accepted
+    history, and drafts 0..i-1, never its successors).  Numerically this is
+    ``decode_attend`` with a per-(row, query) validity mask: masked
+    positions reach the softmax as exp(-1e30-...) = 0 exactly, so a query's
+    probabilities are identical however many pool blocks its table
+    addresses and whatever the later draft positions contain — multi-token
+    verification reproduces sequential one-token decode per position.
+    ``window`` masks by absolute position (the pool keeps every block live
+    for simplicity — no ring buffer).
     """
     k, v = paged_gather_layer(pool_sl, block_tables, q.dtype)
     b, s_alloc, hkv, hd = k.shape
@@ -296,10 +308,11 @@ def paged_attend(q, pool_sl, block_tables, pos, *, window: int = 0):
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                    preferred_element_type=jnp.float32) * scale
     slot = jnp.arange(s_alloc)
-    valid = slot[None, :] < pos[:, None]              # [B, S_alloc]
+    qpos = pos[:, None] if pos.ndim == 1 else pos     # [B, 1] or [B, S]
+    valid = slot[None, None, :] < qpos[:, :, None]    # [B, S(|1), S_alloc]
     if window:
-        valid = valid & (slot[None, :] >= pos[:, None] - window)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        valid = valid & (slot[None, None, :] >= qpos[:, :, None] - window)
+    s = jnp.where(valid[:, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, -1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v,
                      preferred_element_type=jnp.float32)

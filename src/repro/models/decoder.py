@@ -343,7 +343,15 @@ def write_prompt_to_pool(pool, cache, block_ids):
     return out
 
 
-def _attention_paged(qcfg, cfg, p, h, pos, psl, block_tables, lens, active):
+def _attention_paged(qcfg, cfg, p, h, pos, psl, block_tables, positions,
+                     active):
+    """Paged attention for S >= 1 new positions per slot.
+
+    ``positions``: [B] (one-token decode) or [B, S] (multi-token verify)
+    absolute write positions — RoPE ``pos`` must address the same positions;
+    ``active``: [B] or [B, S] write mask.  Each query attends positions
+    < its own position + 1 (causal within the new chunk).
+    """
     b, s, _ = h.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"))
@@ -351,8 +359,9 @@ def _attention_paged(qcfg, cfg, p, h, pos, psl, block_tables, lens, active):
     q = _rope(cfg, attn.split_heads(q, nh, hd), pos)
     k = _rope(cfg, attn.split_heads(k, nkv, hd), pos)
     v = attn.split_heads(v, nkv, hd)
-    new_psl = attn.paged_update_layer(psl, k, v, block_tables, lens, active)
-    out = attn.paged_attend(q, new_psl, block_tables, lens + 1,
+    new_psl = attn.paged_update_layer(psl, k, v, block_tables, positions,
+                                      active)
+    out = attn.paged_attend(q, new_psl, block_tables, positions + 1,
                             window=cfg.window)
     out = cst(layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"]),
               ("batch", "seq", "none"))
@@ -380,6 +389,62 @@ def decode_step_paged(cfg, params, pool, block_tables, lens, active, batch,
             h = run_norm(cfg, p["ln1"], carry)
             a, new_psl = _attention_paged(qc, cfg, p, h, pos, psl,
                                           block_tables, lens, active)
+            y = carry + a
+            h = run_norm(cfg, p["ln2"], y)
+            f, _ = _ffn(qc, cfg, p, h)
+            return y + f, new_psl
+        return fn
+
+    x, new_pool = common.scan_layers(
+        body, x, params["layers"], pool, qcfg,
+        qcfg.skip_first_layers, qcfg.skip_last_layers, "none")
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    return logits, new_pool
+
+
+def verify_step_paged(cfg, params, pool, block_tables, lens, active, n_prop,
+                      batch, qcfg: QuantConfig):
+    """Multi-token speculative verification: score k+1 positions at once.
+
+    batch["tokens"]: [n_slots, K1] where row token 0 is the slot's last
+    emitted token and tokens 1..n_prop[b] are draft proposals (the tail is
+    padding).  block_tables: [n_slots, MB]; lens: [n_slots] cached-token
+    counts; active: [n_slots] bool; n_prop: [n_slots] proposed-draft counts
+    (0 <= n_prop <= K1-1 — a row with n_prop == 0 degenerates to the plain
+    one-token decode step).
+
+    KV for every fed position (lens + i, i <= n_prop) is written to the
+    pool; query i attends positions < lens + i + 1 (causal intra-chunk
+    masks via per-slot position offsets).  Row positions beyond n_prop
+    neither write KV nor influence live positions — their logits are
+    garbage the caller must ignore.  The caller is responsible for
+    rolling back rejected positions (they stay invalidated as long as the
+    slot's length accounting only advances by ACCEPTED tokens; the next
+    verify step overwrites them).
+
+    For token-for-token parity with sequential ``decode_step_paged`` the
+    serving config must use ``act_scope="token"`` (per-position activation
+    scales) and, for MoE archs, ``moe_dispatch="token"`` — with those, the
+    logits at position i are exactly what a one-token decode conditioned on
+    the same prefix would produce.
+
+    Returns (logits [n_slots, K1, V], new_pool).
+    """
+    if cfg.mrope_sections:
+        raise NotImplementedError("paged verify does not support M-RoPE")
+    x = _embed_inputs(cfg, params, batch)
+    k1 = x.shape[1]
+    offs = jnp.arange(k1)
+    positions = lens[:, None] + offs[None, :]          # [n_slots, K1]
+    tok_active = active[:, None] & (offs[None, :] <= n_prop[:, None])
+
+    def body(qc):
+        def fn(carry, inp):
+            p, psl = inp
+            h = run_norm(cfg, p["ln1"], carry)
+            a, new_psl = _attention_paged(qc, cfg, p, h, positions, psl,
+                                          block_tables, positions, tok_active)
             y = carry + a
             h = run_norm(cfg, p["ln2"], y)
             f, _ = _ffn(qc, cfg, p, h)

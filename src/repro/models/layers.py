@@ -12,6 +12,8 @@ that is numerically identical to serving the QDQ'd BF16 weights.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -193,15 +195,34 @@ def moe_ffn(qcfg, cfg, x, router_w, wg, wu, wd):
     x: [B, S, d]; router_w: [d, E]; expert weights [E, d, ffe] / [E, ffe, d].
     Returns (out [B,S,d], aux metrics dict).
 
-    Two dispatch scopes (ModelConfig.moe_dispatch):
+    Three dispatch scopes (ModelConfig.moe_dispatch):
       * "global" — one sort over all B·S tokens (the common reference
         implementation; under DP sharding the gather crosses batch shards
         and GSPMD all-gathers the token tensor per layer),
       * "local"  — dispatch per batch row (vmapped): capacity is per-row,
         gathers/scatters stay inside each data shard.  This is the
         §Perf hillclimb optimization — see EXPERIMENTS.md.
+      * "token"  — dispatch per TOKEN (each (b, s) position is its own
+        capacity domain).  Identical to "local" when S == 1; the
+        speculative-decoding verify step uses it so a token's expert
+        capacity (and hence its routing drops) cannot depend on the other
+        k draft positions scored in the same forward — the multi-token
+        verify then reproduces sequential one-token decode exactly.
     """
-    if getattr(cfg, "moe_dispatch", "global") == "local":
+    dispatch = getattr(cfg, "moe_dispatch", "global")
+    if dispatch == "token":
+        b, s, d = x.shape
+        if qcfg.act_scope == "token":
+            # inside the expert slabs a token's computation spans
+            # [E, C, ffe]; its per-token activation scale is the amax over
+            # that WHOLE slab (what sequential decode's "row" scope takes
+            # at S == 1).  With per-token dispatch rows, "row" scope IS
+            # per-token — swap so the slab quantization matches.
+            qcfg = dataclasses.replace(qcfg, act_scope="row")
+        out, aux = _moe_dispatch_local(qcfg, cfg, x.reshape(b * s, 1, d),
+                                       router_w, wg, wu, wd)
+        return out.reshape(b, s, d), aux
+    if dispatch == "local":
         return _moe_dispatch_local(qcfg, cfg, x, router_w, wg, wu, wd)
     b, s, d = x.shape
     out, aux = _moe_dispatch_flat(qcfg, cfg, x.reshape(b * s, d), router_w,

@@ -9,6 +9,9 @@ The subsystem between the model forwards and the CLI:
   * ``engine``    — the ``submit / step / drain`` facade wiring jitted paged
                     decode + prefill steps to the scheduler
 
+``repro.spec`` layers speculative decoding (draft/verify, lossless
+accept/resample, KV rollback) on top of this engine.
+
 Quickstart::
 
     from repro.serve import Engine, Request, SamplingParams

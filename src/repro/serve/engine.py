@@ -59,9 +59,10 @@ class Engine:
             raise ValueError("engine does not support M-RoPE archs")
         if prefill_mode not in ("exact", "chunked"):
             raise ValueError(prefill_mode)
-        if cfg.n_experts and cfg.moe_dispatch != "local":
-            # per-row dispatch makes MoE routing independent of co-batched
-            # requests — a hard requirement for continuous batching
+        if cfg.n_experts and cfg.moe_dispatch not in ("local", "token"):
+            # per-row (or per-token) dispatch makes MoE routing independent
+            # of co-batched requests — a hard requirement for continuous
+            # batching
             cfg = dataclasses.replace(cfg, moe_dispatch="local")
         self.cfg = cfg
         self.params = params
@@ -109,6 +110,9 @@ class Engine:
         self.prefill_tokens = 0
         self.decode_s = 0.0
         self.prefill_s = 0.0
+        # per-token decode latencies (step wall time amortized over the
+        # tokens that step emitted) — feeds the p50/p95 report
+        self.token_lat_s: list[float] = []
 
     # -- public API --------------------------------------------------------
 
@@ -117,6 +121,7 @@ class Engine:
         """Queue a request; returns its id.  Admission happens in step()."""
         req = self.sched.submit(prompt, max_new_tokens, sampling,
                                 step=self.step_count)
+        req.submit_t = time.time()
         return req.rid
 
     def step(self) -> list[Request]:
@@ -155,8 +160,19 @@ class Engine:
              "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
              "e2e_tok_s": self.tokens_generated
              / max(self.decode_s + self.prefill_s, 1e-9)}
+        d.update(self._latency_stats())
         d.update(self.pool.stats())
         return d
+
+    def _latency_stats(self) -> dict:
+        """Per-request TTFT and per-token decode latency percentiles."""
+        ttfts = [r.ttft_s for r in self.sched.finished.values()
+                 if r.first_tok_t]
+        out = {}
+        for name, vals in (("ttft", ttfts), ("decode_lat", self.token_lat_s)):
+            out[f"{name}_p50_s"] = float(np.percentile(vals, 50)) if vals else 0.0
+            out[f"{name}_p95_s"] = float(np.percentile(vals, 95)) if vals else 0.0
+        return out
 
     # -- prefill -----------------------------------------------------------
 
@@ -180,8 +196,14 @@ class Engine:
             self.prefill_tokens += used
             if logits is None:
                 break                      # budget ran out mid-prompt
+            self._after_prefill(req)
             self._emit(req, self._sample_one(req, logits), finished)
         self.prefill_s += time.time() - t0
+
+    def _after_prefill(self, req: Request) -> None:
+        """Hook: a request's prompt is fully prefilled (cache written), its
+        first token not yet sampled.  The speculative engine prefills the
+        draft model's mirrored pool here."""
 
     def _in_flight_prefill(self) -> Request | None:
         """An admitted request whose prefill hasn't completed (chunked mode
@@ -205,7 +227,7 @@ class Engine:
         ids = np.asarray(req.block_ids[: self.pool.blocks_for(p)], np.int32)
         self.pool.data = self._write_fns[p](self.pool.data, cache,
                                             jnp.asarray(ids))
-        req.n_prefilled = req.n_cached = p
+        req.n_prefilled = req.n_cached = req.n_written = p
         return logits[:, -1, :]
 
     def _prefill_chunked(self, req: Request, budget: int):
@@ -226,7 +248,7 @@ class Engine:
                 jnp.asarray(req.n_prefilled, jnp.int32),
                 jnp.asarray(n_valid, jnp.int32), jnp.asarray(toks))
             req.n_prefilled += n_valid
-            req.n_cached = req.n_prefilled
+            req.n_cached = req.n_written = req.n_prefilled
             consumed += n_valid
             if req.n_prefilled >= req.prompt_len:
                 logits = lg[:, -1, :]
@@ -265,11 +287,14 @@ class Engine:
                                           jnp.asarray(topks),
                                           jnp.asarray(seeds),
                                           jnp.asarray(idxs)))
-        self.decode_s += time.time() - t0
+        dt = time.time() - t0
+        self.decode_s += dt
         self.decode_steps += 1
         self.decode_tokens += len(reqs)
+        self.token_lat_s.extend([dt] * len(reqs))
         for r in reqs:
             r.n_cached += 1
+            r.n_written = max(r.n_written, r.n_cached)
             self._emit(r, int(sampled[r.slot]), finished)
 
     # -- shared ------------------------------------------------------------
@@ -286,6 +311,8 @@ class Engine:
     def _emit(self, req: Request, tok: int, finished: list[Request]) -> None:
         req.output.append(tok)
         self.tokens_generated += 1
+        if not req.first_tok_t:
+            req.first_tok_t = time.time()
         if self.eos_id is not None and tok == self.eos_id:
             self.sched.finish(req, "eos", self.step_count)
             finished.append(req)

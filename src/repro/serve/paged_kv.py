@@ -87,6 +87,28 @@ class PagedKVPool:
             self._free.append(b)
             self._free_set.add(b)
 
+    def truncate_to(self, block_ids: list[int],
+                    n_tokens: int) -> tuple[list[int], list[int]]:
+        """Release the tail of a block list not needed to hold ``n_tokens``.
+
+        The speculative engine's KV-rollback primitive: after rejection, a
+        request's valid cache length is its ACCEPTED token count, so any
+        trailing blocks holding only proposed-and-rejected positions can go
+        back to the free list (device pages are not cleared — validity is
+        the length mask; a freed block's contents are dead the moment no
+        block table references it).  ``n_tokens == 0`` frees every block.
+        Returns (kept_ids, freed_ids); the caller must replace its block
+        list with ``kept_ids``.
+        """
+        if n_tokens < 0:
+            raise ValueError(f"negative length {n_tokens}")
+        keep = min(self.blocks_for(n_tokens) if n_tokens else 0,
+                   len(block_ids))
+        kept, freed = list(block_ids[:keep]), list(block_ids[keep:])
+        if freed:
+            self.free(freed)
+        return kept, freed
+
     def stats(self) -> dict:
         return {"n_blocks": self.n_blocks, "block_size": self.block_size,
                 "used_blocks": self.used_blocks,

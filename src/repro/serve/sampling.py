@@ -1,4 +1,5 @@
-"""Per-request sampling: greedy, temperature, top-k, deterministic seeds.
+"""Per-request sampling: greedy, temperature, top-k, deterministic seeds —
+plus the lossless speculative-decoding accept/resample rule.
 
 One vectorized ``sample_tokens`` covers the whole slot batch: every request
 carries its own (temperature, top_k, seed) and the engine folds the
@@ -8,6 +9,14 @@ co-batched neighbors, and slot assignment cannot change its output.
 
 ``temperature == 0`` is exact greedy (``jnp.argmax``, bit-identical to the
 static ``serve_batch`` path).
+
+``speculative_verify_tokens`` implements standard speculative sampling
+(accept draft token x with probability min(1, p(x)/q(x)); on the first
+rejection resample from the residual norm(max(p - q, 0)); if every draft
+survives, sample one bonus token from the target's next distribution).
+The emitted sequence is distributed exactly as sequential sampling from the
+target — and in greedy mode it is *token-for-token identical* to the
+non-speculative engine, which is the subsystem's parity oracle.
 """
 from __future__ import annotations
 
@@ -29,27 +38,54 @@ def request_key(params: SamplingParams, token_index: int) -> jax.Array:
     return jax.random.fold_in(jax.random.PRNGKey(params.seed), token_index)
 
 
+def topk_mask(lf: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Mask logits outside the top-k to -inf, with EXACTLY k survivors.
+
+    lf: [..., V] f32 logits; top_k: int array broadcastable to
+    lf.shape[:-1] (<= 0 means the whole vocabulary).  Elements are ranked
+    by (-logit, token id): ``jnp.argsort`` is stable, so equal logits rank
+    lower-token-id first and threshold ties cannot inflate the survivor
+    set beyond k (a plain ``lf >= kth_value`` admits every tied candidate).
+    """
+    v = lf.shape[-1]
+    order = jnp.argsort(-lf, axis=-1)            # stable: ties -> lower id
+    ranks = jnp.argsort(order, axis=-1)          # inverse permutation
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+    return jnp.where(ranks < k_eff[..., None], lf, -jnp.inf)
+
+
+def filtered_probs(logits: jax.Array, temperature: jax.Array,
+                   top_k: jax.Array) -> jax.Array:
+    """The sampling distribution a (temperature, top_k) request draws from.
+
+    logits [..., V]; temperature / top_k broadcastable to the leading dims.
+    Rows with temperature <= 0 get their temperature clamped (callers take
+    the argmax for those rows; the returned probabilities are unused).
+    """
+    lf = logits.astype(jnp.float32)
+    masked = topk_mask(lf, top_k)
+    return jax.nn.softmax(masked / jnp.maximum(temperature, 1e-6)[..., None],
+                          axis=-1)
+
+
 def sample_tokens(logits: jax.Array, temperature: jax.Array,
                   top_k: jax.Array, keys: jax.Array) -> jax.Array:
     """logits [B, V], temperature [B] f32, top_k [B] i32, keys [B] PRNG keys
     -> sampled token ids [B] i32.
 
     Rows with temperature <= 0 take the argmax; otherwise logits outside the
-    row's top-k (top_k <= 0 means all V) are masked to -inf and a categorical
-    draw is taken at the row's temperature with the row's key.  The sort /
-    draw branch is skipped at runtime when the whole batch is greedy (the
-    engine's default), so pure-greedy decode never pays the O(V log V) mask.
+    row's top-k (top_k <= 0 means all V; threshold ties broken toward lower
+    token ids so exactly k candidates survive — see ``topk_mask``) are
+    masked to -inf and a categorical draw is taken at the row's temperature
+    with the row's key.  The sort / draw branch is skipped at runtime when
+    the whole batch is greedy (the engine's default), so pure-greedy decode
+    never pays the O(V log V) mask.
     """
-    v = logits.shape[-1]
     lf = logits.astype(jnp.float32)
     greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
 
     def draw(_):
-        k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
-        sorted_desc = jnp.sort(lf, axis=-1)[:, ::-1]
-        thresh = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None],
-                                     axis=1)
-        masked = jnp.where(lf >= thresh, lf, -jnp.inf)
+        masked = topk_mask(lf, top_k)
         scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
         drawn = jax.vmap(jax.random.categorical)(keys,
                                                  scaled).astype(jnp.int32)
@@ -72,3 +108,140 @@ def sample_tokens_seeded(logits: jax.Array, temperature: jax.Array,
     jitted computation (one dispatch per decode step instead of per slot)."""
     return sample_tokens(logits, temperature, top_k,
                          fold_keys(seeds, token_idx))
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: draft sampling + lossless accept/resample
+# ---------------------------------------------------------------------------
+
+# Sub-stream salts folded under each (seed, token index) key: acceptance
+# uniforms, residual/bonus resamples, and the draft's own proposal draws
+# never share PRNG bits.
+_ACCEPT_STREAM, _RESAMPLE_STREAM, _DRAFT_STREAM = 0, 1, 2
+
+
+def _position_keys(seeds: jax.Array, token_idx: jax.Array, k1: int,
+                   stream: int) -> jax.Array:
+    """[B] seeds + [B] first-emission indices -> [B, k1] PRNG keys, one per
+    candidate emission position, on the given sub-stream."""
+    def per_row(s, t0):
+        base = jax.random.PRNGKey(s)
+        return jax.vmap(lambda i: jax.random.fold_in(
+            jax.random.fold_in(base, t0 + i), stream))(jnp.arange(k1))
+    return jax.vmap(per_row)(seeds, token_idx)
+
+
+def draft_sample_tokens(logits: jax.Array, temperature: jax.Array,
+                        top_k: jax.Array, seeds: jax.Array,
+                        token_idx: jax.Array):
+    """One draft-proposal step: sample a token AND return the proposal
+    distribution q needed by the acceptance test.
+
+    logits [B, V]; temperature/top_k/seeds [B]; token_idx [B] = generation
+    index the proposal targets.  Greedy rows propose the argmax (their q is
+    returned but unused — greedy acceptance compares token ids directly).
+    Returns (tokens [B] i32, q [B, V] f32).
+    """
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    def draw(_):
+        q = filtered_probs(lf, temperature, top_k)
+        keys = jax.vmap(lambda s, i: jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(s), i), _DRAFT_STREAM))(seeds, token_idx)
+        drawn = jax.vmap(jax.random.categorical)(
+            keys, jnp.where(q > 0, jnp.log(q), -jnp.inf)).astype(jnp.int32)
+        return jnp.where(temperature > 0, drawn, greedy), q
+
+    # all-greedy batches (the engine default) skip the sort/softmax/draw;
+    # greedy acceptance compares token ids, so q is never read
+    return jax.lax.cond(jnp.any(temperature > 0), draw,
+                        lambda _: (greedy, jnp.zeros_like(lf)), None)
+
+
+def speculative_verify_tokens(target_logits: jax.Array,
+                              draft_tokens: jax.Array,
+                              draft_probs: jax.Array, n_prop: jax.Array,
+                              temperature: jax.Array, top_k: jax.Array,
+                              seeds: jax.Array, token_idx: jax.Array):
+    """Lossless accept/resample over one verified draft chunk per slot.
+
+    target_logits: [B, K1, V] — position i is the target's distribution for
+    the (token_idx + i)-th emission; draft_tokens: [B, K1-1] proposals;
+    draft_probs: [B, K1-1, V] the draft's proposal distributions q;
+    n_prop: [B] how many proposals each row actually made (the rest is
+    padding); temperature / top_k / seeds / token_idx: [B] per-request
+    sampling state, token_idx = generation index of the first emission.
+
+    Greedy rows (temperature <= 0) accept draft i iff it equals the
+    target argmax at position i, and always emit the argmax chain — the
+    emitted tokens are token-for-token what sequential greedy decode
+    produces, whatever the draft proposed.  Stochastic rows accept draft
+    token x with probability min(1, p(x)/q(x)) (p = the target's
+    temperature/top-k filtered distribution), resample the first rejection
+    from norm(max(p - q, 0)), and sample a bonus token from p when every
+    proposal survives.
+
+    Returns (out_tokens [B, K1] i32 — entries beyond n_emit are zero,
+    n_emit [B] i32 in [1, n_prop + 1], n_acc [B] i32 accepted drafts).
+    """
+    b, k1, v = target_logits.shape
+    k = k1 - 1
+    lf = target_logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)          # [B, K1]
+
+    rows = jnp.arange(b)
+    offs = jnp.arange(k)
+    greedy_acc = draft_tokens == greedy[:, :k]
+
+    def finalize(acc, final_tok_fn):
+        acc = acc & (offs[None, :] < n_prop[:, None])
+        n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1),
+                        axis=1).astype(jnp.int32)               # [B]
+        final_tok = final_tok_fn(n_acc)
+        padded = jnp.concatenate(
+            [draft_tokens, jnp.zeros((b, 1), draft_tokens.dtype)], axis=1)
+        out = jnp.where(jnp.arange(k1)[None, :] < n_acc[:, None], padded, 0)
+        out = out.at[rows, n_acc].set(final_tok)
+        return out.astype(jnp.int32), n_acc + 1, n_acc
+
+    def greedy_only(_):
+        return finalize(greedy_acc, lambda n_acc: greedy[rows, n_acc])
+
+    def mixed(_):
+        p = filtered_probs(lf, temperature[:, None],
+                           top_k[:, None])                      # [B, K1, V]
+        # acceptance test per draft position (masked beyond n_prop)
+        p_tok = jnp.take_along_axis(p[:, :k], draft_tokens[..., None],
+                                    axis=-1)[..., 0]            # [B, K]
+        q_tok = jnp.take_along_axis(draft_probs, draft_tokens[..., None],
+                                    axis=-1)[..., 0]            # [B, K]
+        ukeys = _position_keys(seeds, token_idx, k, _ACCEPT_STREAM)
+        u = jax.vmap(jax.vmap(lambda kk: jax.random.uniform(kk)))(ukeys)
+        # u*q < p  <=>  u < min(1, p/q); q == 0 rows reject unless p > 0
+        acc = jnp.where((temperature > 0)[:, None], u * q_tok < p_tok,
+                        greedy_acc)
+
+        def final_tok(n_acc):
+            # residual resample on rejection, bonus sample from the target
+            # when every proposal survived
+            pf = p[rows, n_acc]                                 # [B, V]
+            rejected = n_acc < n_prop
+            qf = jnp.where(rejected[:, None],
+                           draft_probs[rows, jnp.minimum(n_acc, k - 1)], 0.0)
+            residual = jnp.maximum(pf - qf, 0.0)
+            rmass = jnp.sum(residual, axis=-1, keepdims=True)
+            final_p = jnp.where(rmass > 0,
+                                residual / jnp.maximum(rmass, 1e-30), pf)
+            rkeys = _position_keys(seeds, token_idx, k1, _RESAMPLE_STREAM)
+            drawn = jax.vmap(jax.random.categorical)(
+                rkeys[rows, n_acc],
+                jnp.where(final_p > 0, jnp.log(final_p),
+                          -jnp.inf)).astype(jnp.int32)
+            return jnp.where(temperature > 0, drawn, greedy[rows, n_acc])
+
+        return finalize(acc, final_tok)
+
+    # all-greedy batches (the engine default, and the parity oracle) skip
+    # the filtered softmax / PRNG machinery entirely
+    return jax.lax.cond(jnp.any(temperature > 0), mixed, greedy_only, None)

@@ -16,6 +16,14 @@ step) and the admission policy:
 
 Retiring a request (EOS, token budget) frees its slot and blocks the same
 step, so the next queued request backfills on the following ``step()``.
+
+Speculative decoding (``repro.spec``) accounts blocks by ACCEPTED length:
+``n_cached`` only ever advances by accepted tokens, ``n_written`` tracks the
+proposal high-water mark, and ``rollback_to`` / ``PagedKVPool.truncate_to``
+release blocks a rejected proposal tail no longer justifies.  Because the
+engine caps per-slot draft length at (remaining budget - 1), proposals never
+write past the worst-case reservation — admission capacity math is unchanged
+and decode still never preempts.
 """
 from __future__ import annotations
 
@@ -45,11 +53,19 @@ class Request:
     slot: Optional[int] = None
     block_ids: list = dataclasses.field(default_factory=list)
     n_prefilled: int = 0                  # prompt tokens processed so far
-    n_cached: int = 0                     # KV positions written to the pool
+    n_cached: int = 0                     # ACCEPTED KV positions in the pool
+    n_written: int = 0                    # write high-water mark (speculative
+    #                                       proposals may exceed n_cached;
+    #                                       the gap is rolled-back KV)
+    draft_cached: int = 0                 # draft-model KV prefix in sync with
+    #                                       the accepted sequence (spec only)
     output: list = dataclasses.field(default_factory=list)
     finish_reason: str = ""
     submit_step: int = -1
     finish_step: int = -1
+    # --- latency telemetry (wall-clock seconds, engine-stamped) ---
+    submit_t: float = 0.0
+    first_tok_t: float = 0.0              # 0 until the first token emits
 
     @property
     def prompt_len(self) -> int:
@@ -63,6 +79,12 @@ class Request:
     @property
     def done(self) -> bool:
         return self.state == FINISHED
+
+    @property
+    def ttft_s(self) -> float:
+        """Submit-to-first-token latency (0.0 until the first emission)."""
+        return max(self.first_tok_t - self.submit_t, 0.0) \
+            if self.first_tok_t else 0.0
 
     def next_input_token(self) -> int:
         """The token the next decode step feeds for this request."""
@@ -135,6 +157,23 @@ class Scheduler:
 
     # -- retirement --------------------------------------------------------
 
+    def rollback_to(self, req: Request, n_tokens: int) -> int:
+        """Clamp a request's block reservation to ``n_tokens`` of KV.
+
+        The speculative engine's block accounting is by ACCEPTED length:
+        proposed-but-rejected positions beyond ``n_tokens`` are dead, so
+        any whole blocks past ``blocks_for(n_tokens)`` return to the pool.
+        (While a request is still generating, its worst-case reservation
+        covers every position speculation can touch — the engine caps the
+        per-slot draft length at remaining-budget - 1 — so mid-flight
+        rollback frees nothing; the release happens when the remaining
+        budget drops, i.e. at EOS / early finish.)  Returns the number of
+        blocks freed.
+        """
+        req.block_ids, freed = self.pool.truncate_to(req.block_ids, n_tokens)
+        req.n_written = min(req.n_written, n_tokens)
+        return len(freed)
+
     def finish(self, req: Request, reason: str, step: int = -1) -> None:
         req.state = FINISHED
         req.finish_reason = reason
@@ -143,6 +182,10 @@ class Scheduler:
             self.slots[req.slot] = None
             req.slot = None
         if req.block_ids:
+            # two-stage release: first the speculative tail (blocks holding
+            # only rejected-draft KV past the accepted length), then the
+            # live prefix — both land on the free list this same step
+            self.rollback_to(req, req.n_cached)
             self.pool.free(req.block_ids)
             req.block_ids = []
         self.finished[req.rid] = req

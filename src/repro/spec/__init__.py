@@ -1,0 +1,34 @@
+"""Speculative decoding on top of the continuous-batching engine.
+
+QAD's product is an NVFP4 student whose output distribution is KL-close to
+its BF16 teacher — exactly the quantity that sets speculative-decoding
+acceptance rates, so a QAD-recovered model family is a near-ideal
+draft/target pair "for free".  This package layers a draft/verify loop over
+``repro.serve``:
+
+  * ``proposer``  — draft proposers over a mirrored paged KV pool: cheap
+                    self-drafts (``self-qdq``: the target's own QDQ
+                    numerics; ``self-truncate``: the first n layers of the
+                    same packed model) and a two-model mode (a small
+                    distilled student drafts for the packed target)
+  * ``engine``    — ``SpecEngine``, an ``Engine`` whose decode step drafts
+                    k tokens per slot, scores all k+1 positions in ONE
+                    jitted paged forward (``decoder.verify_step_paged``),
+                    accepts/resamples losslessly, and rolls rejected KV
+                    back (accepted-length accounting + pool truncation)
+
+Exact-greedy speculative decode is token-for-token identical to the plain
+engine — the subsystem's parity oracle, asserted by tests and CI.
+
+Quickstart::
+
+    from repro.spec import SpecEngine
+    eng = SpecEngine(cfg, params, qcfg, draft_k=4, draft="self-qdq")
+    eng.submit(prompt_tokens, max_new_tokens=16)
+    outputs = eng.drain()
+    eng.stats()["acceptance_rate"], eng.stats()["accepted_per_step"]
+"""
+from .engine import SpecEngine
+from .proposer import DraftProposer, self_draft_model
+
+__all__ = ["SpecEngine", "DraftProposer", "self_draft_model"]

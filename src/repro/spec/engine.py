@@ -1,0 +1,206 @@
+"""The speculative serving engine: draft k, verify k+1, accept j+1, roll
+back the rest.
+
+``SpecEngine`` replaces the plain engine's one-token decode with a
+draft/verify round per scheduling step:
+
+  1. **draft** — the proposer autoregressively proposes up to k tokens per
+     running slot against its mirrored paged pool (per-slot effective k is
+     capped at remaining-budget - 1 and at the slot's block reservation, so
+     proposal writes can never escape the blocks admission reserved);
+  2. **verify** — ONE jitted ``decoder.verify_step_paged`` scores all k+1
+     positions per slot against the target pool (causal intra-chunk masks,
+     per-slot position offsets, per-token activation scales);
+  3. **accept** — ``sampling.speculative_verify_tokens`` applies the
+     lossless accept/resample rule; greedy rows emit the target argmax
+     chain token-for-token (the parity oracle vs the plain engine);
+  4. **rollback** — slots advance by ACCEPTED length only: ``n_cached``
+     grows by j+1, the proposal high-water mark is kept in ``n_written``,
+     and rejected positions stay dead behind the length mask until the
+     next round overwrites them.  ``Scheduler.rollback_to`` (pool
+     ``truncate_to``) releases whole blocks the accepted length no longer
+     justifies at early finish.
+
+A slot whose remaining budget is 1 degenerates to a plain decode step
+(k_eff == 0) through the same compiled verify function, so the engine
+needs no second decode path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decoder
+from repro.serve import sampling
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Request
+
+from .proposer import DraftProposer, self_draft_model
+
+
+class SpecEngine(Engine):
+    """Speculative-decoding engine over the continuous-batching substrate.
+
+    ``draft_k``: proposal length k (every verify scores k+1 positions).
+    ``draft``: "self-qdq" (the target's own QDQ forward proposes — the
+    acceptance ceiling for a QAD pair), "self-truncate" (first
+    ``draft_layers`` layers of the same model, default half), or
+    "two-model" (pass ``draft_model=(dcfg, dparams, dqcfg)`` — a small
+    distilled student drafting for the packed target).  Greedy outputs are
+    token-for-token identical to the plain ``Engine`` for EVERY draft mode;
+    the draft only moves the acceptance rate.
+    """
+
+    def __init__(self, cfg, params, qcfg=None, *, draft_k: int = 4,
+                 draft: str = "self-qdq", draft_layers: int = 0,
+                 draft_model=None, **kw):
+        super().__init__(cfg, params, qcfg, **kw)
+        if draft_k < 1:
+            raise ValueError(f"draft_k must be >= 1, got {draft_k}")
+        self.spec_k = int(draft_k)
+        self.draft_mode = draft if draft_model is None else "two-model"
+        # verify numerics: per-position activation scales (+ per-token MoE
+        # dispatch) make each of the k+1 scored positions bit-compatible
+        # with a sequential one-token decode — see decoder.verify_step_paged
+        self.vsq = dataclasses.replace(self.sq, act_scope="token")
+        self.vcfg = (dataclasses.replace(self.cfg, moe_dispatch="token")
+                     if self.cfg.n_experts else self.cfg)
+
+        if draft_model is not None:
+            dcfg, dparams, dqcfg = draft_model
+        elif draft in ("self-qdq", "self-truncate"):
+            dcfg, dparams = self_draft_model(
+                self.cfg, params, mode=draft.removeprefix("self-"),
+                n_layers=draft_layers)
+            dqcfg = self.sq
+        else:
+            raise ValueError(f"unknown draft mode {draft!r} "
+                             "(pass draft_model= for two-model)")
+        if dcfg.vocab_size != cfg.vocab_size:
+            raise ValueError("draft and target vocabularies differ")
+        self.proposer = DraftProposer(dcfg, dparams, dqcfg, pool=self.pool)
+
+        self._verify = jax.jit(
+            lambda params, pool, bt, lens, active, nprop, toks:
+            decoder.verify_step_paged(self.vcfg, params, pool, bt, lens,
+                                      active, nprop, {"tokens": toks},
+                                      self.vsq),
+            donate_argnums=(1,))
+        self._accept = jax.jit(sampling.speculative_verify_tokens)
+
+        self.verify_steps = 0
+        self.verify_slot_rounds = 0      # one per (running slot, verify step)
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.rolled_back_tokens = 0
+
+    # -- hooks -------------------------------------------------------------
+
+    def _after_prefill(self, req: Request) -> None:
+        self.proposer.prefill_request(req)
+
+    # -- the draft/verify/accept round -------------------------------------
+
+    def _do_decode(self, finished: list[Request]) -> None:
+        reqs = self.sched.running()
+        if not reqs:
+            return
+        t0 = time.time()
+        ns, mb, k = self.n_slots, self.max_blocks_per_slot, self.spec_k
+        bs = self.pool.block_size
+        last = np.zeros((ns,), np.int32)
+        prev = np.zeros((ns,), np.int32)
+        lens = np.zeros((ns,), np.int32)
+        active = np.zeros((ns,), bool)
+        bt = np.zeros((ns, mb), np.int32)
+        k_eff = np.zeros((ns,), np.int32)
+        draft_lens = np.zeros((ns,), np.int32)
+        temps = np.zeros((ns,), np.float32)
+        topks = np.zeros((ns,), np.int32)
+        seeds = np.zeros((ns,), np.int32)
+        idxs = np.zeros((ns,), np.int32)
+        for r in reqs:
+            s = r.slot
+            last[s] = r.output[-1]
+            prev[s] = r.output[-2] if len(r.output) > 1 else r.prompt[-1]
+            lens[s] = r.n_cached
+            active[s] = True
+            bt[s, : len(r.block_ids)] = r.block_ids
+            draft_lens[s] = r.draft_cached
+            remaining = r.max_new_tokens - len(r.output)
+            cap = len(r.block_ids) * bs - r.n_cached - 1
+            k_eff[s] = max(0, min(k, remaining - 1, cap))
+            temps[s] = r.sampling.temperature
+            topks[s] = r.sampling.top_k
+            seeds[s] = r.sampling.seed
+            idxs[s] = len(r.output)
+
+        st = types.SimpleNamespace(
+            bt=bt, lens=lens, active=active, k_eff=k_eff, last_tok=last,
+            prev_tok=prev, draft_lens=draft_lens, temps=temps, topks=topks,
+            seeds=seeds, tok_idx=idxs)
+        draft_toks, draft_probs = self.proposer.propose(st, k)
+
+        tokens = np.concatenate([last[:, None], draft_toks], axis=1)
+        logits, self.pool.data = self._verify(
+            self.params, self.pool.data, jnp.asarray(bt), jnp.asarray(lens),
+            jnp.asarray(active), jnp.asarray(k_eff), jnp.asarray(tokens))
+        out_toks, n_emit, n_acc = map(np.asarray, self._accept(
+            logits, jnp.asarray(draft_toks), jnp.asarray(draft_probs),
+            jnp.asarray(k_eff), jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(seeds), jnp.asarray(idxs)))
+
+        dt = time.time() - t0
+        self.decode_s += dt
+        self.decode_steps += 1
+        self.verify_steps += 1
+        self.verify_slot_rounds += len(reqs)
+
+        for r in reqs:
+            s = r.slot
+            ne, j, ke = int(n_emit[s]), int(n_acc[s]), int(k_eff[s])
+            self.drafted_tokens += ke
+            self.accepted_tokens += j
+            self.rolled_back_tokens += ke - j
+            toks_emit = [int(out_toks[s, t]) for t in range(ne)]
+            if self.eos_id is not None and self.eos_id in toks_emit:
+                # EOS mid-pack: the accepted tail after EOS is discarded
+                toks_emit = toks_emit[: toks_emit.index(self.eos_id) + 1]
+            base = r.n_cached
+            r.n_cached = base + len(toks_emit)        # accepted length only
+            r.n_written = max(r.n_written, base + ke + 1)
+            r.draft_cached = base + min(j + 1, ke)
+            self.decode_tokens += len(toks_emit)
+            # a request that got n tokens this step experienced dt/n per
+            # token (the plain engine's dt-per-token at n == 1)
+            self.token_lat_s.extend([dt / len(toks_emit)] * len(toks_emit))
+            for tok in toks_emit:
+                self._emit(r, tok, finished)
+
+    # -- reporting ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        d = super().stats()
+        d.update({
+            "spec_k": self.spec_k, "draft_mode": self.draft_mode,
+            "verify_steps": self.verify_steps,
+            "verify_slot_rounds": self.verify_slot_rounds,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "rolled_back_tokens": self.rolled_back_tokens,
+            "acceptance_rate": self.accepted_tokens
+            / max(self.drafted_tokens, 1),
+            # tokens a slot emits per verify round (accepted + the always-
+            # emitted correction/bonus token): 1.0 = no speculation win,
+            # k+1 = every proposal accepted
+            "accepted_per_step": (self.accepted_tokens
+                                  + self.verify_slot_rounds)
+            / max(self.verify_slot_rounds, 1),
+            "draft_pool_bytes": self.proposer.nbytes(),
+        })
+        return d

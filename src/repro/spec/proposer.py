@@ -1,0 +1,168 @@
+"""Draft proposers: autoregressive k-token proposals over a mirrored pool.
+
+A proposer owns a draft model (config + params + quant policy) and a paged
+KV pool with the SAME block geometry as the target engine's pool, indexed
+by the SAME block ids — one allocator governs both caches, so admission,
+rollback, and retirement stay single-sourced in the scheduler.
+
+Draft-prefix bookkeeping lives in ``Request.draft_cached``: the number of
+leading draft-pool positions whose KV was computed from the *accepted*
+token sequence.  After a verify round that accepted j of ke proposals the
+prefix is ``base + min(j+1, ke)`` (position ``base + i`` holds proposal
+token t_i, and t_0..t_j are confirmed); when every proposal survives the
+draft lags the target by exactly one position and the next round opens
+with a one-token catch-up feed.  Rejected draft positions need no device
+work — the prefix counter simply doesn't advance past them and the next
+round's writes overwrite them.
+
+Draft numerics are free — ANY proposal distribution yields a lossless
+engine — so proposers run per-token activation scales (``act_scope=
+"token"``) like the verify step; prefill mirrors the target engine's
+row-scope numerics so a ``self-qdq`` draft reproduces the target exactly
+and accepts ~everything (the measured ceiling for a QAD student/teacher
+pair).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decoder
+
+from repro.serve.sampling import draft_sample_tokens
+
+
+def self_draft_model(cfg, params, mode: str = "qdq", n_layers: int = 0):
+    """Derive a draft (cfg, params) from the target model itself.
+
+    ``qdq``      — the full model (for a QDQ-served target this is the
+                   target bit-for-bit; for a packed target it is the QDQ
+                   twin the packed kernel is parity-tested against).
+    ``truncate`` — the first ``n_layers`` layers (default: half) with the
+                   target's own embedding, final norm, and LM head — the
+                   truncated-layer forward of the same packed weights.
+    """
+    if mode == "qdq":
+        return cfg, params
+    if mode != "truncate":
+        raise ValueError(f"unknown self-draft mode {mode!r}")
+    dl = n_layers or max(1, cfg.n_layers // 2)
+    if not 1 <= dl <= cfg.n_layers:
+        raise ValueError(f"draft depth {dl} outside 1..{cfg.n_layers}")
+    dcfg = dataclasses.replace(cfg, n_layers=dl,
+                               name=f"{cfg.name}-draft{dl}")
+    dparams = dict(params)
+    # stacked layer leaves (incl. PackedNVFP4 codes/scales) carry the layer
+    # dim first, so a pytree slice yields a valid dl-layer parameter tree
+    dparams["layers"] = jax.tree.map(lambda a: a[:dl], params["layers"])
+    return dcfg, dparams
+
+
+class DraftProposer:
+    """k-token autoregressive proposals for the speculative engine.
+
+    ``qcfg`` is the draft model's serving quant policy (weights already
+    PTQ'd; runtime weight fake-quant is disabled here).  ``pool`` is the
+    TARGET engine's ``PagedKVPool`` — the draft mirror copies its geometry
+    and shares its block ids (and its block-count arithmetic), but keeps
+    its own device pages.
+    """
+
+    def __init__(self, cfg, params, qcfg, *, pool):
+        if cfg.n_experts and cfg.moe_dispatch not in ("local", "token"):
+            cfg = dataclasses.replace(cfg, moe_dispatch="local")
+        self.cfg = cfg
+        self.dcfg = (dataclasses.replace(cfg, moe_dispatch="token")
+                     if cfg.n_experts else cfg)
+        self.params = params
+        sq = dataclasses.replace(qcfg, quantize_weights=False)
+        self.psq = dataclasses.replace(sq, act_scope="row")     # prefill
+        self.dsq = dataclasses.replace(sq, act_scope="token")   # decode
+        self.pool = pool                                        # geometry only
+        self.data = decoder.init_paged_pool(cfg, pool.n_blocks,
+                                            pool.block_size)
+
+        self._step = jax.jit(
+            lambda data, bt, lens, active, toks, temps, topks, seeds, tidx:
+            self._step_impl(data, bt, lens, active, toks, temps, topks,
+                            seeds, tidx),
+            donate_argnums=(0,))
+        self._prefill_fns: dict[int, object] = {}
+        self._write_fns: dict[int, object] = {}
+
+    def _step_impl(self, data, bt, lens, active, toks, temps, topks, seeds,
+                   tidx):
+        logits, data = decoder.decode_step_paged(
+            self.dcfg, self.params, data, bt, lens, active,
+            {"tokens": toks}, self.dsq)
+        tok, q = draft_sample_tokens(logits[:, 0, :], temps, topks, seeds,
+                                     tidx)
+        return tok, q, data
+
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in jax.tree.leaves(self.data))
+
+    # -- per-request lifecycle --------------------------------------------
+
+    def prefill_request(self, req) -> None:
+        """Whole-prompt draft prefill into this request's (shared) blocks."""
+        p = req.prompt_len
+        if p not in self._prefill_fns:
+            self._prefill_fns[p] = jax.jit(
+                lambda params, toks: decoder.prefill(
+                    self.cfg, params, {"tokens": toks}, self.psq, s_max=None))
+            self._write_fns[p] = jax.jit(decoder.write_prompt_to_pool,
+                                         donate_argnums=(0,))
+        _, cache = self._prefill_fns[p](self.params,
+                                        jnp.asarray(req.prompt[None]))
+        cache = {k: v for k, v in cache.items() if k != "pos"}
+        ids = np.asarray(req.block_ids[: self.pool.blocks_for(p)], np.int32)
+        self.data = self._write_fns[p](self.data, cache, jnp.asarray(ids))
+        req.draft_cached = p
+
+    # -- the proposal round ------------------------------------------------
+
+    def propose(self, st, k: int):
+        """Draft up to ``st.k_eff[s]`` tokens per slot (k is the static cap).
+
+        ``st`` carries the round's per-slot state as numpy arrays: bt
+        [ns, MB], lens [ns] accepted KV counts, active [ns], k_eff [ns],
+        last_tok / prev_tok [ns] (the newest and second-newest sequence
+        tokens), draft_lens [ns] (= Request.draft_cached), temps / topks /
+        seeds / tok_idx [ns].  Returns (draft_tokens [ns, k] i32,
+        draft_probs [ns, k, V] f32) — rows are meaningful up to each
+        slot's k_eff; the engine masks the rest.
+        """
+        ns = st.lens.shape[0]
+        v = self.cfg.vocab_size
+        bt = jnp.asarray(st.bt)
+        temps, topks, seeds = (jnp.asarray(st.temps), jnp.asarray(st.topks),
+                               jnp.asarray(st.seeds))
+        lag = st.lens - st.draft_lens
+        assert not (st.active & (lag > 1)).any(), \
+            f"draft prefix lags > 1 position: {lag}"
+        need = st.active & (lag == 1)
+        if need.any():
+            # catch-up: feed the token at position draft_lens (the second-
+            # newest emission) so the draft prefix reaches the target's
+            _, _, self.data = self._step(
+                self.data, bt, jnp.asarray(st.draft_lens),
+                jnp.asarray(need), jnp.asarray(st.prev_tok[:, None]),
+                temps, topks, seeds, jnp.asarray(st.tok_idx))
+
+        draft_toks = np.zeros((ns, k), np.int32)
+        draft_probs = np.zeros((ns, k, v), np.float32)
+        cur = jnp.asarray(st.last_tok)
+        for i in range(int(st.k_eff.max(initial=0))):
+            act_i = jnp.asarray(st.active & (i < st.k_eff))
+            tok, q, self.data = self._step(
+                self.data, bt, jnp.asarray(st.lens + i), act_i,
+                cur[:, None], temps, topks, seeds,
+                jnp.asarray(st.tok_idx + i))
+            draft_toks[:, i] = np.asarray(tok)
+            draft_probs[:, i] = np.asarray(q)
+            cur = tok
+        return draft_toks, draft_probs

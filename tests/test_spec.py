@@ -1,0 +1,347 @@
+"""Speculative decoding subsystem (repro.spec): the greedy parity oracle
+(spec-decode output token-for-token identical to the plain engine on dense
+qdq + packed and FP8-KV MoE), multi-token verify vs sequential decode
+bitwise parity, lossless accept/resample unit behavior, KV rollback /
+pool-truncation accounting, and stochastic determinism.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import serve
+from repro.models import decoder
+from repro.serve import Engine, PagedKVPool, SamplingParams
+from repro.serve.sampling import speculative_verify_tokens
+from repro.spec import SpecEngine, self_draft_model
+
+ARCH = "qwen1.5-0.5b"
+GEN = 5
+ENG_KW = dict(n_slots=2, block_size=8, max_blocks_per_slot=4, n_blocks=16)
+
+
+@pytest.fixture(scope="module")
+def loaded():
+    cfg = configs.get_smoke(ARCH)
+    rng = jax.random.PRNGKey(0)
+    return cfg, {fmt: serve.load_quantized(cfg, rng, fmt)
+                 for fmt in ("qdq", "packed")}
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = jax.random.PRNGKey(seed)
+    return [np.asarray(jax.random.randint(jax.random.fold_in(rng, i),
+                                          (l,), 4, cfg.vocab_size))
+            for i, l in enumerate(lens)]
+
+
+def _plain_ref(cfg, params, qcfg, prompts, gen=GEN, **kw):
+    eng = Engine(cfg, params, qcfg, **{**ENG_KW, **kw})
+    rids = [eng.submit(p, gen) for p in prompts]
+    out = eng.drain(max_steps=500)
+    assert eng.pool.used_blocks == 0
+    return [out[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# the parity oracle: greedy spec decode == plain engine, every draft mode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt,draft", [("qdq", "self-qdq"),
+                                       ("qdq", "self-truncate"),
+                                       ("packed", "self-qdq"),
+                                       ("packed", "self-truncate")])
+def test_greedy_parity_self_draft(loaded, fmt, draft):
+    cfg, by_fmt = loaded
+    params, qcfg = by_fmt[fmt]
+    prompts = _prompts(cfg, [5, 13])
+    ref = _plain_ref(cfg, params, qcfg, prompts)
+
+    eng = SpecEngine(cfg, params, qcfg, draft_k=3, draft=draft, **ENG_KW)
+    rids = [eng.submit(p, GEN) for p in prompts]
+    out = eng.drain(max_steps=500)
+    assert eng.pool.used_blocks == 0                # rollback leaks nothing
+    for rid, r in zip(rids, ref):
+        np.testing.assert_array_equal(out[rid], r)
+    st = eng.stats()
+    assert st["verify_steps"] < eng.decode_tokens   # multi-token steps ran
+    if draft == "self-qdq" and fmt == "qdq":
+        # the draft IS the target: acceptance is the theoretical ceiling
+        assert st["acceptance_rate"] == 1.0
+        assert st["rolled_back_tokens"] == 0
+    assert st["accepted_per_step"] >= 1.0
+
+
+def test_greedy_parity_two_model(loaded):
+    """A fresh (near-chance acceptance) student still yields token-identical
+    greedy output — losslessness never depends on draft quality."""
+    cfg, by_fmt = loaded
+    params, qcfg = by_fmt["packed"]
+    dcfg = dataclasses.replace(cfg, n_layers=max(1, cfg.n_layers // 2),
+                               name="student")
+    dparams, dqcfg = serve.load_quantized(dcfg, jax.random.PRNGKey(99), "qdq")
+    prompts = _prompts(cfg, [5, 13])
+    ref = _plain_ref(cfg, params, qcfg, prompts)
+
+    eng = SpecEngine(cfg, params, qcfg, draft_k=3,
+                     draft_model=(dcfg, dparams, dqcfg), **ENG_KW)
+    rids = [eng.submit(p, GEN) for p in prompts]
+    out = eng.drain(max_steps=500)
+    assert eng.pool.used_blocks == 0
+    for rid, r in zip(rids, ref):
+        np.testing.assert_array_equal(out[rid], r)
+    # a bad draft mostly rejects; every rejection is rolled back
+    st = eng.stats()
+    assert st["rolled_back_tokens"] == (st["drafted_tokens"]
+                                        - st["accepted_tokens"])
+
+
+def test_greedy_parity_fp8_kv_moe():
+    cfg = configs.get_smoke("arctic-480b")
+    params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0), "qdq")
+    prompts = _prompts(cfg, [4, 9], seed=5)
+    ref = _plain_ref(cfg, params, qcfg, prompts, gen=4)
+
+    eng = SpecEngine(cfg, params, qcfg, draft_k=2, draft="self-qdq", **ENG_KW)
+    assert eng.pool.fp8
+    rids = [eng.submit(p, 4) for p in prompts]
+    out = eng.drain(max_steps=500)
+    assert eng.pool.used_blocks == 0
+    for rid, r in zip(rids, ref):
+        np.testing.assert_array_equal(out[rid], r)
+    assert eng.stats()["acceptance_rate"] == 1.0
+
+
+def test_eos_mid_pack_truncates_and_matches(loaded):
+    """EOS accepted inside a verified pack finishes the request, discards
+    the accepted tail, rolls the block reservation back to the accepted
+    length, and still matches the plain engine's EOS behavior."""
+    cfg, by_fmt = loaded
+    params, qcfg = by_fmt["qdq"]
+    prompts = _prompts(cfg, [6], seed=21)
+    (ref,) = _plain_ref(cfg, params, qcfg, prompts, gen=8)
+    eos = int(ref[2])                               # third greedy token
+
+    plain = Engine(cfg, params, qcfg, eos_id=eos, **ENG_KW)
+    pr = plain.submit(prompts[0], 8)
+    pref = plain.drain(max_steps=200)[pr]
+
+    eng = SpecEngine(cfg, params, qcfg, draft_k=4, draft="self-qdq",
+                     eos_id=eos, **ENG_KW)
+    rid = eng.submit(prompts[0], 8)
+    out = eng.drain(max_steps=200)[rid]
+    np.testing.assert_array_equal(out, pref)
+    assert out[-1] == eos and len(out) == 3
+    assert eng.sched.finished[rid].finish_reason == "eos"
+    assert eng.pool.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# verify_step_paged: bitwise vs sequential one-token decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", [ARCH, "arctic-480b"])
+def test_verify_step_bitwise_matches_sequential(arch):
+    cfg = configs.get_smoke(arch)
+    params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0), "qdq")
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_dispatch="local")
+    vcfg = (dataclasses.replace(cfg, moe_dispatch="token")
+            if cfg.n_experts else cfg)
+    sq_row = dataclasses.replace(qcfg, quantize_weights=False,
+                                 act_scope="row")
+    sq_tok = dataclasses.replace(qcfg, quantize_weights=False,
+                                 act_scope="token")
+
+    p_len, bs = 5, 8
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(5), (p_len,),
+                                           4, cfg.vocab_size))
+    pool = decoder.init_paged_pool(cfg, 8, bs)
+    logits, cache = decoder.prefill(cfg, params,
+                                    {"tokens": jnp.asarray(prompt[None])},
+                                    sq_row, s_max=None)
+    cache = {k: v for k, v in cache.items() if k != "pos"}
+    pool = decoder.write_prompt_to_pool(
+        pool, cache, jnp.asarray(np.arange(1, dtype=np.int32)))
+    bt = jnp.asarray(np.arange(4, dtype=np.int32)[None, :])
+    active = jnp.asarray([True])
+
+    toks, seq_logits = [int(jnp.argmax(logits[0, -1]))], []
+    seq_pool, cached = pool, p_len
+    for _ in range(3):
+        lg, seq_pool = decoder.decode_step_paged(
+            cfg, params, seq_pool, bt, jnp.asarray([cached], jnp.int32),
+            active, {"tokens": jnp.asarray([[toks[-1]]], jnp.int32)}, sq_row)
+        seq_logits.append(np.asarray(lg[0, 0], np.float32))
+        toks.append(int(jnp.argmax(lg[0, 0])))
+        cached += 1
+
+    vlg, _ = decoder.verify_step_paged(
+        vcfg, params, pool, bt, jnp.asarray([p_len], jnp.int32), active,
+        jnp.asarray([2], jnp.int32),
+        {"tokens": jnp.asarray([toks[:3]], jnp.int32)}, sq_tok)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(vlg[0, i], np.float32),
+                                      seq_logits[i],
+                                      err_msg=f"verify position {i}")
+
+
+# ---------------------------------------------------------------------------
+# accept/resample unit behavior
+# ---------------------------------------------------------------------------
+
+
+def _logits_for_chain(chain, v, k1):
+    """[K1, V] logits whose argmax at position i is chain[i]."""
+    lg = np.zeros((k1, v), np.float32)
+    for i, t in enumerate(chain):
+        lg[i, t] = 5.0
+    return lg
+
+
+def test_speculative_accept_greedy_chain():
+    v, k = 16, 3
+    chain = [4, 7, 9, 11]                            # target argmax chain
+    lg = jnp.asarray(_logits_for_chain(chain, v, k + 1)[None])
+    zeros = jnp.zeros((1,), jnp.int32)
+    args = (jnp.zeros((1,), jnp.float32), zeros, zeros, zeros)
+
+    # draft agrees on 2 of 3 -> 2 accepted + 1 corrected emission
+    draft = jnp.asarray([[4, 7, 1]], jnp.int32)
+    q = jnp.full((1, k, v), 1.0 / v)
+    out, n_emit, n_acc = speculative_verify_tokens(
+        lg, draft, q, jnp.asarray([k]), *args)
+    assert int(n_acc[0]) == 2 and int(n_emit[0]) == 3
+    assert np.asarray(out)[0, :3].tolist() == chain[:3]
+
+    # full agreement -> k accepted + the bonus token
+    draft = jnp.asarray([chain[:k]], jnp.int32)
+    out, n_emit, n_acc = speculative_verify_tokens(
+        lg, draft, q, jnp.asarray([k]), *args)
+    assert int(n_acc[0]) == k and int(n_emit[0]) == k + 1
+    assert np.asarray(out)[0].tolist() == chain
+
+    # first token already disagrees -> plain decode's answer, nothing more
+    draft = jnp.asarray([[1, 2, 3]], jnp.int32)
+    out, n_emit, n_acc = speculative_verify_tokens(
+        lg, draft, q, jnp.asarray([k]), *args)
+    assert int(n_acc[0]) == 0 and int(n_emit[0]) == 1
+    assert int(np.asarray(out)[0, 0]) == chain[0]
+
+    # n_prop == 0 (degenerate plain decode through the verify path)
+    out, n_emit, n_acc = speculative_verify_tokens(
+        lg, draft, q, jnp.asarray([0]), *args)
+    assert int(n_acc[0]) == 0 and int(n_emit[0]) == 1
+    assert int(np.asarray(out)[0, 0]) == chain[0]
+
+
+def test_speculative_accept_identical_draft_always_accepts():
+    """q == p accepts every proposal with probability 1 (u*q < p for u<1)."""
+    v, k = 8, 3
+    rng = jax.random.PRNGKey(0)
+    lg = jax.random.normal(rng, (1, k + 1, v))
+    temp = jnp.asarray([0.7], jnp.float32)
+    topk = jnp.zeros((1,), jnp.int32)
+    p = jax.nn.softmax(lg.astype(jnp.float32) / 0.7, -1)
+    # draft proposes any token with q == p: must accept all k
+    draft = jnp.argmax(p[:, :k], -1).astype(jnp.int32)
+    out, n_emit, n_acc = speculative_verify_tokens(
+        lg, draft, p[:, :k], jnp.asarray([k]), temp, topk,
+        jnp.asarray([3]), jnp.asarray([0]))
+    assert int(n_acc[0]) == k and int(n_emit[0]) == k + 1
+    np.testing.assert_array_equal(np.asarray(out)[0, :k], np.asarray(draft)[0])
+
+
+def test_speculative_accept_zero_q_rejects():
+    """A draft token the target assigns zero mass must be rejected and the
+    resample must come from the residual's support."""
+    v, k = 8, 1
+    lg = np.full((1, k + 1, v), -30.0, np.float32)
+    lg[0, :, 2] = 5.0                                # target: all mass on 2
+    draft = jnp.asarray([[6]], jnp.int32)            # draft proposed 6
+    q = np.zeros((1, k, v), np.float32)
+    q[0, 0, 6] = 1.0
+    out, n_emit, n_acc = speculative_verify_tokens(
+        jnp.asarray(lg), draft, jnp.asarray(q), jnp.asarray([k]),
+        jnp.asarray([1.0], jnp.float32), jnp.zeros((1,), jnp.int32),
+        jnp.asarray([7]), jnp.asarray([0]))
+    assert int(n_acc[0]) == 0
+    assert int(np.asarray(out)[0, 0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# rollback accounting + stochastic determinism
+# ---------------------------------------------------------------------------
+
+
+def test_pool_truncate_to():
+    cfg = configs.get_smoke(ARCH)
+    pool = PagedKVPool(decoder.init_paged_pool(cfg, 8, 4), 4)
+    ids = pool.alloc(5)                              # 20 token capacity
+    kept, freed = pool.truncate_to(ids, 9)           # 9 tokens -> 3 blocks
+    assert len(kept) == 3 and len(freed) == 2
+    assert pool.free_blocks == 5
+    with pytest.raises(ValueError):
+        pool.free(freed)                             # already back in pool
+    kept2, freed2 = pool.truncate_to(kept, 0)        # 0 tokens frees all
+    assert kept2 == [] and len(freed2) == 3
+    assert pool.free_blocks == 8
+    with pytest.raises(ValueError):
+        pool.truncate_to(ids, -1)
+
+
+def test_spec_accounting_by_accepted_length(loaded):
+    """n_cached advances by accepted tokens only; n_written records the
+    proposal high-water mark; the gap is the rolled-back KV."""
+    cfg, by_fmt = loaded
+    params, qcfg = by_fmt["qdq"]
+    dcfg, dparams = self_draft_model(cfg, params, "truncate", 1)
+    eng = SpecEngine(cfg, params, qcfg, draft_k=3,
+                     draft_model=(dcfg, dparams, qcfg), **ENG_KW)
+    rid = eng.submit(_prompts(cfg, [6], seed=31)[0], GEN)
+    eng.drain(max_steps=200)
+    req = eng.sched.finished[rid]
+    st = eng.stats()
+    assert req.n_cached == req.prompt_len + len(req.output) - 1
+    assert req.n_written >= req.n_cached
+    assert st["drafted_tokens"] == st["accepted_tokens"] + st["rolled_back_tokens"]
+    assert eng.pool.used_blocks == 0
+
+
+def test_spec_stochastic_deterministic_and_complete(loaded):
+    cfg, by_fmt = loaded
+    params, qcfg = by_fmt["qdq"]
+    sp = SamplingParams(temperature=0.8, top_k=16, seed=123)
+
+    def run():
+        eng = SpecEngine(cfg, params, qcfg, draft_k=3, draft="self-truncate",
+                         **ENG_KW)
+        rids = [eng.submit(p, 4, sampling=sp)
+                for p in _prompts(cfg, [5, 12], seed=11)]
+        out = eng.drain(max_steps=200)
+        assert eng.pool.used_blocks == 0
+        return [out[r].tolist() for r in rids]
+
+    first, second = run(), run()
+    assert first == second
+    assert all(len(o) == 4 for o in first)
+
+
+def test_self_draft_model_truncation(loaded):
+    cfg, by_fmt = loaded
+    params, _ = by_fmt["packed"]
+    dcfg, dparams = self_draft_model(cfg, params, "truncate", 1)
+    assert dcfg.n_layers == 1
+    lead = jax.tree.leaves(dparams["layers"])
+    assert all(a.shape[0] == 1 for a in lead)
+    # embedding / head shared with the target
+    assert dparams["embed"] is params["embed"]
+    with pytest.raises(ValueError):
+        self_draft_model(cfg, params, "truncate", cfg.n_layers + 1)
+    with pytest.raises(ValueError):
+        SpecEngine(cfg, params, by_fmt["packed"][1], draft_k=0, **ENG_KW)
