@@ -6,11 +6,14 @@ both weight formats across a dense, a MoE, and a recurrent arch, prices
 the full-scale joint memory win (packed 0.5625 B/param weights + the
 recipe's FP8-vs-BF16 KV cache at decode_32k), serves a mixed-length
 staggered workload through the ``repro.serve`` engine (qdq and packed,
-with TTFT / per-token latency percentiles), and sweeps speculative
-decoding (``repro.spec``) over draft length k — acceptance rate, per-slot
-accepted tokens, and tok/s vs the plain-engine baseline for a dense and a
-MoE/FP8-KV arch plus a two-model draft — recording everything to
-``BENCH_serve.json`` (and the harness CSV via ``emit``):
+with TTFT / per-token latency percentiles), prices the TP partition
+(``sharded`` section: per-device packed-weight and KV-pool bytes at tp=2/8
+via ``sharding.resolve_packed``), and sweeps speculative decoding
+(``repro.spec``) over draft length k — acceptance rate, per-slot accepted
+tokens, and tok/s vs the plain-engine baseline for a dense and a
+MoE/FP8-KV arch plus a two-model draft and an adaptive-k row (chosen-k
+distribution) — recording everything to ``BENCH_serve.json`` (and the
+harness CSV via ``emit``):
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen1.5-0.5b]
 
@@ -117,15 +120,18 @@ def speculative_rows(dense_arch: str, moe_arch: str, gen: int,
                      ks=(2, 4)) -> dict:
     """Speculative decoding on the engine: acceptance rate, per-slot-round
     accepted tokens, and tok/s vs draft length k, for a dense (packed) and
-    a MoE/FP8-KV (qdq) arch, plus a two-model draft row.  ``k0`` rows are
-    the plain-engine baseline the speedup is measured against."""
+    a MoE/FP8-KV (qdq) arch, plus a two-model draft row and a draft-cost-
+    aware adaptive-k row (chosen-k distribution).  ``k0`` rows are the
+    plain-engine baseline the speedup is measured against."""
 
-    def one(arch, k, draft):
+    def one(arch, k, draft, adaptive=False):
         cfg = configs.get_smoke(arch)
         argv = ["--engine", "--arch", arch, "--requests", "4", "--gen",
                 str(gen), "--slots", "2", "--no-parity"]
         if k:
             argv += ["--speculative", str(k), "--draft", draft]
+        if adaptive:
+            argv += ["--adaptive-k"]
         args = serve.build_parser().parse_args(argv)
         fmt = "qdq" if cfg.n_experts else "packed"
         params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0), fmt)
@@ -142,8 +148,11 @@ def speculative_rows(dense_arch: str, moe_arch: str, gen: int,
             row.update({"acceptance_rate": st["acceptance_rate"],
                         "accepted_per_step": st["accepted_per_step"],
                         "rolled_back_tokens": st["rolled_back_tokens"],
-                        "draft_pool_bytes": st["draft_pool_bytes"]})
-            emit(f"serve/spec/{arch}/{draft}/k{k}",
+                        "draft_pool_bytes": st["draft_pool_bytes"],
+                        "adaptive_k": st["adaptive_k"],
+                        "chosen_k_hist": st["chosen_k_hist"]})
+            emit(f"serve/spec/{arch}/{draft}/k{k}"
+                 + ("/adaptive" if adaptive else ""),
                  1e6 / max(st["decode_tok_s"], 1e-9),
                  f"acceptance={st['acceptance_rate']:.3f};"
                  f"accepted_per_step={st['accepted_per_step']:.2f}")
@@ -155,6 +164,31 @@ def speculative_rows(dense_arch: str, moe_arch: str, gen: int,
         out["dense"].append(one(dense_arch, k, "self-qdq"))
     out["moe"].append(one(moe_arch, ks[0], "self-qdq"))
     out["two_model"] = [one(dense_arch, ks[0], "two-model")]
+    out["adaptive"] = [one(dense_arch, ks[-1], "self-qdq", adaptive=True)]
+    return out
+
+
+def sharded_rows(archs, tps=(2, 8), n_blocks: int = 1024) -> dict:
+    """Per-device weight/KV bytes under TP partitions of the full-scale
+    configs (analytic — ``sharding.resolve_packed`` divisibility, no
+    devices needed): what each chip holds when ``PackedNVFP4`` codes/scales
+    shard column-/row-parallel and the paged pool shards by KV heads."""
+    out = {}
+    for a in archs:
+        cfg = configs.get_config(a)
+        if cfg.family != "decoder":
+            continue                    # paged TP serving is decoder-only
+        out[a] = {}
+        for tp in tps:
+            rep = specs.serve_memory_report(cfg, SHAPES["decode_32k"],
+                                            n_blocks=n_blocks, tp=tp)
+            sh = rep.get("sharded")
+            if not sh:
+                continue
+            sh["weight_shard_efficiency"] = (
+                rep["weight_bytes_packed"]
+                / max(sh["weight_bytes_packed_per_device"] * tp, 1))
+            out[a][f"tp{tp}"] = sh
     return out
 
 
@@ -184,10 +218,19 @@ def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
           f"packed={e['packed']['decode_tok_s']:.1f} tok/s "
           f"peak-pool-util={e['packed']['peak_pool_utilization']:.2f}")
 
+    results["sharded"] = sharded_rows(dict.fromkeys((arch, *archs)))
+    for a, by_tp in results["sharded"].items():
+        for tpname, sh in by_tp.items():
+            print(f"[serve_bench] sharded {a} {tpname}: "
+                  f"weights/dev={sh['weight_bytes_packed_per_device']/2**20:.1f}MiB "
+                  f"kv-pool/dev={sh['kv_pool_bytes_per_device']/2**20:.1f}MiB "
+                  f"shard-eff={sh['weight_shard_efficiency']:.3f}")
+
     results["speculative"] = speculative_rows(arch, "arctic-480b", gen)
     for row in (results["speculative"]["dense"]
                 + results["speculative"]["moe"]
-                + results["speculative"]["two_model"]):
+                + results["speculative"]["two_model"]
+                + results["speculative"]["adaptive"]):
         extra = (f" acceptance={row['acceptance_rate']:.3f} "
                  f"accepted/step={row['accepted_per_step']:.2f}"
                  if row["k"] else " (baseline)")

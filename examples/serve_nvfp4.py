@@ -11,11 +11,21 @@ settings are submitted to ``repro.serve.Engine``, scheduled into decode
 slots over a paged KV pool, and drained as they finish.
 
     PYTHONPATH=src python examples/serve_nvfp4.py --engine
+
+``--tp 2`` serves the engine tensor-parallel: packed codes/scales shard
+column-/row-parallel over a ("data", "model") mesh, the KV pool shards by
+KV heads, and the output stays token-for-token what one device produces
+(emulated host devices are forced automatically when the host has fewer):
+
+    PYTHONPATH=src python examples/serve_nvfp4.py --engine --tp 2
 """
 import argparse
 import sys
 
 sys.path.insert(0, "src")
+
+from repro.launch import _tpenv  # noqa: F401  (forces --tp N host devices
+#                                   BEFORE the jax import below)
 
 import jax
 import numpy as np
@@ -27,8 +37,23 @@ from repro.launch.serve import load_quantized, serve_batch, weight_report
 def run_engine_demo(cfg, params, qcfg, args):
     from repro.serve import Engine, SamplingParams
 
+    mesh = rules = None
+    if args.tp > 1:
+        from repro.distributed import sharding as shd
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model_parallel=args.tp)
+        if dict(mesh.shape).get("model", 1) != args.tp:
+            # make_host_mesh falls back to model=1 on indivisible device
+            # counts — don't demo "TP" that is actually full replication
+            raise SystemExit(
+                f"--tp {args.tp} does not divide the {len(jax.devices())} "
+                f"visible devices (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.tp})")
+        rules = shd.make_rules(mesh, "tp_only")
+        print(f"tensor-parallel: mesh={dict(mesh.shape)}")
+
     eng = Engine(cfg, params, qcfg, n_slots=4, block_size=16, n_blocks=16,
-                 max_blocks_per_slot=4)
+                 max_blocks_per_slot=4, mesh=mesh, rules=rules)
     rng = jax.random.PRNGKey(7)
     jobs = [  # (prompt_len, max_new, sampling)
         (4, args.gen, SamplingParams()),                      # greedy
@@ -47,6 +72,14 @@ def run_engine_demo(cfg, params, qcfg, args):
           f"{st['decode_tok_s']:.1f} decode tok/s, peak pool util "
           f"{st['peak_utilization']:.2f}, pool drained="
           f"{eng.pool.used_blocks == 0}")
+    if mesh is not None:
+        from repro.launch.serve import tp_shard_report
+        rep = tp_shard_report(eng)
+        print(f"tp={args.tp}: packed leaves sharded "
+              f"{rep['packed_sharded']}/{rep['packed_total']}, "
+              f"weights/device {rep['weight_bytes_per_device']/2**20:.2f}MiB "
+              f"of {rep['weight_bytes_total']/2**20:.2f}MiB, "
+              f"kv pool/device {rep['kv_pool_bytes_per_device']/2**20:.2f}MiB")
     for rid, (plen, gen, sp) in zip(rids, jobs):
         mode = ("greedy" if sp.temperature == 0
                 else f"T={sp.temperature} top_k={sp.top_k}")
@@ -66,6 +99,9 @@ def main():
     ap.add_argument("--engine", action="store_true",
                     help="continuous-batching engine demo (mixed lengths, "
                     "per-request sampling)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree for the engine demo "
+                    "(shards packed weights + KV pool over a model axis)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)

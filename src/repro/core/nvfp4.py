@@ -235,6 +235,34 @@ jax.tree_util.register_dataclass(
     meta_fields=["orig_k"])
 
 
+def tp_shard_mode(p: PackedNVFP4, n_shards: int,
+                  parallelism: str | None) -> str | None:
+    """Which tensor-parallel layout a 2-D packed weight admits at
+    ``n_shards`` — the single eligibility rule shared by the ``shard_map``
+    GEMM dispatch (``layers.qeinsum``) and the device-placement resolver
+    (``distributed.sharding.resolve_packed``), so the kernel's per-shard
+    tiles always agree with where GSPMD actually put the bytes.
+
+    ``"column"`` — codes/scales rows (the output dim N) split ``n_shards``
+    ways; every shard runs the kernel with the full K, so each output
+    element is computed exactly as on a single device (bitwise).
+    ``"row"`` — the packed K dim splits; requires whole 16-element blocks
+    per shard and no K padding, and the per-shard partial products are
+    psum'd (fp32 adds reassociate by one reduction step).
+    ``None`` — not shardable this way; callers fall back to the
+    GSPMD-shardable dequant-einsum path.
+    """
+    if n_shards <= 1 or p.ndim != 2 or parallelism not in ("column", "row"):
+        return None
+    n, kh = p.codes.shape
+    if parallelism == "column":
+        return "column" if n % n_shards == 0 else None
+    kp = kh * 2
+    ok = (p.k == kp and kh % n_shards == 0
+          and (kp // BLOCK) % n_shards == 0)
+    return "row" if ok else None
+
+
 def pack(x: jax.Array, n_lead: int = 0) -> PackedNVFP4:
     """Quantize ``x`` to the packed NVFP4 deployment layout.
 

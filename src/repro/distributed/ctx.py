@@ -28,8 +28,37 @@ def use(mesh, rules):
         _CTX.pop()
 
 
+def maybe_use(mesh, rules):
+    """``use(mesh, rules)`` — or a no-op context when ``mesh`` is None.
+
+    The one way TP step builders (engine, draft proposer) enter the
+    sharding context at trace time; keeping it here means a future change
+    to how the context is established happens once.
+    """
+    return use(mesh, rules) if mesh is not None else contextlib.nullcontext()
+
+
 def active() -> bool:
     return bool(_CTX)
+
+
+def current():
+    """(mesh, rules) of the innermost active context, or None."""
+    return _CTX[-1] if _CTX else None
+
+
+def tp_size() -> int:
+    """Size of the active mesh's "model" axis (1 without a context).
+
+    The packed-GEMM dispatch (``layers.qeinsum``) keys on this: > 1 routes
+    2-D packed weights through the ``shard_map``'d kernel (per-shard tiles,
+    psum for row-parallel) instead of the single-device ``pallas_call``,
+    which GSPMD cannot partition.
+    """
+    if not _CTX:
+        return 1
+    mesh, _ = _CTX[-1]
+    return int(dict(mesh.shape).get("model", 1))
 
 
 def cst(x, axes: tuple):

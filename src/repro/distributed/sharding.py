@@ -6,7 +6,16 @@ spec into a ``PartitionSpec``, *dropping* mesh axes that do not divide the
 dimension (e.g. qwen2.5-14b's 40 heads cannot shard 16 ways — the fused QKV
 projection shards on its fused output dim instead, and GSPMD re-shards the
 reshaped activations internally).  A mesh axis is never used twice in one
-spec (first dim wins).
+spec (first dim wins).  Every divisibility drop warns ONCE per param name —
+silent replication is how TP regressions hide.
+
+``resolve_packed`` is the same rules engine for ``PackedNVFP4`` leaves (the
+true 4-bit serving layout, contraction axis moved last): lead dims resolve
+like dense dims (column-parallel wqkv/up-gate shard the output dim N); the
+packed K dim additionally requires the assignment to divide both the codes
+byte dim (K/2) and the scales block dim (K/16) with no K padding, so a
+16-element NVFP4 block never splits across shards (row-parallel wo/down —
+the GEMM output is psum'd across the K shards).
 
 Two standard rule sets:
 
@@ -17,6 +26,7 @@ Two standard rule sets:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Mapping, Sequence
 
 import jax
@@ -24,6 +34,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.nvfp4 import BLOCK, PackedNVFP4
 from repro.models.common import ParamSpec, is_spec
 
 
@@ -65,24 +76,106 @@ def make_rules(mesh: Mesh, mode: str = "fsdp_tp") -> Rules:
     return Rules(table)
 
 
-def resolve(spec: ParamSpec, mesh: Mesh, rules: Rules) -> P:
+_FALLBACK_WARNED: set = set()
+
+
+def _warn_fallback(param: str, ax_name: str, dim: int, dropped: tuple,
+                   mesh) -> None:
+    """Warn ONCE per (param, logical axis) when divisibility drops mesh axes.
+
+    The fallback itself is load-bearing (odd vocab / head counts must not
+    crash), but a silently replicated TP weight is a regression that only
+    shows up as missing memory savings — so make the drop loud, once.  The
+    dropped axis SIZES are part of the key: resolving the same param at a
+    different TP degree (e.g. the bench's tp=2 then tp=8 sweep) is a new
+    drop that warns again.
+    """
+    sizes = {a: int(mesh.shape[a]) for a in dropped}
+    key = (param, ax_name, tuple(sorted(sizes.items())))
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(
+        f"sharding fallback: param {param!r} dim {dim} (logical axis "
+        f"{ax_name!r}) drops mesh axes {sizes} — stays replicated on them",
+        RuntimeWarning, stacklevel=3)
+
+
+def _assign_axes(dim: int, want: list, mesh, divides=None) -> tuple:
+    """Greedy largest prefix of ``want`` whose product divides ``dim``.
+
+    ``divides(prod)`` overrides the plain ``dim % prod == 0`` test (the
+    packed K dim has extra whole-block constraints).
+    """
+    for k in range(len(want), 0, -1):
+        cand = tuple(want[:k])
+        prod = int(np.prod([mesh.shape[a] for a in cand]))
+        if divides(prod) if divides is not None else dim % prod == 0:
+            return cand
+    return ()
+
+
+def resolve(spec: ParamSpec, mesh: Mesh, rules: Rules, name: str = "") -> P:
     """PartitionSpec for one param, with divisibility fallback."""
     used: set[str] = set()
     out = []
-    for dim, name in zip(spec.shape, spec.axes):
-        assigned: tuple = ()
-        want = [a for a in rules.axes_for(name) if a not in used]
-        # greedily take the largest prefix of mesh axes that divides dim
-        for k in range(len(want), 0, -1):
-            cand = tuple(want[:k])
-            prod = int(np.prod([mesh.shape[a] for a in cand]))
-            if dim % prod == 0:
-                assigned = cand
-                break
+    for dim, ax_name in zip(spec.shape, spec.axes):
+        want = [a for a in rules.axes_for(ax_name) if a not in used]
+        assigned = _assign_axes(dim, want, mesh)
+        if len(assigned) < len(want):
+            _warn_fallback(name or f"{spec.axes}{spec.shape}", ax_name, dim,
+                           tuple(want[len(assigned):]), mesh)
         out.append(assigned if assigned else None)
         used.update(assigned)
     # PartitionSpec wants single names or tuples
     return P(*[a[0] if a and len(a) == 1 else (a or None) for a in out])
+
+
+def resolve_packed(spec: ParamSpec, mesh: Mesh, rules: Rules,
+                   name: str = "") -> tuple:
+    """(codes, scales, tensor_scale) PartitionSpecs for a ``PackedNVFP4``.
+
+    The packed layout moves the contraction axis last, so the stored axes
+    are (*non-contraction axes, K).  Lead dims resolve exactly like dense
+    dims (column-parallel: the output dim N splits and every shard keeps
+    the full K).  The K dim resolves with a stricter divisibility test —
+    the assignment must divide the codes byte dim (K/2) AND the scales
+    block dim (K/16), with no K padding — so every shard owns whole
+    16-element NVFP4 blocks (row-parallel: the GEMM psums over K shards).
+    The scalar ``tensor_scale`` is always replicated.
+    """
+    ax = spec.contract_axis % len(spec.shape)
+    k = spec.shape[ax]
+    kp = k + (-k) % BLOCK
+    used: set[str] = set()
+    parts = []
+    pname = name or f"{spec.axes}{spec.shape}"
+    for i, (dim, ax_name) in enumerate(zip(spec.shape, spec.axes)):
+        if i == ax:
+            continue
+        want = [a for a in rules.axes_for(ax_name) if a not in used]
+        assigned = _assign_axes(dim, want, mesh)
+        if len(assigned) < len(want):
+            _warn_fallback(pname, ax_name, dim,
+                           tuple(want[len(assigned):]), mesh)
+        parts.append(assigned)
+        used.update(assigned)
+    want_k = [a for a in rules.axes_for(spec.axes[ax]) if a not in used]
+
+    def div_k(prod: int) -> bool:
+        return (k == kp and (kp // 2) % prod == 0
+                and (kp // BLOCK) % prod == 0)
+
+    k_assigned = _assign_axes(kp, want_k, mesh, divides=div_k)
+    if len(k_assigned) < len(want_k):
+        _warn_fallback(pname, f"{spec.axes[ax]} (packed K)", k,
+                       tuple(want_k[len(k_assigned):]), mesh)
+
+    def norm(a: tuple):
+        return a[0] if a and len(a) == 1 else (a or None)
+
+    codes = P(*[norm(a) for a in parts], norm(k_assigned))
+    return codes, codes, P()
 
 
 def sharding_fn(mesh: Mesh, rules: Rules):
@@ -107,3 +200,79 @@ def constrain(x, mesh: Mesh, rules: Rules, axes: Sequence[str]):
     spec = ParamSpec(tuple(x.shape), tuple(axes), dtype=x.dtype)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, resolve(spec, mesh, rules)))
+
+
+# ---------------------------------------------------------------------------
+# materialized trees (TP serving): device_put packed + dense leaves
+# ---------------------------------------------------------------------------
+
+
+def shard_params(params, specs, mesh: Mesh, rules: Rules):
+    """device_put a (possibly packed) param tree with resolved shardings.
+
+    ``specs`` mirrors ``params`` with ``ParamSpec`` leaves; ``PackedNVFP4``
+    nodes get ``resolve_packed`` placement (codes/scales partitioned along
+    the column- or row-parallel dim, tensor scales replicated), dense leaves
+    get plain ``resolve``.  Also used for KV pools / prefill scratch, whose
+    spec trees carry no packed leaves.  The tree path is the warn-once key,
+    so two params with identical axes (wg/wu) each get their own fallback
+    warning, named usefully.
+    """
+    def one(path, spec, leaf):
+        name = jax.tree_util.keystr(path)
+        if isinstance(leaf, PackedNVFP4):
+            pc, ps, pt = resolve_packed(spec, mesh, rules, name=name)
+            return PackedNVFP4(
+                codes=jax.device_put(leaf.codes, NamedSharding(mesh, pc)),
+                scales=jax.device_put(leaf.scales, NamedSharding(mesh, ps)),
+                tensor_scale=jax.device_put(leaf.tensor_scale,
+                                            NamedSharding(mesh, pt)),
+                orig_k=leaf.orig_k)
+        sh = NamedSharding(mesh, resolve(spec, mesh, rules, name=name))
+        return jax.device_put(leaf, sh)
+
+    return jax.tree_util.tree_map_with_path(one, specs, params,
+                                            is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# analytic helpers (no devices needed)
+# ---------------------------------------------------------------------------
+
+
+class ShapeOnlyMesh:
+    """Duck-typed mesh (``shape`` + ``axis_names`` only) for analytic
+    sharding math — ``resolve``/``resolve_packed`` never touch devices, so
+    per-device memory pricing works on hosts without a real TP mesh."""
+
+    def __init__(self, shape: Mapping[str, int]):
+        self.shape = dict(shape)
+        self.axis_names = tuple(self.shape)
+
+
+def device_bytes(tree) -> int:
+    """Bytes ONE device holds of a (possibly sharded) array tree.
+
+    Leaves with a NamedSharding count their per-device shard; replicated /
+    single-device leaves (and non-device leaves) count their full size.
+    """
+    total = 0
+    for a in jax.tree.leaves(tree):
+        sh = getattr(a, "sharding", None)
+        if sh is not None and hasattr(sh, "shard_shape"):
+            total += (int(np.prod(sh.shard_shape(a.shape)))
+                      * a.dtype.itemsize)
+        else:
+            total += int(a.nbytes)
+    return total
+
+
+def partition_factor(p: P, mesh) -> int:
+    """How many ways a PartitionSpec splits a tensor on ``mesh``."""
+    f = 1
+    for entry in p:
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            f *= int(mesh.shape[a])
+    return f

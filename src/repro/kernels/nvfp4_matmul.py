@@ -144,3 +144,76 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, *,
     if pm or pn:
         out = out[:m, :n]
     return out.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel dispatch: shard_map the kernel over per-shard weight tiles
+# ---------------------------------------------------------------------------
+
+
+def nvfp4_matmul_tp(x: jax.Array, packed: PackedNVFP4, mesh,
+                    parallelism: str, *, axis: str = "model",
+                    out_dtype=jnp.bfloat16, interpret: bool = True,
+                    **tile_kw) -> jax.Array:
+    """``y = x @ W`` with the packed weight partitioned over ``mesh[axis]``.
+
+    Each shard runs the SAME Pallas kernel on its local codes/scales tile —
+    a ``pallas_call`` cannot be partitioned by GSPMD, so the sharding seam
+    is an explicit ``shard_map`` and the collective is chosen here:
+
+      * ``"column"`` — W^T rows (the output dim N) are split; x is
+        replicated into every shard, outputs stay N-sharded (no collective;
+        the caller's next constraint/GEMM consumes the feature-sharded
+        activation).  Every output element sees the full K, so numerics are
+        identical to the single-device kernel.
+      * ``"row"`` — the packed K dim is split in whole 16-element blocks;
+        x arrives feature-sharded (the natural layout after a column-
+        parallel layer + head-local attention), each shard contracts its K
+        slice in fp32 and the partials are ``psum`` across ``axis``.
+
+    Eligibility (divisibility, no K padding) is ``nvfp4.tp_shard_mode``;
+    callers must have checked it.  Inputs not already laid out as
+    ``in_specs`` are resharded by GSPMD — correctness never depends on the
+    caller's placement, only zero-comm efficiency does.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    *lead, k = x.shape
+    xm = x.reshape(-1, k)
+    n = packed.codes.shape[0]
+    s_tensor = packed.tensor_scale.astype(jnp.float32).reshape(1, 1)
+
+    if parallelism == "column":
+        in_specs = (P(), P(axis, None), P(axis, None), P())
+        out_specs = P(None, axis)
+
+        def local(xl, codes, scales, ts):
+            p = PackedNVFP4(codes, scales, ts, orig_k=packed.orig_k)
+            return nvfp4_matmul(xl, p, out_dtype=out_dtype,
+                                interpret=interpret, **tile_kw)
+
+        y = shard_map(local, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)(xm, packed.codes, packed.scales,
+                                       s_tensor)
+    elif parallelism == "row":
+        n_shards = int(dict(mesh.shape)[axis])
+        local_k = packed.k // n_shards
+        in_specs = (P(None, axis), P(None, axis), P(None, axis), P())
+        out_specs = P()
+
+        def local(xl, codes, scales, ts):
+            p = PackedNVFP4(codes, scales, ts, orig_k=local_k)
+            # fp32 partials so the only cross-shard numeric difference vs a
+            # single device is the one psum reassociation
+            part = nvfp4_matmul(xl, p, out_dtype=jnp.float32,
+                                interpret=interpret, **tile_kw)
+            return jax.lax.psum(part, axis)
+
+        y = shard_map(local, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)(xm, packed.codes, packed.scales,
+                                       s_tensor)
+        y = y.astype(out_dtype)
+    else:
+        raise ValueError(f"unknown parallelism {parallelism!r}")
+    return y.reshape(*lead, n)

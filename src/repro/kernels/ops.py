@@ -18,6 +18,7 @@ from repro.core.nvfp4 import PackedNVFP4, pack, unpack_layout
 from . import ref
 from .kl_loss import kl_loss as _kl_loss
 from .nvfp4_matmul import nvfp4_matmul as _nvfp4_matmul
+from .nvfp4_matmul import nvfp4_matmul_tp as _nvfp4_matmul_tp
 from .nvfp4_qdq import nvfp4_qdq as _nvfp4_qdq
 
 
@@ -43,6 +44,14 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, **kw) -> jax.Array:
     return _nvfp4_matmul(x, packed, **kw)
 
 
+def nvfp4_matmul_tp(x: jax.Array, packed: PackedNVFP4, mesh,
+                    parallelism: str, **kw) -> jax.Array:
+    """Tensor-parallel ``x @ W``: shard_map'd kernel over per-shard packed
+    tiles — "column" shards N (no collective), "row" shards K (psum)."""
+    kw.setdefault("interpret", interpret_default())
+    return _nvfp4_matmul_tp(x, packed, mesh, parallelism, **kw)
+
+
 def dequant_weight(packed: PackedNVFP4, contract_axis: int,
                    dtype=jnp.bfloat16) -> jax.Array:
     """Dequantize a packed weight back to its original dense layout.
@@ -63,5 +72,5 @@ def kl_loss(t_logits: jax.Array, s_logits: jax.Array, mask: jax.Array,
     return _kl_loss(t_logits, s_logits, mask, tile_t, tile_v, interpret)
 
 
-__all__ = ["nvfp4_qdq", "nvfp4_matmul", "pack_weight", "dequant_weight",
-           "kl_loss", "ref", "interpret_default"]
+__all__ = ["nvfp4_qdq", "nvfp4_matmul", "nvfp4_matmul_tp", "pack_weight",
+           "dequant_weight", "kl_loss", "ref", "interpret_default"]

@@ -1,2 +1,3 @@
+from . import _tpenv  # noqa: F401  -- must precede any (transitive) jax import
 from . import hlo_analysis, mesh, roofline, specs
 from .mesh import make_host_mesh, make_production_mesh

@@ -1,0 +1,71 @@
+"""Force emulated host devices for ``--tp N`` BEFORE jax initializes.
+
+jax locks the platform device count at first backend use, and
+``repro.launch.__init__`` imports jax transitively — so this module (the
+package's first import) sniffs ``--tp N`` from ``sys.argv`` and appends
+``--xla_force_host_platform_device_count=N`` to ``XLA_FLAGS``.  This is the
+CI-friendly TP path: ``python -m repro.launch.serve --engine --tp 2`` gets
+its 2 emulated devices with no environment setup.
+
+No-ops when jax is already imported (library use: build the mesh yourself,
+e.g. under ``XLA_FLAGS`` set by the caller), when the flag is already
+present, when the argv carries no well-formed ``--tp N > 1``, or — because
+this runs as an import side effect of the whole ``repro.launch`` package —
+when the running entrypoint is not one of the known ``--tp``-aware CLIs
+(an unrelated program with its own ``--tp`` flag that merely imports
+``repro.launch`` must not get its device count rewritten).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# entrypoints whose --tp flag means "force emulated host devices"
+_TP_ENTRYPOINTS = ("serve.py", "serve_nvfp4.py", "speculative_serve.py")
+_TP_MODULES = ("repro.launch.serve",)
+
+
+def _is_tp_entrypoint() -> bool:
+    """Is the RUNNING program one of the --tp-aware CLIs?
+
+    During parent-package import under ``python -m pkg.mod``, sys.argv[0]
+    is still the literal "-m", so the module name must come from
+    ``sys.orig_argv`` (the full interpreter command line).
+    """
+    orig = getattr(sys, "orig_argv", None) or []
+    for i, a in enumerate(orig):
+        if a == "-m":
+            return i + 1 < len(orig) and orig[i + 1] in _TP_MODULES
+    a0 = sys.argv[0] if sys.argv else ""
+    return os.path.basename(str(a0)) in _TP_ENTRYPOINTS
+
+
+def _sniff_tp(argv) -> int:
+    """The value of a well-formed ``--tp N`` / ``--tp=N``, else 0."""
+    for i, a in enumerate(argv):
+        try:
+            if a == "--tp":
+                return int(argv[i + 1])
+            if a.startswith("--tp="):
+                return int(a.split("=", 1)[1])
+        except (IndexError, ValueError):
+            return 0
+    return 0
+
+
+def force_tp_host_devices(argv=None) -> bool:
+    argv = sys.argv if argv is None else argv
+    if "jax" in sys.modules:
+        return False
+    if not _is_tp_entrypoint():
+        return False
+    tp = _sniff_tp(argv)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if tp <= 1 or "xla_force_host_platform_device_count" in flags:
+        return False
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={tp}".strip())
+    return True
+
+
+force_tp_host_devices()

@@ -86,8 +86,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                             **({"weight_format": weight_format}
                                if weight_format != "qdq" else {}))}
     if shape.kind in ("prefill", "decode"):
-        # analytic deployment pricing: packed 4-bit weights, FP8-vs-BF16 KV
-        cell["serve_memory"] = specs.serve_memory_report(cfg, shape)
+        # analytic deployment pricing: packed 4-bit weights, FP8-vs-BF16 KV;
+        # packed cells also price the TP partition of the production mesh
+        # (model axis = 16) — per-device weight/KV bytes under resolve_packed
+        cell["serve_memory"] = specs.serve_memory_report(
+            cfg, shape, tp=(16 if weight_format == "packed" else 0))
 
     if shape_name in cfg.skip_shapes:
         cell["status"] = "SKIP"

@@ -31,10 +31,22 @@ and the pool must drain back to empty.  Engine knobs:
                           engine (asserted by the parity check)
   --draft MODE            self-qdq | self-truncate | two-model proposer
   --draft-layers N        draft depth for self-truncate / two-model
+  --adaptive-k            draft-cost-aware per-slot draft length: k adapts
+                          to the measured acceptance rate and draft/verify
+                          wall clock (chosen-k histogram in the stats)
+  --tp N                  tensor-parallel serving over N devices (emulated
+                          host devices are forced automatically when the
+                          host has fewer — the CI smoke path): packed
+                          codes/scales shard column-/row-parallel, the KV
+                          pool shards by KV heads, and greedy engine output
+                          must stay token-for-token identical to the
+                          single-device reference
 
 Exit status is nonzero if any engine invariant fails (CI runs this).
 """
 from __future__ import annotations
+
+from repro.launch import _tpenv  # noqa: F401  (isort: keep before jax)
 
 import argparse
 import dataclasses
@@ -47,6 +59,7 @@ import numpy as np
 
 from repro import configs
 from repro.core import ptq
+from repro.core.nvfp4 import PackedNVFP4
 from repro.launch import specs
 from repro.models import common, get_model
 
@@ -117,7 +130,7 @@ def mixed_prompts(rng, n: int, min_len: int, max_len: int, vocab: int):
                                vocab) for i, l in enumerate(lens)]
 
 
-def build_engine(cfg, params, qcfg, args):
+def build_engine(cfg, params, qcfg, args, mesh=None, rules=None):
     """Engine (or SpecEngine when --speculative k > 0) from CLI args."""
     from repro.serve import Engine
 
@@ -126,7 +139,7 @@ def build_engine(cfg, params, qcfg, args):
     n_blocks = args.n_blocks or args.slots * mb
     kw = dict(n_slots=args.slots, block_size=bs, n_blocks=n_blocks,
               max_blocks_per_slot=mb, prefill_mode=args.prefill_mode,
-              prefill_chunk=args.prefill_chunk)
+              prefill_chunk=args.prefill_chunk, mesh=mesh, rules=rules)
     spec_k = getattr(args, "speculative", 0)
     if not spec_k:
         return Engine(cfg, params, qcfg, **kw), n_blocks
@@ -145,16 +158,74 @@ def build_engine(cfg, params, qcfg, args):
         draft_model = (dcfg, dparams, dqcfg)
     eng = SpecEngine(cfg, params, qcfg, draft_k=spec_k, draft=args.draft,
                      draft_layers=args.draft_layers, draft_model=draft_model,
-                     **kw)
+                     adaptive_k=getattr(args, "adaptive_k", False), **kw)
     return eng, n_blocks
 
 
-def run_engine(cfg, params, qcfg, args) -> dict:
+def _partition_axes(sharding) -> tuple:
+    """Flat mesh-axis names a leaf's NamedSharding actually uses."""
+    spec = getattr(sharding, "spec", None)
+    if spec is None:
+        return ()
+    out = []
+    for entry in spec:
+        if entry is None:
+            continue
+        out.extend(entry if isinstance(entry, (tuple, list)) else [entry])
+    return tuple(out)
+
+
+def tp_shard_report(eng) -> dict:
+    """How the engine's packed weights and KV pool actually sharded.
+
+    ``packed_total``/``packed_sharded`` count ``PackedNVFP4`` leaves whose
+    codes carry a "model"-partitioned NamedSharding — the acceptance
+    invariant is that column/row-parallel layers are NOT silently
+    replicated.  ``kv_sharded`` says the pool pages split on the KV-head
+    dim.  Byte counts are per device.
+    """
+    packed = [l for l in jax.tree.leaves(
+        eng.params, is_leaf=lambda x: isinstance(x, PackedNVFP4))
+        if isinstance(l, PackedNVFP4)]
+    sharded = [p for p in packed
+               if "model" in _partition_axes(p.codes.sharding)
+               and "model" in _partition_axes(p.scales.sharding)]
+    from repro.distributed.sharding import device_bytes
+    kv_sharded = any("model" in _partition_axes(a.sharding)
+                     for a in jax.tree.leaves(eng.pool.data))
+    return {
+        "packed_total": len(packed), "packed_sharded": len(sharded),
+        "kv_sharded": kv_sharded,
+        "weight_bytes_per_device": device_bytes(eng.params),
+        "weight_bytes_total": sum(int(a.nbytes)
+                                  for a in jax.tree.leaves(eng.params)),
+        "kv_pool_bytes_per_device": eng.pool.nbytes_per_device(),
+        "kv_pool_bytes_total": eng.pool.nbytes(),
+    }
+
+
+def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
     """Serve a mixed staggered workload through the engine; verify parity
     and pool-drain invariants.  Returns a result dict (also used by CI and
-    ``benchmarks.serve_bench``)."""
-    eng, n_blocks = build_engine(cfg, params, qcfg, args)
+    ``benchmarks.serve_bench``).
+
+    With a TP ``mesh`` the engine shards weights + KV pool; ``params`` stays
+    unsharded here, so the parity reference (single-request ``serve_batch``)
+    runs on a single device — the check IS the TP acceptance oracle.
+    """
+    eng, n_blocks = build_engine(cfg, params, qcfg, args, mesh, rules)
     bs = args.block_size
+
+    tp_rep = None
+    if mesh is not None:
+        tp_rep = tp_shard_report(eng)
+        print(f"[engine] tp={dict(mesh.shape).get('model', 1)}: "
+              f"packed-sharded={tp_rep['packed_sharded']}/"
+              f"{tp_rep['packed_total']} kv-sharded={tp_rep['kv_sharded']} "
+              f"weights/device={tp_rep['weight_bytes_per_device']/2**20:.2f}"
+              f"MiB (total {tp_rep['weight_bytes_total']/2**20:.2f}MiB) "
+              f"kv-pool/device={tp_rep['kv_pool_bytes_per_device']/2**20:.2f}"
+              f"MiB")
 
     rng = jax.random.PRNGKey(1)
     prompts = mixed_prompts(rng, args.requests, args.min_prompt,
@@ -174,6 +245,11 @@ def run_engine(cfg, params, qcfg, args) -> dict:
     if eng.pool.used_blocks != 0:
         ok = False
         print(f"[engine] FAIL: {eng.pool.used_blocks} pool blocks leaked")
+    if tp_rep is not None and tp_rep["packed_total"] \
+            and not tp_rep["packed_sharded"]:
+        ok = False
+        print("[engine] FAIL: no PackedNVFP4 leaf sharded on the model "
+              "axis (silent replication)")
 
     # chunked prefill is numerically approximate vs whole-prompt prefill
     # (dynamic NVFP4 activation amaxes become chunk-granular), so strict
@@ -212,14 +288,16 @@ def run_engine(cfg, params, qcfg, args) -> dict:
           f"parity={'AGREE' if parity else ('skipped' if parity is None else 'DISAGREE')} "
           f"pool-drained={eng.pool.used_blocks == 0}")
     if spec:
+        adaptive = (f" chosen-k={st['chosen_k_hist']}"
+                    if st.get("adaptive_k") else "")
         print(f"[engine] speculative: acceptance={st['acceptance_rate']:.3f} "
               f"accepted/step={st['accepted_per_step']:.2f} "
               f"drafted={st['drafted_tokens']} "
               f"rolled-back={st['rolled_back_tokens']} "
-              f"verify-steps={st['verify_steps']}")
+              f"verify-steps={st['verify_steps']}{adaptive}")
     return {"ok": ok, "outputs": outputs, "stats": st,
             "tokens_match_serve_batch": parity, "n_blocks": n_blocks,
-            "pool_drained": eng.pool.used_blocks == 0}
+            "pool_drained": eng.pool.used_blocks == 0, "tp": tp_rep}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -262,11 +340,42 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--draft-layers", type=int, default=0,
                     help="draft depth for self-truncate / two-model "
                     "(0 = half the target)")
+    ap.add_argument("--adaptive-k", action="store_true",
+                    help="draft-cost-aware per-slot draft length: adapt k "
+                    "from the measured acceptance rate and draft/verify "
+                    "wall clock (requires --speculative)")
+    # --- tensor parallelism (engine mode) ---
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="tensor-parallel degree: shard packed codes/scales "
+                    "column-/row-parallel and the paged KV pool by KV heads "
+                    "over a (data, model=N) mesh; emulated host devices are "
+                    "forced automatically when needed (CI smoke path)")
     return ap
 
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
+
+    if args.adaptive_k and not args.speculative:
+        raise SystemExit("--adaptive-k requires --speculative K (it adapts "
+                         "the draft length)")
+
+    mesh = rules = None
+    if args.tp > 1:
+        if not args.engine:
+            raise SystemExit("--tp requires --engine (TP serving is an "
+                             "engine path)")
+        from repro.distributed import sharding as shd
+        from repro.launch.mesh import make_host_mesh
+        n_dev = len(jax.devices())
+        if n_dev % args.tp:
+            raise SystemExit(f"--tp {args.tp} does not divide the "
+                             f"{n_dev} visible devices (set XLA_FLAGS="
+                             f"--xla_force_host_platform_device_count="
+                             f"{args.tp} before jax initializes)")
+        mesh = make_host_mesh(model_parallel=args.tp)
+        rules = shd.make_rules(mesh, "tp_only")
+        print(f"[serve] tp={args.tp} mesh={dict(mesh.shape)}")
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     rng = jax.random.PRNGKey(0)
@@ -282,7 +391,7 @@ def main(argv=None):
               f"all dense (qdq stores quantized values as BF16, 2 B/param)")
 
     if args.engine:
-        res = run_engine(cfg, params, qcfg, args)
+        res = run_engine(cfg, params, qcfg, args, mesh=mesh, rules=rules)
         res["weights"] = wr
         if not res["ok"]:
             raise SystemExit(1)

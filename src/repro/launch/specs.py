@@ -86,16 +86,17 @@ def _abstract(specs, mesh, rules):
 # ---------------------------------------------------------------------------
 
 
-def packed_abstract_leaf(spec: common.ParamSpec, sfn=None):
+def packed_abstract_leaf(spec: common.ParamSpec, mesh=None, rules=None):
     """Abstract ``PackedNVFP4`` mirroring ``ptq._pack_along`` shape-for-shape.
 
     Contraction axis moved last and padded to the NVFP4 block; codes pack two
     E2M1 nibbles per byte, scales are E4M3 per 16 elements, and leading
-    layer-stack axes carry independent per-layer tensor scales.  Codes and
-    block scales shard by the spec's (moved) logical axes — the contraction
-    axis stays unsharded (the packed byte/block layout must not split a
-    16-element block across shards); the dequant-einsum backend handles the
-    rest under GSPMD.
+    layer-stack axes carry independent per-layer tensor scales.  With a mesh,
+    codes and block scales carry the REAL TP placement
+    (``sharding.resolve_packed``): column-parallel leaves split the output
+    dim, row-parallel leaves split the packed K dim in whole 16-element
+    blocks — the same NamedShardings the serving engine device_puts, so the
+    dry-run prices the partitioned deployment exactly.
     """
     from repro.core import ptq
     from repro.core.nvfp4 import BLOCK, FP8_E4M3, PackedNVFP4
@@ -103,20 +104,22 @@ def packed_abstract_leaf(spec: common.ParamSpec, sfn=None):
     n_lead = ptq._n_stack_axes(spec)
     ax = spec.contract_axis % len(spec.shape)
     lead = tuple(d for i, d in enumerate(spec.shape) if i != ax)
-    lead_ax = tuple(a for i, a in enumerate(spec.axes) if i != ax)
     k = spec.shape[ax]
     kp = k + (-k) % BLOCK
 
-    def sds(shape, dtype, axes=None):
-        sh = (sfn(common.ParamSpec(shape, axes, dtype=dtype))
-              if sfn and axes is not None else None)
+    pc = ps = None
+    if mesh is not None and rules is not None:
+        pc, ps, _ = shd.resolve_packed(spec, mesh, rules)
+
+    def sds(shape, dtype, part=None):
+        sh = NamedSharding(mesh, part) if part is not None else None
         return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
 
     ts_shape = ((*spec.shape[:n_lead], *(1,) * (1 + len(lead) - n_lead))
                 if n_lead else ())
     return PackedNVFP4(
-        codes=sds((*lead, kp // 2), jnp.uint8, (*lead_ax, "none")),
-        scales=sds((*lead, kp // BLOCK), FP8_E4M3, (*lead_ax, "none")),
+        codes=sds((*lead, kp // 2), jnp.uint8, pc),
+        scales=sds((*lead, kp // BLOCK), FP8_E4M3, ps),
         tensor_scale=sds(ts_shape, jnp.float32),
         orig_k=k)
 
@@ -132,22 +135,72 @@ def packed_param_abstract(cfg: ModelConfig, mesh=None, rules=None):
 
     def one(spec):
         if qcfg.quantizes(spec.kind):
-            return packed_abstract_leaf(spec, sfn)
+            return packed_abstract_leaf(spec, mesh, rules)
         sh = sfn(spec) if sfn else None
         return jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sh)
 
     return jax.tree.map(one, model.param_specs(cfg), is_leaf=common.is_spec)
 
 
+def _sharded_spec_bytes(specs, mesh, rules) -> int:
+    """Per-device bytes of a ParamSpec tree under (mesh, rules)."""
+    import numpy as np
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=common.is_spec):
+        part = shd.resolve(s, mesh, rules)
+        elems = int(np.prod(s.shape)) if s.shape else 1
+        total += (elems * jnp.dtype(s.dtype).itemsize
+                  // shd.partition_factor(part, mesh))
+    return total
+
+
+def _sharded_packed_weight_bytes(cfg: ModelConfig, mesh, rules) -> int:
+    """Per-device bytes of the packed deployment weights under (mesh, rules):
+    quantized-GEMM leaves priced at their ``resolve_packed`` partition
+    (codes + block scales + replicated tensor scales), the rest dense."""
+    import numpy as np
+
+    from repro.core import ptq
+    from repro.core.nvfp4 import BLOCK
+    model = get_model(cfg)
+    qcfg = recipe_qconfig(cfg)
+    total = 0
+    for s in jax.tree.leaves(model.param_specs(cfg), is_leaf=common.is_spec):
+        if not qcfg.quantizes(s.kind):
+            part = shd.resolve(s, mesh, rules)
+            elems = int(np.prod(s.shape)) if s.shape else 1
+            total += (elems * jnp.dtype(s.dtype).itemsize
+                      // shd.partition_factor(part, mesh))
+            continue
+        ax = s.contract_axis % len(s.shape)
+        lead = int(np.prod([d for i, d in enumerate(s.shape) if i != ax]))
+        k = s.shape[ax]
+        kp = k + (-k) % BLOCK
+        pc, ps, _ = shd.resolve_packed(s, mesh, rules)
+        n_lead = ptq._n_stack_axes(s)
+        ts = int(np.prod(s.shape[:n_lead])) if n_lead else 1
+        total += (lead * (kp // 2) // shd.partition_factor(pc, mesh)
+                  + lead * (kp // BLOCK) // shd.partition_factor(ps, mesh)
+                  + ts * 4)
+    return total
+
+
 def serve_memory_report(cfg: ModelConfig, shape: ShapeConfig | None = None,
                         n_blocks: int | None = None,
-                        block_size: int = 16) -> dict:
+                        block_size: int = 16, mesh=None, rules=None,
+                        tp: int = 0) -> dict:
     """Analytic deployment-memory pricing for one arch (+ optional shape).
 
     Weights: packed NVFP4 (quantized GEMMs at ~0.5625 B/param, the rest
     dense BF16) vs all-BF16.  KV: the recipe's cache dtype (FP8 + scales for
     moe_hybrid) vs BF16, for the dense [B, S] cache of ``shape`` and — when
     ``n_blocks`` is given — the engine's paged pool geometry.
+
+    A ``mesh`` with a nontrivial "model" axis (or analytic ``tp=N`` on
+    hosts without the devices — sharding math never touches hardware) adds
+    a ``"sharded"`` section: per-device weight and KV bytes under the TP
+    placement (``resolve_packed`` for packed leaves, KV-head sharding for
+    the caches/pool), i.e. what each chip actually holds.
     """
     model = get_model(cfg)
     pspecs = model.param_specs(cfg)
@@ -173,6 +226,32 @@ def serve_memory_report(cfg: ModelConfig, shape: ShapeConfig | None = None,
                                       + report["kv_bytes_bf16"])
         report["joint_ratio"] = (report["joint_bytes_deployed"]
                                  / max(report["joint_bytes_bf16"], 1))
+
+    if mesh is None and tp and tp > 1:
+        mesh = shd.ShapeOnlyMesh({"data": 1, "model": int(tp)})
+    if mesh is not None and dict(mesh.shape).get("model", 1) > 1:
+        r = rules or shd.make_rules(mesh, "tp_only")
+        sh_rep = {
+            "mesh": dict(mesh.shape),
+            "tp": int(dict(mesh.shape)["model"]),
+            "weight_bytes_packed_per_device":
+                _sharded_packed_weight_bytes(cfg, mesh, r),
+            "weight_bytes_bf16_per_device":
+                _sharded_spec_bytes(pspecs, mesh, r),
+        }
+        if shape is not None and hasattr(model, "cache_specs"):
+            sh_rep["kv_bytes_recipe_per_device"] = _sharded_spec_bytes(
+                model.cache_specs(cfg, shape.global_batch, shape.seq_len),
+                mesh, r)
+        if n_blocks is not None and cfg.family == "decoder":
+            from repro.models import decoder
+            sh_rep["kv_pool_bytes_per_device"] = _sharded_spec_bytes(
+                decoder.paged_pool_specs(cfg, n_blocks, block_size), mesh, r)
+        if "kv_bytes_recipe_per_device" in sh_rep:
+            sh_rep["joint_bytes_deployed_per_device"] = (
+                sh_rep["weight_bytes_packed_per_device"]
+                + sh_rep["kv_bytes_recipe_per_device"])
+        report["sharded"] = sh_rep
     return report
 
 

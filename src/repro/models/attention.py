@@ -263,7 +263,11 @@ def paged_update_layer(pool_sl, k_new, v_new, block_tables, positions, active):
                                                  mode="drop")
         out["v"] = pool_sl["v"].at[blk, off].set(v_new.astype(dt),
                                                  mode="drop")
-    return out
+    # TP: pages stay KV-head-sharded through the scatter (the block and
+    # slot dims are never sharded, so each shard writes its own heads)
+    pool_axes = ("blocks", "blockslot", "kv", "headdim")
+    return {name: cst(a, pool_axes if a.ndim == 4 else pool_axes[:-1])
+            for name, a in out.items()}
 
 
 def paged_gather_layer(pool_sl, block_tables, dtype=jnp.bfloat16):
@@ -302,8 +306,13 @@ def paged_attend(q, pool_sl, block_tables, pos, *, window: int = 0):
     k, v = paged_gather_layer(pool_sl, block_tables, q.dtype)
     b, s_alloc, hkv, hd = k.shape
     h = q.shape[2]
-    k = repeat_kv(k, h // hkv)
-    v = repeat_kv(v, h // hkv)
+    # TP: the gathered per-slot views keep the pool's KV-head sharding, and
+    # repeat_kv expands each kv head in place, so the repeated heads land on
+    # the same shard as their group's q heads — attention is head-local
+    k = cst(k, ("batch", "seq", "kv", "none"))
+    v = cst(v, ("batch", "seq", "kv", "none"))
+    k = cst(repeat_kv(k, h // hkv), ("batch", "seq", "heads", "none"))
+    v = cst(repeat_kv(v, h // hkv), ("batch", "seq", "heads", "none"))
     scale = 1.0 / jnp.sqrt(jnp.float32(hd))
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                    preferred_element_type=jnp.float32) * scale

@@ -124,7 +124,8 @@ def _rope(cfg, x, pos):
 def _attention(qcfg, cfg, p, h, pos, mode, cache_sl, pos_idx):
     b, s, _ = h.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
-    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"))
+    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"),
+                        parallelism="column")
     q, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
     hax = ("batch", "seq", "heads", "none")
     kax = ("batch", "seq", "kv", "none")
@@ -144,7 +145,8 @@ def _attention(qcfg, cfg, p, h, pos, mode, cache_sl, pos_idx):
         if mode == "prefill":
             new_cache = {"k": k, "v": v}       # collected via scan ys
     out = cst(out, ("batch", "seq", "heads", "none"))
-    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"]),
+    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"],
+                            parallelism="row"),
               ("batch", "seq", "none"))
     return out, new_cache
 
@@ -217,7 +219,7 @@ def apply(cfg, params, batch, qcfg: QuantConfig, output: str = "logits"):
     if output == "hidden":
         return x
     w = unembed(cfg, params)
-    return cst(layers.qdense(qcfg, "lm_head", x, w),
+    return cst(layers.qdense(qcfg, "lm_head", x, w, parallelism="column"),
                ("batch", "seq", "vocab"))
 
 
@@ -269,7 +271,8 @@ def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
         body, x, params["layers"], _cache_slices(cache), qcfg,
         qcfg.skip_first_layers, qcfg.skip_last_layers, "none")
     x = run_norm(cfg, params["final_norm"], x)
-    logits = cst(layers.qdense(qcfg, "lm_head", x, unembed(cfg, params)),
+    logits = cst(layers.qdense(qcfg, "lm_head", x, unembed(cfg, params),
+                          parallelism="column"),
                  ("batch", "none", "vocab"))
     new_cache["pos"] = pos_idx + 1
     return logits, new_cache
@@ -351,19 +354,28 @@ def _attention_paged(qcfg, cfg, p, h, pos, psl, block_tables, positions,
     absolute write positions — RoPE ``pos`` must address the same positions;
     ``active``: [B] or [B, S] write mask.  Each query attends positions
     < its own position + 1 (causal within the new chunk).
+
+    Under a TP mesh the whole block is head-local: q shards on "heads", new
+    k/v and the pool pages on "kv" (same shards — GQA groups never split),
+    so paged update + gather + attend run without collectives; the only
+    cross-shard traffic is the row-parallel ``wo`` psum.
     """
     b, s, _ = h.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
-    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"))
+    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"),
+                        parallelism="column")
     q, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
-    q = _rope(cfg, attn.split_heads(q, nh, hd), pos)
-    k = _rope(cfg, attn.split_heads(k, nkv, hd), pos)
-    v = attn.split_heads(v, nkv, hd)
+    hax = ("batch", "seq", "heads", "none")
+    kax = ("batch", "seq", "kv", "none")
+    q = cst(_rope(cfg, attn.split_heads(q, nh, hd), pos), hax)
+    k = cst(_rope(cfg, attn.split_heads(k, nkv, hd), pos), kax)
+    v = cst(attn.split_heads(v, nkv, hd), kax)
     new_psl = attn.paged_update_layer(psl, k, v, block_tables, positions,
                                       active)
-    out = attn.paged_attend(q, new_psl, block_tables, positions + 1,
-                            window=cfg.window)
-    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"]),
+    out = cst(attn.paged_attend(q, new_psl, block_tables, positions + 1,
+                                window=cfg.window), hax)
+    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"],
+                            parallelism="row"),
               ("batch", "seq", "none"))
     return out, new_psl
 
@@ -399,7 +411,8 @@ def decode_step_paged(cfg, params, pool, block_tables, lens, active, batch,
         body, x, params["layers"], pool, qcfg,
         qcfg.skip_first_layers, qcfg.skip_last_layers, "none")
     x = run_norm(cfg, params["final_norm"], x)
-    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params),
+                          parallelism="column")
     return logits, new_pool
 
 
@@ -455,7 +468,8 @@ def verify_step_paged(cfg, params, pool, block_tables, lens, active, n_prop,
         body, x, params["layers"], pool, qcfg,
         qcfg.skip_first_layers, qcfg.skip_last_layers, "none")
     x = run_norm(cfg, params["final_norm"], x)
-    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params),
+                          parallelism="column")
     return logits, new_pool
 
 
@@ -463,11 +477,14 @@ def _attention_prefill_chunk(qcfg, cfg, p, h, pos, ssl, psl, bt, positions,
                              tok_active, start, n_valid):
     b, c, _ = h.shape                                 # b == 1
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
-    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"))
+    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"),
+                        parallelism="column")
     q, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
-    q = _rope(cfg, attn.split_heads(q, nh, hd), pos)
-    k = _rope(cfg, attn.split_heads(k, nkv, hd), pos)
-    v = attn.split_heads(v, nkv, hd)
+    q = cst(_rope(cfg, attn.split_heads(q, nh, hd), pos),
+            ("batch", "seq", "heads", "none"))
+    k = cst(_rope(cfg, attn.split_heads(k, nkv, hd), pos),
+            ("batch", "seq", "kv", "none"))
+    v = cst(attn.split_heads(v, nkv, hd), ("batch", "seq", "kv", "none"))
     new_ssl = {
         "k": jax.lax.dynamic_update_slice_in_dim(
             ssl["k"], k.astype(ssl["k"].dtype), start, axis=1),
@@ -481,7 +498,8 @@ def _attention_prefill_chunk(qcfg, cfg, p, h, pos, ssl, psl, bt, positions,
     # per chunk token, pad tokens dropped
     new_psl = attn.paged_update_layer(psl, k.swapaxes(0, 1), v.swapaxes(0, 1),
                                       bt, positions, tok_active)
-    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, c, nh * hd), p["wo"]),
+    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, c, nh * hd), p["wo"],
+                            parallelism="row"),
               ("batch", "seq", "none"))
     return out, new_ssl, new_psl
 
@@ -525,7 +543,8 @@ def prefill_chunk_paged(cfg, params, scratch, pool, block_table, start,
         qcfg.skip_first_layers, qcfg.skip_last_layers, "none")
     x = run_norm(cfg, params["final_norm"], x)
     x_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
-    logits = layers.qdense(qcfg, "lm_head", x_last, unembed(cfg, params))
+    logits = layers.qdense(qcfg, "lm_head", x_last, unembed(cfg, params),
+                           parallelism="column")
     return logits, new_scratch, new_pool
 
 
@@ -550,7 +569,8 @@ def prefill(cfg, params, batch, qcfg: QuantConfig, s_max: int | None = None):
                                qcfg.skip_first_layers, qcfg.skip_last_layers,
                                cfg.remat)
     x = run_norm(cfg, params["final_norm"], x)
-    logits = layers.qdense(qcfg, "lm_head", x[:, -1:], unembed(cfg, params))
+    logits = layers.qdense(qcfg, "lm_head", x[:, -1:], unembed(cfg, params),
+                           parallelism="column")
 
     cache = dict(kv)
     if cfg.window and s > cfg.window:

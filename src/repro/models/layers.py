@@ -17,8 +17,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import nvfp4
 from repro.core.nvfp4 import PackedNVFP4
 from repro.core.qconfig import QuantConfig
+from repro.distributed import ctx
 from repro.distributed.ctx import cst
 from repro.kernels import ops
 
@@ -31,14 +33,28 @@ _DENSE_EQ = "...k,ko->...o"
 
 
 def qeinsum(qcfg: QuantConfig, kind: str, eq: str, x: jax.Array, w,
-            contract_axis: int = 0, quantize_act: bool = True) -> jax.Array:
+            contract_axis: int = 0, quantize_act: bool = True,
+            parallelism: str | None = None) -> jax.Array:
     """``einsum(eq, q_act(x), resolve(w))`` for any QTensor weight ``w``.
 
     ``eq`` contracts x's last dim against ``w``'s ``contract_axis``; for a
     ``PackedNVFP4`` weight the stored layout already has that axis moved
-    last.  2-D packed weights with the standard dense equation run the
-    Pallas kernel (unless ``qcfg.packed_backend == "dequant"``); everything
-    else dequantizes to the original layout and einsums.
+    last.  This is the single place where (packed format × backend ×
+    parallelism) is resolved:
+
+      * 2-D packed + standard dense equation + ``packed_backend="auto"``
+        runs the Pallas kernel.  Under an active TP mesh (``ctx`` with a
+        nontrivial "model" axis) the kernel cannot be GSPMD-partitioned, so
+        the dispatch goes through ``ops.nvfp4_matmul_tp`` — a ``shard_map``
+        over per-shard codes/scales tiles whose collective is picked from
+        the layer's ``parallelism`` kind: "column" (shard N, no collective)
+        or "row" (shard K, psum the partials).  Weights that fail the
+        whole-block divisibility rule (``nvfp4.tp_shard_mode``, mirrored by
+        ``sharding.resolve_packed`` at placement time) — or call sites with
+        no declared parallelism — fall back to dequant-einsum, which GSPMD
+        shards freely.
+      * everything else (MoE expert slabs, ``packed_backend="dequant"``)
+        dequantizes to the original layout and einsums.
 
     ``quantize_act=False`` lets callers (MoE) fake-quant an activation once
     and reuse it across several GEMMs.
@@ -48,26 +64,66 @@ def qeinsum(qcfg: QuantConfig, kind: str, eq: str, x: jax.Array, w,
     if isinstance(wr, PackedNVFP4):
         if (wr.ndim == 2 and contract_axis == 0 and eq == _DENSE_EQ
                 and qcfg.packed_backend == "auto"):
+            tp_n = ctx.tp_size()
+            if tp_n > 1:
+                mode = nvfp4.tp_shard_mode(wr, tp_n, parallelism)
+                if mode:
+                    mesh, _ = ctx.current()
+                    return ops.nvfp4_matmul_tp(xq, wr, mesh, mode,
+                                               out_dtype=xq.dtype)
+                # TP mesh active but this weight can't shard whole-block
+                # (or the site declared no parallelism): dequant-einsum is
+                # the GSPMD-safe path
+                return _einsum(eq, xq, ops.dequant_weight(wr, contract_axis,
+                                                          xq.dtype))
             return ops.nvfp4_matmul(xq, wr, out_dtype=xq.dtype)
-        return jnp.einsum(eq, xq, ops.dequant_weight(wr, contract_axis,
-                                                     xq.dtype))
-    return jnp.einsum(eq, xq, wr)
+        return _einsum(eq, xq, ops.dequant_weight(wr, contract_axis,
+                                                  xq.dtype))
+    return _einsum(eq, xq, wr)
+
+
+def _einsum(eq: str, x: jax.Array, w: jax.Array) -> jax.Array:
+    """einsum; under an active mesh ctx, with explicit fp32 accumulation
+    rounded once at the end.
+
+    Under GSPMD a sharded contraction dim turns a BF16 einsum into BF16
+    *partial* dots combined by a BF16 all-reduce — a double rounding that
+    breaks TP token parity with the single-device engine (measured 0.3-abs
+    logit drift on the MoE arch).  Forcing fp32 partials + fp32 all-reduce
+    rounds once, which is exactly what the single-device dot already does
+    internally, so sharded and unsharded outputs agree bitwise.  The gate
+    is ``ctx.active()`` — i.e. EVERY mesh-traced path, including mesh
+    training and the dry-run's lowered train cells, where the same
+    partial-sum double rounding applies; meshless paths (single-device
+    serving and training, every tier-1 numeric baseline) keep their op
+    graph — and their compiled numerics — unchanged.
+    """
+    if not ctx.active():
+        return jnp.einsum(eq, x, w)
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    return jnp.einsum(eq, x, w,
+                      preferred_element_type=jnp.float32).astype(out_dtype)
 
 
 def qdense(qcfg: QuantConfig, kind: str, x: jax.Array, w,
            b: jax.Array | None = None, contract_axis: int = 0,
-           quantize_act: bool = True) -> jax.Array:
+           quantize_act: bool = True,
+           parallelism: str | None = None) -> jax.Array:
     """y = x @ w (+ b) with NVFP4 fake-quant per the policy.
 
     ``w``'s contraction axis defaults to 0 ([in, out] layout); batched MoE
     expert weights [E, in, out] pass contract_axis=1 with x [..., E, C, in].
-    ``w`` may be dense or ``PackedNVFP4``.
+    ``w`` may be dense or ``PackedNVFP4``.  ``parallelism`` declares the
+    layer's TP kind ("column": output-dim sharded; "row": contraction-dim
+    sharded + psum) for the packed-kernel dispatch — see ``qeinsum``.
     """
     ndim = w.ndim
     if ndim == 2 and contract_axis == 0:
-        y = qeinsum(qcfg, kind, _DENSE_EQ, x, w, 0, quantize_act)
+        y = qeinsum(qcfg, kind, _DENSE_EQ, x, w, 0, quantize_act,
+                    parallelism)
     elif ndim == 3 and contract_axis == 1:
-        y = qeinsum(qcfg, kind, "...eck,eko->...eco", x, w, 1, quantize_act)
+        y = qeinsum(qcfg, kind, "...eck,eko->...eco", x, w, 1, quantize_act,
+                    parallelism)
     else:
         raise ValueError(f"unsupported weight rank/contract_axis: "
                          f"{ndim}/{contract_axis}")
@@ -173,15 +229,21 @@ def sinusoidal_pos(seq: int, d: int) -> jax.Array:
 
 
 def swiglu_mlp(qcfg, x, wg, wu, wd, kind: str = "mlp"):
-    g = cst(qdense(qcfg, kind, x, wg), ("batch", "seq", "mlp"))
-    u = cst(qdense(qcfg, kind, x, wu), ("batch", "seq", "mlp"))
-    return cst(qdense(qcfg, kind, jax.nn.silu(g) * u, wd),
+    # Megatron-style TP: gate/up are column-parallel (ff sharded), down is
+    # row-parallel (contracts the sharded ff, psums the output)
+    g = cst(qdense(qcfg, kind, x, wg, parallelism="column"),
+            ("batch", "seq", "mlp"))
+    u = cst(qdense(qcfg, kind, x, wu, parallelism="column"),
+            ("batch", "seq", "mlp"))
+    return cst(qdense(qcfg, kind, jax.nn.silu(g) * u, wd, parallelism="row"),
                ("batch", "seq", "none"))
 
 
 def gelu_mlp(qcfg, x, wi, wd, bi=None, bd=None, kind: str = "mlp"):
-    h = jax.nn.gelu(cst(qdense(qcfg, kind, x, wi, bi), ("batch", "seq", "mlp")))
-    return cst(qdense(qcfg, kind, h, wd, bd), ("batch", "seq", "none"))
+    h = jax.nn.gelu(cst(qdense(qcfg, kind, x, wi, bi, parallelism="column"),
+                        ("batch", "seq", "mlp")))
+    return cst(qdense(qcfg, kind, h, wd, bd, parallelism="row"),
+               ("batch", "seq", "none"))
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import ctx as shd_ctx
 from repro.models import common, decoder
 
 from .paged_kv import PagedKVPool
@@ -45,13 +46,23 @@ class Engine:
     engine derives the serving config from it (runtime weight fake-quant
     off, per-row activation scales).  Defaults cover smoke scale; size
     ``n_blocks`` / ``n_slots`` to the deployment.
+
+    ``mesh`` (with optional ``rules``, default ``tp_only``) turns on
+    tensor-parallel serving: params are placed per the sharding rules
+    (``PackedNVFP4`` codes/scales partition along their column-/row-parallel
+    dim via ``sharding.resolve_packed``), the paged KV pool shards along KV
+    heads, and every jitted step traces inside the (mesh, rules) context so
+    the packed GEMMs dispatch to the ``shard_map``'d kernel and activations
+    carry TP constraints.  The steps stay the same single jitted
+    static-shape functions — TP only changes where the bytes live.
     """
 
     def __init__(self, cfg, params, qcfg=None, *, n_slots: int = 8,
                  block_size: int = 16, n_blocks: int = 48,
                  max_blocks_per_slot: int = 8,
                  prefill_mode: str = "exact", prefill_chunk: int = 8,
-                 prefill_budget: int | None = None, eos_id: int | None = None):
+                 prefill_budget: int | None = None, eos_id: int | None = None,
+                 mesh=None, rules=None):
         if cfg.family != "decoder":
             raise ValueError(f"engine supports the decoder family only "
                              f"(paged KV); got {cfg.family!r}")
@@ -65,6 +76,14 @@ class Engine:
             # batching
             cfg = dataclasses.replace(cfg, moe_dispatch="local")
         self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        if mesh is not None and rules is None:
+            from repro.distributed import sharding as shd
+            self.rules = shd.make_rules(mesh, "tp_only")
+        if mesh is not None:
+            from repro.models import get_model
+            params = self._shard(params, get_model(cfg).param_specs(cfg))
         self.params = params
         if qcfg is None:
             from repro.launch import specs
@@ -82,22 +101,26 @@ class Engine:
         self.eos_id = eos_id
 
         self.pool = PagedKVPool(
-            decoder.init_paged_pool(cfg, n_blocks, block_size), block_size)
+            self._shard(decoder.init_paged_pool(cfg, n_blocks, block_size),
+                        decoder.paged_pool_specs(cfg, n_blocks, block_size)),
+            block_size)
         self.sched = Scheduler(self.pool, n_slots, max_blocks_per_slot)
-        self.scratch = (common.zeros_from_specs(
-            decoder.prefill_scratch_specs(cfg, self.s_alloc))
-            if prefill_mode == "chunked" else None)
+        self.scratch = None
+        if prefill_mode == "chunked":
+            sspecs = decoder.prefill_scratch_specs(cfg, self.s_alloc)
+            self.scratch = self._shard(common.zeros_from_specs(sspecs),
+                                       sspecs)
 
         self._decode = jax.jit(
             lambda params, pool, bt, lens, active, toks:
-            decoder.decode_step_paged(self.cfg, params, pool, bt, lens,
-                                      active, {"tokens": toks}, self.sq),
+            self._traced(decoder.decode_step_paged, self.cfg, params, pool,
+                         bt, lens, active, {"tokens": toks}, self.sq),
             donate_argnums=(1,))
         self._chunk = jax.jit(
             lambda params, scratch, pool, bt, start, n_valid, toks:
-            decoder.prefill_chunk_paged(self.cfg, params, scratch, pool, bt,
-                                        start, n_valid, {"tokens": toks},
-                                        self.sq),
+            self._traced(decoder.prefill_chunk_paged, self.cfg, params,
+                         scratch, pool, bt, start, n_valid, {"tokens": toks},
+                         self.sq),
             donate_argnums=(1, 2))
         self._sample = jax.jit(sample_tokens_seeded)
         self._prefill_fns: dict[int, object] = {}
@@ -113,6 +136,26 @@ class Engine:
         # per-token decode latencies (step wall time amortized over the
         # tokens that step emitted) — feeds the p50/p95 report
         self.token_lat_s: list[float] = []
+
+    # -- TP plumbing -------------------------------------------------------
+
+    def _traced(self, fn, *args):
+        """Run a step builder inside the TP (mesh, rules) context.
+
+        The context must be live at TRACE time (first jitted call), not at
+        jit construction — entering it inside the traced function covers
+        both, and is a no-op without a mesh.
+        """
+        with shd_ctx.maybe_use(self.mesh, self.rules):
+            return fn(*args)
+
+    def _shard(self, tree, specs):
+        """device_put a spec-described tree per the TP rules (identity
+        without a mesh)."""
+        if self.mesh is None:
+            return tree
+        from repro.distributed import sharding as shd
+        return shd.shard_params(tree, specs, self.mesh, self.rules)
 
     # -- public API --------------------------------------------------------
 
@@ -217,8 +260,9 @@ class Engine:
         p = req.prompt_len
         if p not in self._prefill_fns:
             self._prefill_fns[p] = jax.jit(
-                lambda params, toks: decoder.prefill(
-                    self.cfg, params, {"tokens": toks}, self.sq, s_max=None))
+                lambda params, toks: self._traced(
+                    decoder.prefill, self.cfg, params, {"tokens": toks},
+                    self.sq, None))
             self._write_fns[p] = jax.jit(decoder.write_prompt_to_pool,
                                          donate_argnums=(0,))
         logits, cache = self._prefill_fns[p](self.params,

@@ -67,6 +67,12 @@ class PagedKVPool:
     def nbytes(self) -> int:
         return sum(int(a.nbytes) for a in jax.tree.leaves(self.data))
 
+    def nbytes_per_device(self) -> int:
+        """Bytes one device holds — pool totals divided by the KV-head
+        sharding under a TP mesh (== ``nbytes()`` on a single device)."""
+        from repro.distributed.sharding import device_bytes
+        return device_bytes(self.data)
+
     # -- alloc / free ------------------------------------------------------
 
     def alloc(self, n: int) -> list[int]:
@@ -115,4 +121,5 @@ class PagedKVPool:
                 "peak_used_blocks": self.peak_used,
                 "utilization": self.utilization(),
                 "peak_utilization": self.peak_used / max(self.n_blocks, 1),
-                "fp8": self.fp8, "pool_bytes": self.nbytes()}
+                "fp8": self.fp8, "pool_bytes": self.nbytes(),
+                "pool_bytes_per_device": self.nbytes_per_device()}

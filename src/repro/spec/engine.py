@@ -58,7 +58,7 @@ class SpecEngine(Engine):
 
     def __init__(self, cfg, params, qcfg=None, *, draft_k: int = 4,
                  draft: str = "self-qdq", draft_layers: int = 0,
-                 draft_model=None, **kw):
+                 draft_model=None, adaptive_k: bool = False, **kw):
         super().__init__(cfg, params, qcfg, **kw)
         if draft_k < 1:
             raise ValueError(f"draft_k must be >= 1, got {draft_k}")
@@ -74,8 +74,10 @@ class SpecEngine(Engine):
         if draft_model is not None:
             dcfg, dparams, dqcfg = draft_model
         elif draft in ("self-qdq", "self-truncate"):
+            # derive from self.params (TP: already sharded; slices keep
+            # their NamedShardings)
             dcfg, dparams = self_draft_model(
-                self.cfg, params, mode=draft.removeprefix("self-"),
+                self.cfg, self.params, mode=draft.removeprefix("self-"),
                 n_layers=draft_layers)
             dqcfg = self.sq
         else:
@@ -83,13 +85,14 @@ class SpecEngine(Engine):
                              "(pass draft_model= for two-model)")
         if dcfg.vocab_size != cfg.vocab_size:
             raise ValueError("draft and target vocabularies differ")
-        self.proposer = DraftProposer(dcfg, dparams, dqcfg, pool=self.pool)
+        self.proposer = DraftProposer(dcfg, dparams, dqcfg, pool=self.pool,
+                                      mesh=self.mesh, rules=self.rules)
 
         self._verify = jax.jit(
             lambda params, pool, bt, lens, active, nprop, toks:
-            decoder.verify_step_paged(self.vcfg, params, pool, bt, lens,
-                                      active, nprop, {"tokens": toks},
-                                      self.vsq),
+            self._traced(decoder.verify_step_paged, self.vcfg, params, pool,
+                         bt, lens, active, nprop, {"tokens": toks},
+                         self.vsq),
             donate_argnums=(1,))
         self._accept = jax.jit(sampling.speculative_verify_tokens)
 
@@ -98,6 +101,20 @@ class SpecEngine(Engine):
         self.drafted_tokens = 0
         self.accepted_tokens = 0
         self.rolled_back_tokens = 0
+
+        # --- draft-cost-aware adaptive k (ROADMAP next step) ---
+        # choose per-slot draft length k* = argmax over 1..draft_k of
+        # (expected emitted tokens) / (k·t_draft + t_verify), with the
+        # acceptance probability taken from the slot's own measured history
+        # (falling back to the engine EWMA until it has one) and the costs
+        # from measured draft-step / verify-step wall clock.  Losslessness
+        # never depends on k, so adapting it only moves throughput.
+        self.adaptive_k = bool(adaptive_k)
+        self.chosen_k: dict[int, int] = {}  # k -> times chosen (post-clamp)
+        self._acc_ewma: float | None = None
+        self._draft_tok_s: float | None = None   # EWMA draft s/token
+        self._verify_s: float | None = None      # EWMA verify s/step
+        self._req_acc: dict[int, tuple] = {}     # rid -> (drafted, accepted)
 
     # -- hooks -------------------------------------------------------------
 
@@ -134,7 +151,11 @@ class SpecEngine(Engine):
             draft_lens[s] = r.draft_cached
             remaining = r.max_new_tokens - len(r.output)
             cap = len(r.block_ids) * bs - r.n_cached - 1
-            k_eff[s] = max(0, min(k, remaining - 1, cap))
+            k_want = self._choose_k(r) if self.adaptive_k else k
+            k_eff[s] = max(0, min(k_want, remaining - 1, cap))
+            if self.adaptive_k:
+                ke = int(k_eff[s])
+                self.chosen_k[ke] = self.chosen_k.get(ke, 0) + 1
             temps[s] = r.sampling.temperature
             topks[s] = r.sampling.top_k
             seeds[s] = r.sampling.seed
@@ -145,6 +166,7 @@ class SpecEngine(Engine):
             prev_tok=prev, draft_lens=draft_lens, temps=temps, topks=topks,
             seeds=seeds, tok_idx=idxs)
         draft_toks, draft_probs = self.proposer.propose(st, k)
+        t_draft = time.time() - t0
 
         tokens = np.concatenate([last[:, None], draft_toks], axis=1)
         logits, self.pool.data = self._verify(
@@ -156,6 +178,7 @@ class SpecEngine(Engine):
             jnp.asarray(seeds), jnp.asarray(idxs)))
 
         dt = time.time() - t0
+        self._observe_costs(t_draft, dt - t_draft, int(k_eff.max(initial=0)))
         self.decode_s += dt
         self.decode_steps += 1
         self.verify_steps += 1
@@ -167,6 +190,12 @@ class SpecEngine(Engine):
             self.drafted_tokens += ke
             self.accepted_tokens += j
             self.rolled_back_tokens += ke - j
+            if ke:
+                d0, a0 = self._req_acc.get(r.rid, (0, 0))
+                self._req_acc[r.rid] = (d0 + ke, a0 + j)
+                rate = j / ke
+                self._acc_ewma = (rate if self._acc_ewma is None
+                                  else 0.7 * self._acc_ewma + 0.3 * rate)
             toks_emit = [int(out_toks[s, t]) for t in range(ne)]
             if self.eos_id is not None and self.eos_id in toks_emit:
                 # EOS mid-pack: the accepted tail after EOS is discarded
@@ -181,6 +210,57 @@ class SpecEngine(Engine):
             self.token_lat_s.extend([dt / len(toks_emit)] * len(toks_emit))
             for tok in toks_emit:
                 self._emit(r, tok, finished)
+            if r.done:
+                self._req_acc.pop(r.rid, None)   # bounded per-slot history
+
+    # -- draft-cost-aware adaptive k ---------------------------------------
+
+    def _observe_costs(self, draft_s: float, verify_s: float,
+                       n_draft_steps: int) -> None:
+        """EWMA the measured per-token draft cost and per-step verify cost."""
+        if n_draft_steps > 0:
+            per_tok = draft_s / n_draft_steps
+            self._draft_tok_s = (per_tok if self._draft_tok_s is None
+                                 else 0.7 * self._draft_tok_s + 0.3 * per_tok)
+        self._verify_s = (verify_s if self._verify_s is None
+                          else 0.7 * self._verify_s + 0.3 * verify_s)
+
+    def _acceptance_for(self, req: Request) -> float:
+        """Per-token acceptance estimate for one slot: its own history once
+        it has >= 4 drafted tokens, else the engine EWMA, else optimistic
+        (start at full k and let the measurements pull it down)."""
+        d, a = self._req_acc.get(req.rid, (0, 0))
+        if d >= 4:
+            return a / d
+        if self._acc_ewma is not None:
+            return self._acc_ewma
+        return 1.0
+
+    def _choose_k(self, req: Request) -> int:
+        """k* = argmax_k E[emitted tokens | k] / (k·t_draft + t_verify).
+
+        With per-token acceptance probability a, a length-k draft expects
+        a·(1-a^k)/(1-a) accepted tokens plus the always-emitted bonus /
+        correction token.  Until both costs are measured (the first round)
+        the static ``spec_k`` is used.
+
+        The model treats cost as per-slot, but a batch pays draft cost at
+        max-over-slots k_eff (the proposer's sequential loop) and a fixed
+        spec_k+1-wide verify: a single low-acceptance slot choosing a small
+        k saves rolled-back KV writes immediately, and wall clock only once
+        the other slots' acceptance (and hence their k*) drops too — the
+        homogeneous case a distilled draft/target pair serves.
+        """
+        if self._draft_tok_s is None or self._verify_s is None:
+            return self.spec_k
+        a = min(max(self._acceptance_for(req), 0.0), 0.999)
+        best_k, best_rate = 1, -1.0
+        for k in range(1, self.spec_k + 1):
+            e_acc = a * (1.0 - a ** k) / (1.0 - a)
+            rate = (e_acc + 1.0) / (k * self._draft_tok_s + self._verify_s)
+            if rate > best_rate:
+                best_rate, best_k = rate, k
+        return best_k
 
     # -- reporting ---------------------------------------------------------
 
@@ -202,5 +282,8 @@ class SpecEngine(Engine):
                                   + self.verify_slot_rounds)
             / max(self.verify_slot_rounds, 1),
             "draft_pool_bytes": self.proposer.nbytes(),
+            "adaptive_k": self.adaptive_k,
+            # chosen-k distribution (post-clamp; populated when adaptive)
+            "chosen_k_hist": dict(sorted(self.chosen_k.items())),
         })
         return d

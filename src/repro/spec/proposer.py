@@ -71,12 +71,20 @@ class DraftProposer:
     its own device pages.
     """
 
-    def __init__(self, cfg, params, qcfg, *, pool):
+    def __init__(self, cfg, params, qcfg, *, pool, mesh=None, rules=None):
         if cfg.n_experts and cfg.moe_dispatch not in ("local", "token"):
             cfg = dataclasses.replace(cfg, moe_dispatch="local")
         self.cfg = cfg
         self.dcfg = (dataclasses.replace(cfg, moe_dispatch="token")
                      if cfg.n_experts else cfg)
+        self.mesh, self.rules = mesh, rules
+        if mesh is not None:
+            # TP: the draft shards exactly like the target (self-draft
+            # params arrive pre-sharded — device_put to the same placement
+            # is a no-op; two-model drafts get placed here)
+            from repro.distributed import sharding as shd
+            params = shd.shard_params(params, decoder.param_specs(cfg),
+                                      mesh, rules)
         self.params = params
         sq = dataclasses.replace(qcfg, quantize_weights=False)
         self.psq = dataclasses.replace(sq, act_scope="row")     # prefill
@@ -84,6 +92,12 @@ class DraftProposer:
         self.pool = pool                                        # geometry only
         self.data = decoder.init_paged_pool(cfg, pool.n_blocks,
                                             pool.block_size)
+        if mesh is not None:
+            from repro.distributed import sharding as shd
+            self.data = shd.shard_params(
+                self.data,
+                decoder.paged_pool_specs(cfg, pool.n_blocks, pool.block_size),
+                mesh, rules)
 
         self._step = jax.jit(
             lambda data, bt, lens, active, toks, temps, topks, seeds, tidx:
@@ -93,11 +107,16 @@ class DraftProposer:
         self._prefill_fns: dict[int, object] = {}
         self._write_fns: dict[int, object] = {}
 
+    def _traced_ctx(self):
+        from repro.distributed import ctx as shd_ctx
+        return shd_ctx.maybe_use(self.mesh, self.rules)
+
     def _step_impl(self, data, bt, lens, active, toks, temps, topks, seeds,
                    tidx):
-        logits, data = decoder.decode_step_paged(
-            self.dcfg, self.params, data, bt, lens, active,
-            {"tokens": toks}, self.dsq)
+        with self._traced_ctx():
+            logits, data = decoder.decode_step_paged(
+                self.dcfg, self.params, data, bt, lens, active,
+                {"tokens": toks}, self.dsq)
         tok, q = draft_sample_tokens(logits[:, 0, :], temps, topks, seeds,
                                      tidx)
         return tok, q, data
@@ -111,9 +130,12 @@ class DraftProposer:
         """Whole-prompt draft prefill into this request's (shared) blocks."""
         p = req.prompt_len
         if p not in self._prefill_fns:
-            self._prefill_fns[p] = jax.jit(
-                lambda params, toks: decoder.prefill(
-                    self.cfg, params, {"tokens": toks}, self.psq, s_max=None))
+            def _prefill(params, toks):
+                with self._traced_ctx():
+                    return decoder.prefill(self.cfg, params,
+                                           {"tokens": toks}, self.psq,
+                                           s_max=None)
+            self._prefill_fns[p] = jax.jit(_prefill)
             self._write_fns[p] = jax.jit(decoder.write_prompt_to_pool,
                                          donate_argnums=(0,))
         _, cache = self._prefill_fns[p](self.params,

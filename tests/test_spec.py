@@ -345,3 +345,60 @@ def test_self_draft_model_truncation(loaded):
         self_draft_model(cfg, params, "truncate", cfg.n_layers + 1)
     with pytest.raises(ValueError):
         SpecEngine(cfg, params, by_fmt["packed"][1], draft_k=0, **ENG_KW)
+
+
+# ---------------------------------------------------------------------------
+# draft-cost-aware adaptive k
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_k_parity_and_histogram(loaded):
+    """Adaptive per-slot draft length keeps greedy output token-identical
+    to the plain engine (losslessness never depends on k) and records the
+    chosen-k distribution; high-acceptance self-drafts keep k high."""
+    cfg, by_fmt = loaded
+    params, qcfg = by_fmt["qdq"]
+    prompts = _prompts(cfg, [5, 13])
+    gen = 10
+    ref = _plain_ref(cfg, params, qcfg, prompts, gen=gen)
+
+    eng = SpecEngine(cfg, params, qcfg, draft_k=4, draft="self-qdq",
+                     adaptive_k=True, **ENG_KW)
+    rids = [eng.submit(p, gen) for p in prompts]
+    out = eng.drain(max_steps=500)
+    assert eng.pool.used_blocks == 0
+    for rid, r in zip(rids, ref):
+        np.testing.assert_array_equal(out[rid], r)
+    st = eng.stats()
+    assert st["adaptive_k"] is True
+    hist = st["chosen_k_hist"]
+    assert hist and sum(hist.values()) == eng.verify_slot_rounds
+    # the first round (costs unmeasured) must open at the full spec_k, and
+    # every later choice stays in range (for a self-draft, whose draft step
+    # costs as much as verify, the argmax legitimately drifts low)
+    assert eng.spec_k in hist
+    assert all(0 <= k <= eng.spec_k for k in hist)
+    # the engine EWMA observed the (perfect) acceptance
+    assert eng._acc_ewma == 1.0
+
+
+def test_choose_k_prefers_small_k_at_low_acceptance(loaded):
+    """With near-zero acceptance and nontrivial draft cost the expected-
+    throughput argmax collapses to k=1; with perfect acceptance and cheap
+    drafts it stays at spec_k."""
+    cfg, by_fmt = loaded
+    params, qcfg = by_fmt["qdq"]
+    eng = SpecEngine(cfg, params, qcfg, draft_k=4, draft="self-qdq",
+                     adaptive_k=True, **ENG_KW)
+    req = eng.sched.submit(np.asarray([5, 6, 7]), 8)
+    # a cheap draft (the realistic regime: the draft model is much smaller
+    # than the verify forward) — k should track acceptance
+    eng._draft_tok_s, eng._verify_s = 0.001, 0.01
+    eng._req_acc[req.rid] = (100, 0)        # measured acceptance 0.0
+    assert eng._choose_k(req) == 1
+    eng._req_acc[req.rid] = (100, 100)      # measured acceptance ~1.0
+    assert eng._choose_k(req) == eng.spec_k
+    # draft as expensive as verify: speculation can't pay at low acceptance
+    eng._draft_tok_s = eng._verify_s
+    eng._req_acc[req.rid] = (100, 25)
+    assert eng._choose_k(req) == 1
