@@ -8,7 +8,10 @@ recipe's FP8-vs-BF16 KV cache at decode_32k), serves a mixed-length
 staggered workload through the ``repro.serve`` engine (qdq and packed,
 with TTFT / per-token latency percentiles), prices the TP partition
 (``sharded`` section: per-device packed-weight and KV-pool bytes at tp=2/8
-via ``sharding.resolve_packed``), and sweeps speculative decoding
+via ``sharding.resolve_packed``), compares the per-layer state protocol's
+backends (``state_protocol`` section: packed-engine tok/s and per-slot
+serve-state bytes for a paged-KV decoder vs constant-size slab-state
+recurrent archs), and sweeps speculative decoding
 (``repro.spec``) over draft length k — acceptance rate, per-slot accepted
 tokens, and tok/s vs the plain-engine baseline for a dense and a
 MoE/FP8-KV arch plus a two-model draft and an adaptive-k row (chosen-k
@@ -116,6 +119,37 @@ def engine_rows(arch: str, requests: int, gen: int, slots: int) -> dict:
     return out
 
 
+def state_protocol_rows(paged_arch: str,
+                        slab_archs=("rwkv6-3b", "recurrentgemma-2b"),
+                        requests: int = 4, gen: int = 6,
+                        slots: int = 2) -> dict:
+    """Per-layer state-protocol comparison: packed-weight engine tok/s and
+    per-slot serve-state bytes for a paged-KV decoder vs the constant-size
+    slab-state recurrent archs (growing block tables vs O(1) slabs)."""
+    out = {}
+    for a in dict.fromkeys((paged_arch, *slab_archs)):
+        cfg = configs.get_smoke(a)
+        args = serve.build_parser().parse_args(
+            ["--engine", "--arch", a, "--requests", str(requests),
+             "--gen", str(gen), "--slots", str(slots), "--no-parity"])
+        params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0),
+                                            "packed")
+        res = serve.run_engine(cfg, params, qcfg, args)
+        st = res["stats"]
+        sp = specs.serve_memory_report(cfg)["state_protocol"]
+        out[a] = {"plan": sp["plan"],
+                  "state_backend": st["state_backend"],
+                  "completed": res["ok"],
+                  "state_drained": res["pool_drained"],
+                  "decode_tok_s": st["decode_tok_s"],
+                  "state_bytes_per_slot": sp["state_bytes_per_slot"],
+                  "state_pool_bytes": st["pool_bytes"]}
+        emit(f"serve/state/{a}", 1e6 / max(st["decode_tok_s"], 1e-9),
+             f"plan={'+'.join(sp['plan'])};"
+             f"bytes_per_slot={sp['state_bytes_per_slot']}")
+    return out
+
+
 def speculative_rows(dense_arch: str, moe_arch: str, gen: int,
                      ks=(2, 4)) -> dict:
     """Speculative decoding on the engine: acceptance rate, per-slot-round
@@ -217,6 +251,13 @@ def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
           f"qdq={e['qdq']['decode_tok_s']:.1f} tok/s "
           f"packed={e['packed']['decode_tok_s']:.1f} tok/s "
           f"peak-pool-util={e['packed']['peak_pool_utilization']:.2f}")
+
+    results["state_protocol"] = state_protocol_rows(arch, gen=gen)
+    for a, row in results["state_protocol"].items():
+        print(f"[serve_bench] state {a} ({'+'.join(row['plan'])}): "
+              f"{row['decode_tok_s']:.1f} tok/s "
+              f"{row['state_bytes_per_slot']}B/slot "
+              f"drained={row['state_drained']}")
 
     results["sharded"] = sharded_rows(dict.fromkeys((arch, *archs)))
     for a, by_tp in results["sharded"].items():

@@ -5,12 +5,18 @@ packed 4-bit layout), prefill, then batched greedy decode.
 
     PYTHONPATH=src python examples/serve_nvfp4.py --arch recurrentgemma-2b
 
-``--engine`` demos the continuous-batching engine instead (decoder archs):
-requests with different prompt lengths, generation budgets, and sampling
-settings are submitted to ``repro.serve.Engine``, scheduled into decode
-slots over a paged KV pool, and drained as they finish.
+``--engine`` demos the continuous-batching engine instead: requests with
+different prompt lengths, generation budgets, and sampling settings are
+submitted to ``repro.serve.Engine``, scheduled into decode slots, and
+drained as they finish.  The engine is generic over the per-layer state
+protocol, so the same demo serves paged-KV decoders, recurrent slab-state
+archs (RWKV6 / RG-LRU — constant-size state per slot, no block tables),
+and encoder-conditioned Whisper (dense self-KV + an immutable encoder
+slot fed via ``extras={"enc_frames": ...}``):
 
     PYTHONPATH=src python examples/serve_nvfp4.py --engine
+    PYTHONPATH=src python examples/serve_nvfp4.py --engine --arch rwkv6-3b
+    PYTHONPATH=src python examples/serve_nvfp4.py --engine --arch whisper-tiny
 
 ``--tp 2`` serves the engine tensor-parallel: packed codes/scales shard
 column-/row-parallel over a ("data", "model") mesh, the KV pool shards by
@@ -61,17 +67,25 @@ def run_engine_demo(cfg, params, qcfg, args):
         (9, args.gen + 4, SamplingParams(temperature=0.8, top_k=20, seed=1)),
         (6, args.gen, SamplingParams(temperature=1.2, seed=2)),
     ]
+    # encoder-conditioned archs take their non-token input per request
+    need_enc = "enc_frames" in getattr(eng.state, "required_extras", ())
     rids = []
     for i, (plen, gen, sp) in enumerate(jobs):
         prompt = np.asarray(jax.random.randint(
             jax.random.fold_in(rng, i), (plen,), 4, cfg.vocab_size))
-        rids.append(eng.submit(prompt, gen, sampling=sp))
+        extras = None
+        if need_enc:
+            extras = {"enc_frames": np.asarray(jax.random.normal(
+                jax.random.fold_in(rng, 100 + i),
+                (cfg.enc_seq, cfg.d_model)))}
+        rids.append(eng.submit(prompt, gen, sampling=sp, extras=extras))
     outputs = eng.drain()
     st = eng.stats()
-    print(f"engine: {st['requests_finished']} requests, "
-          f"{st['decode_tok_s']:.1f} decode tok/s, peak pool util "
-          f"{st['peak_utilization']:.2f}, pool drained="
-          f"{eng.pool.used_blocks == 0}")
+    print(f"engine[{'+'.join(eng.state_plan)}]: "
+          f"{st['requests_finished']} requests, "
+          f"{st['decode_tok_s']:.1f} decode tok/s, peak state util "
+          f"{st['peak_utilization']:.2f}, state drained="
+          f"{not eng.state.leaked()}")
     if mesh is not None:
         from repro.launch.serve import tp_shard_report
         rep = tp_shard_report(eng)

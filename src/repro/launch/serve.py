@@ -15,10 +15,15 @@ tokens agree (``--no-parity`` to skip).
 
 ``--engine`` switches from the static [B, P] batch to the continuous-
 batching engine (``repro.serve``): a mixed-length request population is
-submitted with staggered arrivals, scheduled into decode slots over a paged
-(BF16 or FP8-with-scales) KV pool, and drained; per-request greedy outputs
+submitted with staggered arrivals, scheduled into decode slots over the
+config's state backend — a paged (BF16 or FP8-with-scales) KV pool for
+decoder archs, constant-size per-slot state slabs for recurrent
+(``--arch rwkv6-3b``, ``recurrentgemma-2b``) and encoder-conditioned
+(``--arch whisper-tiny``; deterministic stub encoder frames feed both the
+engine and the reference) archs — and drained; per-request greedy outputs
 are checked token-for-token against single-request ``serve_batch`` runs,
-and the pool must drain back to empty.  Engine knobs:
+and the state must drain back to empty.  Unservable configs (e.g. M-RoPE
+``qwen2-vl-2b``) exit with a one-line capability error.  Engine knobs:
 
   --requests N            number of requests (default 8)
   --min-prompt/--max-prompt   prompt-length spread (default 4..16, >= 4x)
@@ -74,12 +79,15 @@ def load_quantized(cfg, rng, weight_format: str = "qdq"):
     return ptq.quantize_weights(params, pspecs, qcfg), qcfg
 
 
-def serve_batch(cfg, params, prompts, n_gen: int, sample_rng=None, qcfg=None):
+def serve_batch(cfg, params, prompts, n_gen: int, sample_rng=None, qcfg=None,
+                extras=None):
     """Prefill + greedy decode ``n_gen`` tokens for a [B, P] prompt batch.
 
     ``qcfg`` overrides the recipe-derived serving config; serving always
     disables runtime weight fake-quant (weights are pre-quantized offline —
     re-QDQ'ing already-gridded weights would derive fresh, different scales).
+    ``extras`` adds batched non-token prefill inputs (e.g. ``enc_frames``
+    [B, T, d] for encoder-decoder archs).
     """
     model = get_model(cfg)
     sq = (dataclasses.replace(qcfg, quantize_weights=False)
@@ -90,8 +98,11 @@ def serve_batch(cfg, params, prompts, n_gen: int, sample_rng=None, qcfg=None):
     step = jax.jit(lambda p, c, b: model.decode_step(cfg, p, c, b, sq),
                    donate_argnums=(1,))
 
+    batch = {"tokens": prompts}
+    for k, v in (extras or {}).items():
+        batch[k] = jnp.asarray(v)
     t0 = time.time()
-    logits, cache = prefill(params, {"tokens": prompts})
+    logits, cache = prefill(params, batch)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
@@ -191,16 +202,18 @@ def tp_shard_report(eng) -> dict:
                if "model" in _partition_axes(p.codes.sharding)
                and "model" in _partition_axes(p.scales.sharding)]
     from repro.distributed.sharding import device_bytes
+    state_data = eng.pool.data if eng.pool is not None else eng.state.data
     kv_sharded = any("model" in _partition_axes(a.sharding)
-                     for a in jax.tree.leaves(eng.pool.data))
+                     for a in jax.tree.leaves(state_data))
+    sst = eng.state.stats()
     return {
         "packed_total": len(packed), "packed_sharded": len(sharded),
         "kv_sharded": kv_sharded,
         "weight_bytes_per_device": device_bytes(eng.params),
         "weight_bytes_total": sum(int(a.nbytes)
                                   for a in jax.tree.leaves(eng.params)),
-        "kv_pool_bytes_per_device": eng.pool.nbytes_per_device(),
-        "kv_pool_bytes_total": eng.pool.nbytes(),
+        "kv_pool_bytes_per_device": sst["pool_bytes_per_device"],
+        "kv_pool_bytes_total": sst["pool_bytes"],
     }
 
 
@@ -230,21 +243,35 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
     rng = jax.random.PRNGKey(1)
     prompts = mixed_prompts(rng, args.requests, args.min_prompt,
                             args.max_prompt, cfg.vocab_size)
+    # encoder-conditioned archs need per-request encoder inputs; the SAME
+    # deterministic frames feed the engine and the parity reference
+    extras_list = [None] * len(prompts)
+    if "enc_frames" in getattr(eng.state, "required_extras", ()):
+        extras_list = [
+            {"enc_frames": np.asarray(jax.random.normal(
+                jax.random.fold_in(rng, 10_000 + i),
+                (cfg.enc_seq, cfg.d_model), jnp.float32))}
+            for i in range(len(prompts))]
     # staggered arrivals: half up front, the rest trickle in while the
     # first wave is already decoding
-    rids = [eng.submit(np.asarray(p), args.gen) for p in prompts[: len(prompts) // 2]]
-    for p in prompts[len(prompts) // 2:]:
+    half = len(prompts) // 2
+    rids = [eng.submit(np.asarray(p), args.gen, extras=ex)
+            for p, ex in zip(prompts[:half], extras_list[:half])]
+    for p, ex in zip(prompts[half:], extras_list[half:]):
         eng.step()
-        rids.append(eng.submit(np.asarray(p), args.gen))
+        rids.append(eng.submit(np.asarray(p), args.gen, extras=ex))
     outputs = eng.drain(max_steps=10_000)
     st = eng.stats()
 
     ok = len(outputs) == args.requests
     if not ok:
         print(f"[engine] FAIL: {len(outputs)}/{args.requests} completed")
-    if eng.pool.used_blocks != 0:
+    if eng.state.leaked():
         ok = False
-        print(f"[engine] FAIL: {eng.pool.used_blocks} pool blocks leaked")
+        leak = (f"{eng.pool.used_blocks} pool blocks"
+                if eng.pool is not None else
+                f"{st.get('used_slots', '?')} state slots")
+        print(f"[engine] FAIL: {leak} leaked")
     if tp_rep is not None and tp_rep["packed_total"] \
             and not tp_rep["packed_sharded"]:
         ok = False
@@ -259,11 +286,12 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
     parity = None
     if check:
         parity = True
-        for rid, prompt in zip(rids, prompts):
+        for rid, prompt, ex in zip(rids, prompts, extras_list):
             # reference: single-request static batch on the engine's cfg
             # (MoE archs force per-row dispatch)
+            bex = ({k: v[None] for k, v in ex.items()} if ex else None)
             ref, _ = serve_batch(eng.cfg, params, prompt[None], args.gen,
-                                 qcfg=qcfg)
+                                 qcfg=qcfg, extras=bex)
             if not np.array_equal(np.asarray(ref[0]), outputs[rid]):
                 parity = False
                 print(f"[engine] FAIL: request {rid} diverges from "
@@ -272,9 +300,14 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
         ok = ok and parity
 
     spec = getattr(args, "speculative", 0)
-    print(f"[engine] arch={cfg.name} requests={args.requests} "
+    drained = not eng.state.leaked()
+    pool_desc = (f"pool={n_blocks}x{bs}" if eng.pool is not None else
+                 f"state-slabs={st.get('state_bytes_per_slot', 0)}B/slot")
+    print(f"[engine] arch={cfg.name} "
+          f"state-plan={'+'.join(eng.state_plan)} "
+          f"requests={args.requests} "
           f"prompts={args.min_prompt}..{args.max_prompt} gen={args.gen} "
-          f"slots={args.slots} pool={n_blocks}x{bs} "
+          f"slots={args.slots} {pool_desc} "
           f"prefill={args.prefill_mode}"
           + (f" speculative=k{spec}/{args.draft}" if spec else ""))
     print(f"[engine] decode={st['decode_tok_s']:.1f} tok/s "
@@ -286,7 +319,7 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
           f"tok_lat_p50={st['decode_lat_p50_s']*1e3:.1f}ms "
           f"tok_lat_p95={st['decode_lat_p95_s']*1e3:.1f}ms "
           f"parity={'AGREE' if parity else ('skipped' if parity is None else 'DISAGREE')} "
-          f"pool-drained={eng.pool.used_blocks == 0}")
+          f"state-drained={drained}")
     if spec:
         adaptive = (f" chosen-k={st['chosen_k_hist']}"
                     if st.get("adaptive_k") else "")
@@ -297,7 +330,7 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
               f"verify-steps={st['verify_steps']}{adaptive}")
     return {"ok": ok, "outputs": outputs, "stats": st,
             "tokens_match_serve_batch": parity, "n_blocks": n_blocks,
-            "pool_drained": eng.pool.used_blocks == 0, "tp": tp_rep}
+            "pool_drained": drained, "tp": tp_rep}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -391,7 +424,13 @@ def main(argv=None):
               f"all dense (qdq stores quantized values as BF16, 2 B/param)")
 
     if args.engine:
-        res = run_engine(cfg, params, qcfg, args, mesh=mesh, rules=rules)
+        from repro.serve import UnsupportedStateError
+        try:
+            res = run_engine(cfg, params, qcfg, args, mesh=mesh, rules=rules)
+        except UnsupportedStateError as e:
+            # capability probe said no (e.g. vision_prefix / M-RoPE): a
+            # clear one-line refusal, not a traceback
+            raise SystemExit(f"[serve] unsupported: {e}") from None
         res["weights"] = wr
         if not res["ok"]:
             raise SystemExit(1)

@@ -194,7 +194,12 @@ def serve_memory_report(cfg: ModelConfig, shape: ShapeConfig | None = None,
     Weights: packed NVFP4 (quantized GEMMs at ~0.5625 B/param, the rest
     dense BF16) vs all-BF16.  KV: the recipe's cache dtype (FP8 + scales for
     moe_hybrid) vs BF16, for the dense [B, S] cache of ``shape`` and — when
-    ``n_blocks`` is given — the engine's paged pool geometry.
+    ``n_blocks`` is given — the engine's paged pool geometry.  The
+    ``state_protocol`` section prices ONE request's serve-engine state under
+    the per-layer state plan: a paged-KV slot's worst-case block share for
+    decoder archs, the constant-size state slab (recurrent states, window
+    rings, dense self-KV + encoder slot) for slab archs — recipe dtype vs
+    all-BF16.
 
     A ``mesh`` with a nontrivial "model" axis (or analytic ``tp=N`` on
     hosts without the devices — sharding math never touches hardware) adds
@@ -226,6 +231,37 @@ def serve_memory_report(cfg: ModelConfig, shape: ShapeConfig | None = None,
                                       + report["kv_bytes_bf16"])
         report["joint_ratio"] = (report["joint_bytes_deployed"]
                                  / max(report["joint_bytes_bf16"], 1))
+
+    # --- per-request serve-state pricing (per-layer state protocol) ---
+    from repro.models import registry as model_registry
+    try:
+        plan = model_registry.serve_state_plan(cfg)
+    except ValueError:
+        plan = None
+    if plan is not None:
+        import math
+        s_alloc = (shape.seq_len if shape is not None
+                   else 8 * block_size)
+
+        def per_slot_bytes(c):
+            m = get_model(c)
+            if "paged_kv" in plan:
+                # one slot's worst-case share of the pool at s_alloc
+                from repro.models import decoder
+                nb = max(1, math.ceil(s_alloc / block_size))
+                return common.spec_bytes(
+                    decoder.paged_pool_specs(c, nb, block_size))
+            return common.spec_bytes(m.slot_state_specs(c, 1, s_alloc))
+
+        bf = dataclasses.replace(cfg, quant_recipe="all")
+        report["state_protocol"] = {
+            "plan": list(plan),
+            "supported":
+                model_registry.serve_capabilities(cfg)["supported"],
+            "s_alloc": s_alloc,
+            "state_bytes_per_slot": per_slot_bytes(cfg),
+            "state_bytes_per_slot_bf16": per_slot_bytes(bf),
+        }
 
     if mesh is None and tp and tp > 1:
         mesh = shd.ShapeOnlyMesh({"data": 1, "model": int(tp)})

@@ -185,10 +185,13 @@ def decode_attend(q, layer_cache, pos, *, window: int = 0):
     """One-token decode: q [B,1,H,hd] vs cache [B,S_max,Hkv,hd].
 
     ``pos``: number of valid cache positions (the new token's kv must already
-    be written).  Sliding-window caches are ring buffers: validity is
+    be written) — a scalar applied to every row, or a [B] array giving each
+    row its own count (the slot-state engine batches requests at different
+    sequence positions).  Sliding-window caches are ring buffers: validity is
     pos - window <= slot_pos < pos, where slot semantics are handled by the
     caller writing at ``pos % S_max``; since RoPE precedes caching, only the
-    mask matters.
+    mask matters.  The mask arithmetic is pure boolean/integer work, so the
+    per-row form is bitwise identical to the scalar form row by row.
     """
     k, v = cache_read_layer(layer_cache, q.dtype)
     b, s_max, hkv, hd = k.shape
@@ -198,20 +201,53 @@ def decode_attend(q, layer_cache, pos, *, window: int = 0):
     scale = 1.0 / jnp.sqrt(jnp.float32(hd))
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                    preferred_element_type=jnp.float32) * scale
-    slot = jnp.arange(s_max)
+    slot = jnp.arange(s_max)[None, :]                  # [1, S_max]
+    pos = jnp.asarray(pos)
+    rpos = pos[:, None] if pos.ndim else pos[None, None]   # [B|1, 1]
     if window:
         # ring buffer: slot i currently holds absolute position
         #   p(i) = i + s_max * floor((pos-1-i)/s_max)  — the most recent write
-        newest = pos - 1
+        newest = rpos - 1
         abs_pos = slot + s_max * ((newest - slot) // s_max)
-        valid = (abs_pos >= 0) & (abs_pos >= pos - window) & (abs_pos <= newest)
+        valid = (abs_pos >= 0) & (abs_pos >= rpos - window) & (abs_pos <= newest)
     else:
-        valid = slot < pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid = slot < rpos
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, -1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.astype(q.dtype)
+
+
+def cache_update_slots(layer_cache, k_new, v_new, positions, active):
+    """Per-row decode write into a dense [B, S_max, ...] cache layer.
+
+    k_new/v_new: [B, 1, Hkv, hd]; positions: [B] per-row write slots (ring
+    callers pass ``pos % S_max``); active: [B] bool — inactive rows scatter
+    out of bounds and are dropped, leaving their cached values untouched.
+    Quantization goes through the same ``_quant_kv`` as ``cache_update_layer``
+    so a slot-batched write stores the scalar path's bits exactly.
+    """
+    b, s_max = layer_cache["k"].shape[:2]
+    row = jnp.arange(b)
+    pos_w = jnp.where(active, positions, s_max)        # OOB -> dropped
+    out = dict(layer_cache)
+    if layer_cache.get("k_scale") is not None:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        out["k"] = layer_cache["k"].at[row, pos_w].set(kq[:, 0], mode="drop")
+        out["v"] = layer_cache["v"].at[row, pos_w].set(vq[:, 0], mode="drop")
+        out["k_scale"] = layer_cache["k_scale"].at[row, pos_w].set(
+            ks[:, 0], mode="drop")
+        out["v_scale"] = layer_cache["v_scale"].at[row, pos_w].set(
+            vs[:, 0], mode="drop")
+    else:
+        dt = layer_cache["k"].dtype
+        out["k"] = layer_cache["k"].at[row, pos_w].set(
+            k_new[:, 0].astype(dt), mode="drop")
+        out["v"] = layer_cache["v"].at[row, pos_w].set(
+            v_new[:, 0].astype(dt), mode="drop")
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -122,6 +122,21 @@ def zeros_from_specs(specs):
                         is_leaf=is_spec)
 
 
+def merge_slot_state(specs, old, new, active):
+    """Keep inactive slots' state bit for bit across a batched decode step.
+
+    ``specs`` names each leaf's "batch" axis; ``active`` [n_slots] selects
+    per-slot between the freshly computed leaf and the previous one.  The
+    select is exact (no arithmetic), so active rows carry the new values
+    unchanged and inactive rows are indistinguishable from never stepping.
+    """
+    def one(spec, o, n):
+        ax = spec.axes.index("batch")
+        act = active.reshape((1,) * ax + (-1,) + (1,) * (n.ndim - ax - 1))
+        return jnp.where(act, n.astype(o.dtype), o)
+    return jax.tree.map(one, specs, old, new, is_leaf=is_spec)
+
+
 # ---------------------------------------------------------------------------
 # scan-over-layers with selective quantization (paper §3.4)
 # ---------------------------------------------------------------------------

@@ -278,6 +278,50 @@ def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
     return logits, new_cache
 
 
+def _attention_slots(qcfg, cfg, p, h, lens, active, cache_sl):
+    """Per-row decode attention against a dense [B, S_alloc, ...] cache.
+
+    The slot-state engine batches requests at independent positions:
+    ``lens`` [B] is each row's cached-token count (== this token's absolute
+    position), ``active`` [B] masks rows with no work (their cache writes
+    are dropped).  Numerically this is the scalar decode branch of
+    ``_attention`` row by row — per-row RoPE, ring writes at
+    ``lens % S_alloc`` for windowed layers, and per-row validity masks —
+    so an active row is bitwise equal to a batch-1 ``decode_step``.
+    """
+    b, s, _ = h.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p.get("bqkv"),
+                        parallelism="column")
+    q, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
+    pos = lens[:, None]                               # [B, 1]
+    hax = ("batch", "seq", "heads", "none")
+    kax = ("batch", "seq", "kv", "none")
+    q = cst(_rope(cfg, attn.split_heads(q, nh, hd), pos), hax)
+    k = cst(_rope(cfg, attn.split_heads(k, nkv, hd), pos), kax)
+    v = cst(attn.split_heads(v, nkv, hd), kax)
+    s_max = cache_sl["k"].shape[1]
+    write_at = lens % s_max if cfg.window else lens
+    new_cache = attn.cache_update_slots(cache_sl, k, v, write_at, active)
+    out = attn.decode_attend(q, new_cache, lens + 1, window=cfg.window)
+    out = cst(out, hax)
+    out = cst(layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"],
+                            parallelism="row"),
+              ("batch", "seq", "none"))
+    return out, new_cache
+
+
+def _block_slots(qcfg, cfg, p, x, lens, active, cache_sl):
+    """Transformer layer for the slot-state decode step (per-row positions)."""
+    h = run_norm(cfg, p["ln1"], x)
+    a, new_cache = _attention_slots(qcfg, cfg, p, h, lens, active, cache_sl)
+    x = x + a
+    h = run_norm(cfg, p["ln2"], x)
+    f, aux = _ffn(qcfg, cfg, p, h)
+    x = x + f
+    return x, new_cache, aux
+
+
 # ---------------------------------------------------------------------------
 # paged-pool forwards (continuous-batching engine, repro.serve)
 # ---------------------------------------------------------------------------

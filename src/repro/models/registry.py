@@ -21,3 +21,50 @@ def get_model(cfg):
     except KeyError:
         raise ValueError(f"unknown model family: {cfg.family!r} "
                          f"(have {sorted(_FAMILIES)})") from None
+
+
+# ---------------------------------------------------------------------------
+# per-layer serve-state plans (repro.serve state protocol)
+# ---------------------------------------------------------------------------
+
+# state kinds the serve engine implements; anything else in a plan makes the
+# config unservable (serve_capabilities reports it, the engine refuses it)
+SUPPORTED_STATE_KINDS = frozenset({
+    "paged_kv",          # block-granular KV pool (decoder family)
+    "recurrent",         # constant-size RNN state slabs (RWKV6 / RG-LRU)
+    "window_kv",         # fixed-window ring KV slabs (RG-LRU local attn)
+    "dense_kv",          # finite dense KV slabs (encoder-decoder self-attn)
+    "encoder_output",    # immutable per-request encoder slots (cross-attn)
+})
+
+
+def serve_state_plan(cfg) -> tuple:
+    """The per-layer state kinds a config needs to serve, deduplicated.
+
+    The engine picks its backend from this: a plan of {"paged_kv"} serves
+    through the paged pool; any other supported plan serves through
+    constant-size slot slabs.  Unsupported kinds (e.g. "vision_prefix" —
+    M-RoPE needs per-request 3-D position streams threaded through decode)
+    are still *declared* so capability errors can name what is missing.
+    """
+    if cfg.family == "decoder":
+        return ("paged_kv", "vision_prefix") if cfg.mrope_sections \
+            else ("paged_kv",)
+    if cfg.family == "rwkv6":
+        return ("recurrent",)
+    if cfg.family == "rglru_hybrid":
+        # windowless hybrids keep dense local-attention KV: finite slab,
+        # admission must bound prompt + generation by the allocation
+        return ("recurrent", "window_kv") if cfg.window \
+            else ("recurrent", "dense_kv")
+    if cfg.family == "encdec":
+        return ("dense_kv", "encoder_output")
+    raise ValueError(f"no serve-state plan for family {cfg.family!r}")
+
+
+def serve_capabilities(cfg) -> dict:
+    """Probe whether the engine can serve ``cfg`` and why not if it can't:
+    {"plan", "supported", "missing"}."""
+    plan = serve_state_plan(cfg)
+    missing = tuple(k for k in plan if k not in SUPPORTED_STATE_KINDS)
+    return {"plan": plan, "supported": not missing, "missing": missing}

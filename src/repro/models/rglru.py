@@ -290,6 +290,65 @@ def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
     return logits, new_cache
 
 
+def slot_state_specs(cfg, n_slots, s_max):
+    """Per-slot serve-state slabs: RG-LRU conv/h states plus the windowed
+    local-attention ring (always exactly ``cfg.window`` positions — prefill
+    ring-aligns its kv to the window, so the slab is constant-size however
+    long the request runs).  The scalar pos is dropped; the engine tracks
+    per-request positions host-side."""
+    s_eff = max(s_max, cfg.window) if cfg.window else s_max
+    return {k: v for k, v in cache_specs(cfg, n_slots, s_eff).items()
+            if k != "pos"}
+
+
+def decode_step_slots(cfg, params, state, batch, lens, active, qcfg):
+    """Batched decode over engine slots at independent positions ``lens``.
+
+    Recurrent blocks are position-free (batched RNN step); the periodic
+    local-attention layers use per-row RoPE, ring writes at
+    ``lens % window``, and per-row ring validity masks
+    (``decoder._block_slots``).  Inactive rows keep their state bit for bit.
+    """
+    from .decoder import _block_slots
+    x = params["embed"][batch["tokens"]]
+
+    def body(qc):
+        def fn(carry, inp):
+            p, xs = inp
+            xcur = carry
+            new_rec = []
+            n_rec = jax.tree.leaves(p["rec"])[0].shape[0]
+            for j in range(n_rec):
+                pj = jax.tree.map(lambda a: a[j], p["rec"])
+                ssl = jax.tree.map(lambda a: a[j], xs["rec"])
+                xcur, st = _rec_block(qc, cfg, pj, xcur, "decode", ssl)
+                new_rec.append(st)
+            xcur, new_kv, _ = _block_slots(qc, cfg, p["attn"], xcur, lens,
+                                           active, xs["kv"])
+            ys = {"rec": jax.tree.map(lambda *a: jnp.stack(a), *new_rec),
+                  "kv": new_kv}
+            return xcur, ys
+        return fn
+
+    x, new_blocks = common.scan_layers(body, x, params["blocks"],
+                                       state["blocks"], qcfg, 0, 0, "none")
+    new_state = {"blocks": new_blocks}
+    if "rem" in params:
+        n_rem = jax.tree.leaves(params["rem"])[0].shape[0]
+        rem_states = []
+        for j in range(n_rem):
+            pj = jax.tree.map(lambda a: a[j], params["rem"])
+            ssl = jax.tree.map(lambda a: a[j], state["rem"])
+            x, st = _rec_block(qcfg, cfg, pj, x, "decode", ssl)
+            rem_states.append(st)
+        new_state["rem"] = jax.tree.map(lambda *a: jnp.stack(a), *rem_states)
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    n_slots = batch["tokens"].shape[0]
+    specs = slot_state_specs(cfg, n_slots, 0)
+    return logits, common.merge_slot_state(specs, state, new_state, active)
+
+
 def prefill(cfg, params, batch, qcfg: QuantConfig, s_max: int | None = None):
     """Prefill: run the full forward while collecting recurrent states and
     local-attention KV; returns (last logits, cache ready for decode)."""

@@ -301,6 +301,33 @@ def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
     return logits, new_states
 
 
+def slot_state_specs(cfg, n_slots, s_max):
+    """Per-slot serve-state slabs (the dense cache minus the scalar pos —
+    the engine tracks per-request positions host-side).  Constant-size:
+    independent of both prompt length and generation budget."""
+    return {k: v for k, v in cache_specs(cfg, n_slots, s_max).items()
+            if k != "pos"}
+
+
+def decode_step_slots(cfg, params, state, batch, lens, active, qcfg):
+    """Batched RNN-mode decode over engine slots at independent positions.
+
+    The WKV recurrence is position-free, so this IS ``decode_step`` over the
+    slot batch — ``lens`` [ns] is accepted for protocol uniformity but
+    unused.  Inactive rows keep their state bit for bit via a masked merge
+    on every leaf (the row-independent einsums make active rows bitwise
+    equal to a batch-1 decode).
+    """
+    del lens
+    x = params["embed"][batch["tokens"]]
+    x, new_states = _scan_with_state(cfg, params, x, qcfg, state, "decode")
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    n_slots = batch["tokens"].shape[0]
+    specs = slot_state_specs(cfg, n_slots, 0)
+    return logits, common.merge_slot_state(specs, state, new_states, active)
+
+
 def prefill(cfg, params, batch, qcfg: QuantConfig, s_max: int | None = None):
     x = params["embed"][batch["tokens"]]
     b, s = batch["tokens"].shape

@@ -212,6 +212,69 @@ def decode_step(cfg, params, cache, batch, qcfg: QuantConfig):
     return logits, new_cache
 
 
+def slot_state_specs(cfg, n_slots, s_max):
+    """Per-slot serve state: dense decoder self-KV [n_slots, s_max, ...] plus
+    one immutable encoder-output slot per request (cross-KV is recomputed
+    from it every step, exactly like the dense decode path).  The self-KV
+    slab is finite — admission must bound prompt + generation by s_max."""
+    return {k: v for k, v in cache_specs(cfg, n_slots, s_max).items()
+            if k != "pos"}
+
+
+def _self_attention_slots(qcfg, cfg, p, h, lens, active, cache_sl):
+    """Per-row causal self-attention: each slot writes at its own position
+    ``lens[b]`` (inactive rows' writes are dropped) and attends its first
+    ``lens[b] + 1`` cached positions — row-for-row the scalar decode path."""
+    b, s, _ = h.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    qkv = layers.qdense(qcfg, "attn", h, p["wqkv"], p["bqkv"])
+    q, k, v = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
+    q = cst(attn.split_heads(q, nh, hd), ("batch", "seq", "heads", "none"))
+    k = cst(attn.split_heads(k, nkv, hd), ("batch", "seq", "kv", "none"))
+    v = cst(attn.split_heads(v, nkv, hd), ("batch", "seq", "kv", "none"))
+    new_cache = attn.cache_update_slots(cache_sl, k, v, lens, active)
+    out = attn.decode_attend(q, new_cache, lens + 1)
+    out = layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"])
+    return out, new_cache
+
+
+def decode_step_slots(cfg, params, state, batch, lens, active, qcfg):
+    """Batched decode over engine slots at independent positions ``lens``.
+
+    Sinusoidal position rows depend only on the row index (never the table
+    length), so the per-row gather ``pe[lens]`` matches the scalar path's
+    dynamic slice bit for bit.  Inactive rows need no state merge: self-KV
+    writes drop out of bounds and ``enc_out`` is never written after
+    prefill, so their state is untouched by construction.
+    """
+    x = params["embed"][batch["tokens"]]
+    s_alloc = state["k"].shape[2]
+    pe = layers.sinusoidal_pos(s_alloc, cfg.d_model)
+    x = x + pe[lens][:, None].astype(x.dtype)
+    enc_out = state["enc_out"]
+
+    def body(qc):
+        def fn(carry, inp):
+            p, csl = inp
+            h = run_norm(cfg, p["ln1"], carry)
+            a, new_c = _self_attention_slots(qc, cfg, p, h, lens, active, csl)
+            y = carry + a
+            h = run_norm(cfg, p["ln_x"], y)
+            enc_kv = _cross_kv(qc, cfg, p, enc_out)
+            y = y + _cross_attention(qc, cfg, p, h, enc_kv)
+            h = run_norm(cfg, p["ln2"], y)
+            y = y + layers.gelu_mlp(qc, h, p["wi"], p["wd"], p["bi"], p["bd"])
+            return y, new_c
+        return fn
+
+    xs = {k: state[k] for k in ("k", "v")}
+    x, new_kv = common.scan_layers(body, x, params["dec_layers"], xs, qcfg,
+                                   0, 0, "none")
+    x = run_norm(cfg, params["final_norm"], x)
+    logits = layers.qdense(qcfg, "lm_head", x, unembed(cfg, params))
+    return logits, dict(new_kv, enc_out=enc_out)
+
+
 def prefill(cfg, params, batch, qcfg: QuantConfig, s_max: int | None = None):
     enc_out = encode(cfg, params, batch["enc_frames"], qcfg)
     x = params["embed"][batch["tokens"]]

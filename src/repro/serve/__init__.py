@@ -2,15 +2,26 @@
 
 The subsystem between the model forwards and the CLI:
 
+  * ``state``     — the per-layer state protocol: ``PagedKVState`` (the
+                    block-granular KV pool, decoder-family archs) and
+                    ``SlabState`` (constant-size per-slot slabs: RWKV6 /
+                    RG-LRU recurrent state, windowed rings, Whisper dense
+                    self-KV + immutable encoder slots) behind one
+                    alloc / prefill-write / decode-step / snapshot /
+                    restore / free contract
   * ``paged_kv``  — block-granular KV cache pool (BF16 or FP8-with-scales)
                     with per-request block tables and a host-side allocator
-  * ``scheduler`` — request admission / slot assignment / retirement
+  * ``scheduler`` — request admission / slot assignment / retirement over
+                    protocol state (blocks for paged plans; a slot IS the
+                    reservation for slab plans)
   * ``sampling``  — greedy, temperature, top-k with per-request seeds
-  * ``engine``    — the ``submit / step / drain`` facade wiring jitted paged
-                    decode + prefill steps to the scheduler
+  * ``engine``    — the ``submit / step / drain`` facade wiring jitted
+                    decode + prefill steps to the scheduler, generic over
+                    the state backend
 
 ``repro.spec`` layers speculative decoding (draft/verify, lossless
-accept/resample, KV rollback) on top of this engine.
+accept/resample, positional KV rollback or state snapshot/restore) on top
+of this engine.
 
 Quickstart::
 
@@ -23,6 +34,8 @@ from .engine import Engine
 from .paged_kv import PagedKVPool
 from .sampling import SamplingParams, sample_tokens
 from .scheduler import Request, Scheduler
+from .state import PagedKVState, SlabState, UnsupportedStateError
 
-__all__ = ["Engine", "PagedKVPool", "Request", "SamplingParams",
-           "Scheduler", "sample_tokens"]
+__all__ = ["Engine", "PagedKVPool", "PagedKVState", "Request",
+           "SamplingParams", "Scheduler", "SlabState",
+           "UnsupportedStateError", "sample_tokens"]

@@ -1,25 +1,30 @@
 """The continuous-batching engine facade: ``submit`` / ``step`` / ``drain``.
 
 One ``step()`` = (admission + prefill under a token budget) + one jitted
-batched decode over the active slots.  All device computation happens in a
-fixed set of compiled functions with static shapes:
+batched decode over the active slots.  Per-request cache/state lives behind
+the per-layer state protocol (``repro.serve.state``): the config's state
+plan (``models.registry.serve_state_plan``) picks the backend —
 
-  * decode — ``decoder.decode_step_paged`` over [n_slots, 1] tokens against
-    the paged pool (compiled once),
-  * prefill — either "exact" mode (``decoder.prefill`` at the request's own
-    prompt length: bit-identical to the static ``serve_batch`` path,
-    compiled once per distinct prompt length) or "chunked" mode
-    (``decoder.prefill_chunk_paged`` at a fixed chunk size: compiled once,
-    interleaves long prompts across steps; numerically *approximate* vs
-    whole-prompt prefill because dynamic NVFP4 activation amaxes become
-    chunk-granular),
-  * sampling — ``sampling.sample_tokens`` (compiled once).
+  * paged KV  — decoder-family archs: ``decoder.decode_step_paged`` over
+    [n_slots, 1] tokens against the block-granular pool (compiled once),
+  * state slabs — recurrent (RWKV6 / RG-LRU) and encoder-conditioned
+    (Whisper) archs: the model's batched ``decode_step_slots`` over
+    constant-size per-slot state at independent positions (compiled once).
+
+Prefill is either "exact" mode (the model's ``prefill`` at the request's
+own prompt length: bit-identical to the static ``serve_batch`` path,
+compiled once per distinct prompt length; the cache lands in the backend
+via ``write_prefill``) or "chunked" mode (paged-KV plans only:
+``decoder.prefill_chunk_paged`` at a fixed chunk size, numerically
+*approximate* because dynamic NVFP4 activation amaxes become
+chunk-granular).  Sampling is ``sampling.sample_tokens`` (compiled once).
 
 Requests are numerically independent: the engine serves with
 ``act_scope="row"`` activation scales (see ``core.qconfig``), per-request
-RoPE positions / attention masks, and — for MoE archs — per-row ("local")
-expert dispatch, so a request's tokens match a single-request static
-``serve_batch`` run regardless of co-scheduled traffic.
+positions / masks (and, for slab backends, per-leaf active-row merges), and
+— for MoE archs — per-row ("local") expert dispatch, so a request's tokens
+match a single-request static ``serve_batch`` run regardless of
+co-scheduled traffic.
 """
 from __future__ import annotations
 
@@ -32,20 +37,23 @@ import numpy as np
 
 from repro.distributed import ctx as shd_ctx
 from repro.models import common, decoder
+from repro.models.registry import get_model
 
-from .paged_kv import PagedKVPool
+from . import state as state_mod
 from .sampling import SamplingParams, sample_tokens_seeded
 from .scheduler import RUNNING, Request, Scheduler
 
 
 class Engine:
-    """Continuous-batching serving engine over a paged KV pool.
+    """Continuous-batching serving engine over protocol state.
 
     ``qcfg`` is the (recipe) quantization policy the weights were prepared
     with — e.g. the second return of ``launch.serve.load_quantized``; the
     engine derives the serving config from it (runtime weight fake-quant
     off, per-row activation scales).  Defaults cover smoke scale; size
-    ``n_blocks`` / ``n_slots`` to the deployment.
+    ``n_blocks`` / ``n_slots`` to the deployment.  For slab-state archs the
+    block geometry only sets ``s_alloc = max_blocks_per_slot * block_size``,
+    the dense-state allocation bound.
 
     ``mesh`` (with optional ``rules``, default ``tp_only``) turns on
     tensor-parallel serving: params are placed per the sharding rules
@@ -63,27 +71,30 @@ class Engine:
                  prefill_mode: str = "exact", prefill_chunk: int = 8,
                  prefill_budget: int | None = None, eos_id: int | None = None,
                  mesh=None, rules=None):
-        if cfg.family != "decoder":
-            raise ValueError(f"engine supports the decoder family only "
-                             f"(paged KV); got {cfg.family!r}")
-        if cfg.mrope_sections:
-            raise ValueError("engine does not support M-RoPE archs")
+        # refuse unservable configs before touching params or quant policy
+        plan = state_mod.check_supported(cfg)
+        self.state_plan = plan
+        self.paged = plan == ("paged_kv",)
         if prefill_mode not in ("exact", "chunked"):
             raise ValueError(prefill_mode)
+        if prefill_mode == "chunked" and not self.paged:
+            raise ValueError(
+                "chunked prefill requires the paged-KV state plan; "
+                f"{cfg.name} plans {' + '.join(plan)}")
         if cfg.n_experts and cfg.moe_dispatch not in ("local", "token"):
             # per-row (or per-token) dispatch makes MoE routing independent
             # of co-batched requests — a hard requirement for continuous
             # batching
             cfg = dataclasses.replace(cfg, moe_dispatch="local")
         self.cfg = cfg
+        self.model = get_model(cfg)
         self.mesh = mesh
         self.rules = rules
         if mesh is not None and rules is None:
             from repro.distributed import sharding as shd
             self.rules = shd.make_rules(mesh, "tp_only")
         if mesh is not None:
-            from repro.models import get_model
-            params = self._shard(params, get_model(cfg).param_specs(cfg))
+            params = self._shard(params, self.model.param_specs(cfg))
         self.params = params
         if qcfg is None:
             from repro.launch import specs
@@ -100,31 +111,26 @@ class Engine:
                                                     prefill_chunk)
         self.eos_id = eos_id
 
-        self.pool = PagedKVPool(
-            self._shard(decoder.init_paged_pool(cfg, n_blocks, block_size),
-                        decoder.paged_pool_specs(cfg, n_blocks, block_size)),
-            block_size)
-        self.sched = Scheduler(self.pool, n_slots, max_blocks_per_slot)
+        self.state = state_mod.make_state(
+            self, cfg, n_slots=n_slots, block_size=block_size,
+            n_blocks=n_blocks, max_blocks_per_slot=max_blocks_per_slot,
+            s_alloc=self.s_alloc)
+        self.pool = getattr(self.state, "pool", None)  # paged back-compat
+        self.sched = Scheduler(self.state, n_slots, max_blocks_per_slot)
         self.scratch = None
         if prefill_mode == "chunked":
             sspecs = decoder.prefill_scratch_specs(cfg, self.s_alloc)
             self.scratch = self._shard(common.zeros_from_specs(sspecs),
                                        sspecs)
+            self._chunk = jax.jit(
+                lambda params, scratch, pool, bt, start, n_valid, toks:
+                self._traced(decoder.prefill_chunk_paged, self.cfg, params,
+                             scratch, pool, bt, start, n_valid,
+                             {"tokens": toks}, self.sq),
+                donate_argnums=(1, 2))
 
-        self._decode = jax.jit(
-            lambda params, pool, bt, lens, active, toks:
-            self._traced(decoder.decode_step_paged, self.cfg, params, pool,
-                         bt, lens, active, {"tokens": toks}, self.sq),
-            donate_argnums=(1,))
-        self._chunk = jax.jit(
-            lambda params, scratch, pool, bt, start, n_valid, toks:
-            self._traced(decoder.prefill_chunk_paged, self.cfg, params,
-                         scratch, pool, bt, start, n_valid, {"tokens": toks},
-                         self.sq),
-            donate_argnums=(1, 2))
         self._sample = jax.jit(sample_tokens_seeded)
         self._prefill_fns: dict[int, object] = {}
-        self._write_fns: dict[int, object] = {}
 
         self.step_count = 0
         self.decode_steps = 0
@@ -160,10 +166,16 @@ class Engine:
     # -- public API --------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int,
-               sampling: SamplingParams | None = None) -> int:
-        """Queue a request; returns its id.  Admission happens in step()."""
+               sampling: SamplingParams | None = None,
+               extras: dict | None = None) -> int:
+        """Queue a request; returns its id.  Admission happens in step().
+
+        ``extras`` carries non-token prefill inputs (unbatched; the engine
+        adds the batch dim) — e.g. ``{"enc_frames": [T, n_mels]}`` for
+        encoder-decoder archs.
+        """
         req = self.sched.submit(prompt, max_new_tokens, sampling,
-                                step=self.step_count)
+                                step=self.step_count, extras=extras)
         req.submit_t = time.time()
         return req.rid
 
@@ -204,7 +216,7 @@ class Engine:
              "e2e_tok_s": self.tokens_generated
              / max(self.decode_s + self.prefill_s, 1e-9)}
         d.update(self._latency_stats())
-        d.update(self.pool.stats())
+        d.update(self.state.stats())
         return d
 
     def _latency_stats(self) -> dict:
@@ -244,9 +256,9 @@ class Engine:
         self.prefill_s += time.time() - t0
 
     def _after_prefill(self, req: Request) -> None:
-        """Hook: a request's prompt is fully prefilled (cache written), its
+        """Hook: a request's prompt is fully prefilled (state written), its
         first token not yet sampled.  The speculative engine prefills the
-        draft model's mirrored pool here."""
+        draft model's mirrored state here."""
 
     def _in_flight_prefill(self) -> Request | None:
         """An admitted request whose prefill hasn't completed (chunked mode
@@ -256,21 +268,25 @@ class Engine:
                 return r
         return None
 
+    def prefill_batch(self, req: Request) -> dict:
+        """The model-facing prefill batch for one request (tokens + any
+        extras, batch dim added)."""
+        batch = {"tokens": jnp.asarray(req.prompt[None])}
+        for k, v in (req.extras or {}).items():
+            batch[k] = jnp.asarray(v)[None]
+        return batch
+
     def _prefill_exact(self, req: Request) -> jax.Array:
         p = req.prompt_len
         if p not in self._prefill_fns:
             self._prefill_fns[p] = jax.jit(
-                lambda params, toks: self._traced(
-                    decoder.prefill, self.cfg, params, {"tokens": toks},
-                    self.sq, None))
-            self._write_fns[p] = jax.jit(decoder.write_prompt_to_pool,
-                                         donate_argnums=(0,))
+                lambda params, batch: self._traced(
+                    self.model.prefill, self.cfg, params, batch, self.sq,
+                    None))
         logits, cache = self._prefill_fns[p](self.params,
-                                             jnp.asarray(req.prompt[None]))
+                                             self.prefill_batch(req))
         cache = {k: v for k, v in cache.items() if k != "pos"}
-        ids = np.asarray(req.block_ids[: self.pool.blocks_for(p)], np.int32)
-        self.pool.data = self._write_fns[p](self.pool.data, cache,
-                                            jnp.asarray(ids))
+        self.state.write_prefill(req, cache)
         req.n_prefilled = req.n_cached = req.n_written = p
         return logits[:, -1, :]
 
@@ -305,11 +321,10 @@ class Engine:
         if not reqs:
             return
         t0 = time.time()
-        ns, mb = self.n_slots, self.max_blocks_per_slot
+        ns = self.n_slots
         toks = np.zeros((ns, 1), np.int32)
         lens = np.zeros((ns,), np.int32)
         active = np.zeros((ns,), bool)
-        bt = np.zeros((ns, mb), np.int32)
         temps = np.zeros((ns,), np.float32)
         topks = np.zeros((ns,), np.int32)
         seeds = np.zeros((ns,), np.int32)
@@ -319,14 +334,11 @@ class Engine:
             toks[s, 0] = r.next_input_token()
             lens[s] = r.n_cached
             active[s] = True
-            bt[s, : len(r.block_ids)] = r.block_ids
             temps[s] = r.sampling.temperature
             topks[s] = r.sampling.top_k
             seeds[s] = r.sampling.seed
             idxs[s] = len(r.output)
-        logits, self.pool.data = self._decode(
-            self.params, self.pool.data, jnp.asarray(bt), jnp.asarray(lens),
-            jnp.asarray(active), jnp.asarray(toks))
+        logits = self.state.decode(reqs, toks, lens, active)
         sampled = np.asarray(self._sample(logits[:, 0, :], jnp.asarray(temps),
                                           jnp.asarray(topks),
                                           jnp.asarray(seeds),

@@ -2,28 +2,32 @@
 
 Requests move WAITING -> PREFILL -> RUNNING -> FINISHED.  The scheduler owns
 a fixed set of decode slots (the static batch rows of the jitted decode
-step) and the admission policy:
+step) and the admission policy, and it allocates/retires *protocol state*
+(``repro.serve.state``) rather than raw KV blocks:
 
   * FIFO, head-of-line: requests are admitted in arrival order; the queue
-    head waits until a slot AND its worst-case block reservation are both
+    head waits until a slot AND the state backend's reservation are both
     available (no small-request bypass, so admission order is predictable
     and starvation-free).
-  * Capacity-based: a request reserves ceil((P + max_new - 1) / block_size)
-    pool blocks up front — P prompt positions plus one cache slot for every
-    generated token except the last (whose KV is never attended).  Decode
-    therefore never exhausts the pool mid-flight and no preemption path is
-    needed.
+  * Capacity is the backend's business.  Paged KV reserves a worst-case
+    block count (ceil((P + max_new - 1) / block_size)) up front so decode
+    never exhausts the pool mid-flight.  Slab state (recurrent / window /
+    encoder slots) is constant-size per slot — a free slot IS the whole
+    reservation, so recurrent requests are never refused for phantom block
+    pressure no matter their generation budget; only a finite dense
+    self-KV component bounds prompt + generation by the slab allocation.
 
-Retiring a request (EOS, token budget) frees its slot and blocks the same
+Retiring a request (EOS, token budget) frees its slot and state the same
 step, so the next queued request backfills on the following ``step()``.
 
-Speculative decoding (``repro.spec``) accounts blocks by ACCEPTED length:
+Speculative decoding (``repro.spec``) accounts state by ACCEPTED length:
 ``n_cached`` only ever advances by accepted tokens, ``n_written`` tracks the
-proposal high-water mark, and ``rollback_to`` / ``PagedKVPool.truncate_to``
-release blocks a rejected proposal tail no longer justifies.  Because the
-engine caps per-slot draft length at (remaining budget - 1), proposals never
-write past the worst-case reservation — admission capacity math is unchanged
-and decode still never preempts.
+proposal high-water mark, and ``rollback_to`` releases whatever a rejected
+proposal tail no longer justifies (whole dead blocks for paged KV; nothing
+for slabs, where device-state rollback is the spec engine's
+snapshot/restore).  Because the engine caps per-slot draft length at the
+backend's ``draft_cap``, proposals never write past the reservation —
+admission capacity math is unchanged and decode still never preempts.
 """
 from __future__ import annotations
 
@@ -34,7 +38,6 @@ from typing import Optional
 
 import numpy as np
 
-from .paged_kv import PagedKVPool
 from .sampling import SamplingParams
 
 WAITING, PREFILL, RUNNING, FINISHED = "waiting", "prefill", "running", "finished"
@@ -48,17 +51,20 @@ class Request:
     prompt: np.ndarray                    # [P] int32
     max_new_tokens: int
     sampling: SamplingParams = SamplingParams()
+    extras: Optional[dict] = None         # non-token prefill inputs, e.g.
+    #                                       {"enc_frames": [T, n_mels]} for
+    #                                       encoder-decoder archs
 
     state: str = WAITING
     slot: Optional[int] = None
     block_ids: list = dataclasses.field(default_factory=list)
     n_prefilled: int = 0                  # prompt tokens processed so far
-    n_cached: int = 0                     # ACCEPTED KV positions in the pool
+    n_cached: int = 0                     # ACCEPTED state positions
     n_written: int = 0                    # write high-water mark (speculative
     #                                       proposals may exceed n_cached;
-    #                                       the gap is rolled-back KV)
-    draft_cached: int = 0                 # draft-model KV prefix in sync with
-    #                                       the accepted sequence (spec only)
+    #                                       the gap is rolled-back state)
+    draft_cached: int = 0                 # draft-model state prefix in sync
+    #                                       with the accepted sequence (spec)
     output: list = dataclasses.field(default_factory=list)
     finish_reason: str = ""
     submit_step: int = -1
@@ -92,9 +98,13 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, pool: PagedKVPool, n_slots: int,
-                 max_blocks_per_slot: int):
-        self.pool = pool
+    """Slot + state-protocol admission.  ``state`` is a backend from
+    ``repro.serve.state`` (PagedKVState / SlabState)."""
+
+    def __init__(self, state, n_slots: int,
+                 max_blocks_per_slot: int | None = None):
+        self.state = state
+        self.pool = getattr(state, "pool", None)   # paged back-compat view
         self.n_slots = n_slots
         self.max_blocks_per_slot = max_blocks_per_slot
         self.slots: list[Optional[Request]] = [None] * n_slots
@@ -105,7 +115,8 @@ class Scheduler:
     # -- submission --------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int,
-               sampling: SamplingParams | None = None, step: int = -1) -> Request:
+               sampling: SamplingParams | None = None, step: int = -1,
+               extras: dict | None = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -113,15 +124,10 @@ class Scheduler:
             raise ValueError("max_new_tokens must be >= 1")
         req = Request(rid=next(self._rid), prompt=prompt,
                       max_new_tokens=max_new_tokens,
-                      sampling=sampling or SamplingParams(), submit_step=step)
-        need = self.pool.blocks_for(req.max_cached)
-        if need > self.max_blocks_per_slot or need > self.pool.n_blocks:
-            raise ValueError(
-                f"request needs {need} blocks > "
-                f"max_blocks_per_slot={self.max_blocks_per_slot} or "
-                f"pool capacity={self.pool.n_blocks} "
-                f"(prompt {req.prompt_len} + gen {max_new_tokens}); "
-                "it could never be admitted")
+                      sampling=sampling or SamplingParams(),
+                      extras=extras, submit_step=step)
+        # reject-at-submit anything the backend could never admit
+        self.state.admission_check(req)
         self.waiting.append(req)
         return req
 
@@ -134,10 +140,11 @@ class Scheduler:
         return None
 
     def admit_next(self) -> Optional[Request]:
-        """Admit the queue head if a slot + its block reservation fit.
+        """Admit the queue head if a slot + its state reservation fit.
 
-        Returns the admitted request (state PREFILL, blocks allocated) or
-        None — either the queue is empty or capacity refuses admission.
+        Returns the admitted request (state PREFILL, backend state
+        reserved) or None — either the queue is empty or capacity refuses
+        admission.
         """
         if not self.waiting:
             return None
@@ -145,12 +152,11 @@ class Scheduler:
         if slot is None:
             return None
         req = self.waiting[0]
-        need = self.pool.blocks_for(req.max_cached)
-        if not self.pool.can_alloc(need):
+        if not self.state.can_reserve(req):
             return None
         self.waiting.popleft()
-        req.block_ids = self.pool.alloc(need)
         req.slot = slot
+        self.state.reserve(req)
         req.state = PREFILL
         self.slots[slot] = req
         return req
@@ -158,36 +164,26 @@ class Scheduler:
     # -- retirement --------------------------------------------------------
 
     def rollback_to(self, req: Request, n_tokens: int) -> int:
-        """Clamp a request's block reservation to ``n_tokens`` of KV.
+        """Clamp a request's state reservation to ``n_tokens``.
 
-        The speculative engine's block accounting is by ACCEPTED length:
-        proposed-but-rejected positions beyond ``n_tokens`` are dead, so
-        any whole blocks past ``blocks_for(n_tokens)`` return to the pool.
-        (While a request is still generating, its worst-case reservation
-        covers every position speculation can touch — the engine caps the
-        per-slot draft length at remaining-budget - 1 — so mid-flight
-        rollback frees nothing; the release happens when the remaining
-        budget drops, i.e. at EOS / early finish.)  Returns the number of
-        blocks freed.
+        Paged KV: whole blocks past ``blocks_for(n_tokens)`` return to the
+        pool (the speculative accounting is by ACCEPTED length; while a
+        request is still generating its worst-case reservation covers every
+        position speculation can touch, so mid-flight rollback frees
+        nothing — the release happens at EOS / early finish).  Slab state:
+        nothing positional to release; only the host high-water mark is
+        clamped.  Returns the number of blocks freed (0 for slabs).
         """
-        req.block_ids, freed = self.pool.truncate_to(req.block_ids, n_tokens)
-        req.n_written = min(req.n_written, n_tokens)
-        return len(freed)
+        return self.state.rollback_to(req, n_tokens)
 
     def finish(self, req: Request, reason: str, step: int = -1) -> None:
         req.state = FINISHED
         req.finish_reason = reason
         req.finish_step = step
+        self.state.release(req)
         if req.slot is not None:
             self.slots[req.slot] = None
             req.slot = None
-        if req.block_ids:
-            # two-stage release: first the speculative tail (blocks holding
-            # only rejected-draft KV past the accepted length), then the
-            # live prefix — both land on the free list this same step
-            self.rollback_to(req, req.n_cached)
-            self.pool.free(req.block_ids)
-            req.block_ids = []
         self.finished[req.rid] = req
 
     # -- views -------------------------------------------------------------

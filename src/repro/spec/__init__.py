@@ -6,16 +6,22 @@ acceptance rates, so a QAD-recovered model family is a near-ideal
 draft/target pair "for free".  This package layers a draft/verify loop over
 ``repro.serve``:
 
-  * ``proposer``  — draft proposers over a mirrored paged KV pool: cheap
+  * ``proposer``  — draft proposers over mirrored draft state (a paged KV
+                    pool twin, or per-slot state slabs with their own
+                    snapshot chain for slab-state archs): cheap
                     self-drafts (``self-qdq``: the target's own QDQ
                     numerics; ``self-truncate``: the first n layers of the
                     same packed model) and a two-model mode (a small
                     distilled student drafts for the packed target)
   * ``engine``    — ``SpecEngine``, an ``Engine`` whose decode step drafts
-                    k tokens per slot, scores all k+1 positions in ONE
-                    jitted paged forward (``decoder.verify_step_paged``),
-                    accepts/resamples losslessly, and rolls rejected KV
-                    back (accepted-length accounting + pool truncation)
+                    k tokens per slot, scores all k+1 positions (ONE jitted
+                    paged forward — ``decoder.verify_step_paged`` — for
+                    paged-KV plans; k+1 masked slot-decode steps with state
+                    snapshots for slab plans), accepts/resamples
+                    losslessly, and rolls rejected state back (positional
+                    accounting + pool truncation for paged KV; protocol
+                    ``snapshot``/``restore_select`` for cumulative
+                    recurrent / encoder-conditioned state)
 
 Exact-greedy speculative decode is token-for-token identical to the plain
 engine — the subsystem's parity oracle, asserted by tests and CI.
@@ -29,6 +35,7 @@ Quickstart::
     eng.stats()["acceptance_rate"], eng.stats()["accepted_per_step"]
 """
 from .engine import SpecEngine
-from .proposer import DraftProposer, self_draft_model
+from .proposer import DraftProposer, SlabDraftProposer, self_draft_model
 
-__all__ = ["SpecEngine", "DraftProposer", "self_draft_model"]
+__all__ = ["SpecEngine", "DraftProposer", "SlabDraftProposer",
+           "self_draft_model"]

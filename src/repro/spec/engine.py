@@ -24,6 +24,18 @@ draft/verify round per scheduling step:
 A slot whose remaining budget is 1 degenerates to a plain decode step
 (k_eff == 0) through the same compiled verify function, so the engine
 needs no second decode path.
+
+That positional rollback story only exists for paged KV.  Slab-state plans
+(recurrent RWKV6 / RG-LRU, encoder-conditioned Whisper) have *cumulative*
+per-layer state — consuming a rejected token pollutes it irreversibly — so
+their round switches to the protocol's ``snapshot`` / ``restore_select``:
+verify runs as k+1 sequential single-token ``decode_step_slots`` calls
+(each reusing THE plain engine's jitted decode, so every scored position
+is bitwise the plain engine's — greedy parity by construction), snapshotting
+the immutable state tree after each consumed token; after acceptance each
+slot's state is restored to the snapshot matching its emitted length, and
+the slab draft proposer restores its own snapshot chain to the confirmed
+prefix.  Lossless across ALL state kinds.
 """
 from __future__ import annotations
 
@@ -40,7 +52,7 @@ from repro.serve import sampling
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Request
 
-from .proposer import DraftProposer, self_draft_model
+from .proposer import DraftProposer, SlabDraftProposer, self_draft_model
 
 
 class SpecEngine(Engine):
@@ -85,15 +97,25 @@ class SpecEngine(Engine):
                              "(pass draft_model= for two-model)")
         if dcfg.vocab_size != cfg.vocab_size:
             raise ValueError("draft and target vocabularies differ")
-        self.proposer = DraftProposer(dcfg, dparams, dqcfg, pool=self.pool,
-                                      mesh=self.mesh, rules=self.rules)
-
-        self._verify = jax.jit(
-            lambda params, pool, bt, lens, active, nprop, toks:
-            self._traced(decoder.verify_step_paged, self.vcfg, params, pool,
-                         bt, lens, active, nprop, {"tokens": toks},
-                         self.vsq),
-            donate_argnums=(1,))
+        if self.paged:
+            self.proposer = DraftProposer(dcfg, dparams, dqcfg,
+                                          pool=self.pool, mesh=self.mesh,
+                                          rules=self.rules)
+            self._verify = jax.jit(
+                lambda params, pool, bt, lens, active, nprop, toks:
+                self._traced(decoder.verify_step_paged, self.vcfg, params,
+                             pool, bt, lens, active, nprop,
+                             {"tokens": toks}, self.vsq),
+                donate_argnums=(1,))
+        else:
+            if dcfg.family != self.cfg.family:
+                raise ValueError(
+                    "slab-state speculative serving needs a draft of the "
+                    f"target's family; got {dcfg.family!r} for "
+                    f"{self.cfg.family!r}")
+            self.proposer = SlabDraftProposer(dcfg, dparams, dqcfg,
+                                              engine=self,
+                                              s_alloc=self.s_alloc)
         self._accept = jax.jit(sampling.speculative_verify_tokens)
 
         self.verify_steps = 0
@@ -124,17 +146,19 @@ class SpecEngine(Engine):
     # -- the draft/verify/accept round -------------------------------------
 
     def _do_decode(self, finished: list[Request]) -> None:
-        reqs = self.sched.running()
-        if not reqs:
-            return
-        t0 = time.time()
-        ns, mb, k = self.n_slots, self.max_blocks_per_slot, self.spec_k
-        bs = self.pool.block_size
+        if self.paged:
+            self._do_decode_paged(finished)
+        else:
+            self._do_decode_stepped(finished)
+
+    def _round_state(self, reqs):
+        """Per-slot round arrays shared by both verify paths."""
+        ns, k = self.n_slots, self.spec_k
         last = np.zeros((ns,), np.int32)
         prev = np.zeros((ns,), np.int32)
         lens = np.zeros((ns,), np.int32)
         active = np.zeros((ns,), bool)
-        bt = np.zeros((ns, mb), np.int32)
+        bt = np.zeros((ns, self.max_blocks_per_slot), np.int32)
         k_eff = np.zeros((ns,), np.int32)
         draft_lens = np.zeros((ns,), np.int32)
         temps = np.zeros((ns,), np.float32)
@@ -150,7 +174,7 @@ class SpecEngine(Engine):
             bt[s, : len(r.block_ids)] = r.block_ids
             draft_lens[s] = r.draft_cached
             remaining = r.max_new_tokens - len(r.output)
-            cap = len(r.block_ids) * bs - r.n_cached - 1
+            cap = self.state.draft_cap(r)
             k_want = self._choose_k(r) if self.adaptive_k else k
             k_eff[s] = max(0, min(k_want, remaining - 1, cap))
             if self.adaptive_k:
@@ -160,30 +184,18 @@ class SpecEngine(Engine):
             topks[s] = r.sampling.top_k
             seeds[s] = r.sampling.seed
             idxs[s] = len(r.output)
-
-        st = types.SimpleNamespace(
+        return types.SimpleNamespace(
             bt=bt, lens=lens, active=active, k_eff=k_eff, last_tok=last,
             prev_tok=prev, draft_lens=draft_lens, temps=temps, topks=topks,
             seeds=seeds, tok_idx=idxs)
-        draft_toks, draft_probs = self.proposer.propose(st, k)
-        t_draft = time.time() - t0
 
-        tokens = np.concatenate([last[:, None], draft_toks], axis=1)
-        logits, self.pool.data = self._verify(
-            self.params, self.pool.data, jnp.asarray(bt), jnp.asarray(lens),
-            jnp.asarray(active), jnp.asarray(k_eff), jnp.asarray(tokens))
-        out_toks, n_emit, n_acc = map(np.asarray, self._accept(
-            logits, jnp.asarray(draft_toks), jnp.asarray(draft_probs),
-            jnp.asarray(k_eff), jnp.asarray(temps), jnp.asarray(topks),
-            jnp.asarray(seeds), jnp.asarray(idxs)))
-
-        dt = time.time() - t0
-        self._observe_costs(t_draft, dt - t_draft, int(k_eff.max(initial=0)))
-        self.decode_s += dt
-        self.decode_steps += 1
-        self.verify_steps += 1
-        self.verify_slot_rounds += len(reqs)
-
+    def _account_round(self, reqs, out_toks, n_emit, n_acc, k_eff, dt,
+                       finished):
+        """Advance requests by their ACCEPTED tokens; returns per-slot
+        (emitted-count, confirmed-draft-advance) arrays for the slab path's
+        snapshot restores."""
+        sel = np.zeros((self.n_slots,), np.int32)
+        adv = np.zeros((self.n_slots,), np.int32)
         for r in reqs:
             s = r.slot
             ne, j, ke = int(n_emit[s]), int(n_acc[s]), int(k_eff[s])
@@ -204,6 +216,8 @@ class SpecEngine(Engine):
             r.n_cached = base + len(toks_emit)        # accepted length only
             r.n_written = max(r.n_written, base + ke + 1)
             r.draft_cached = base + min(j + 1, ke)
+            sel[s] = len(toks_emit)
+            adv[s] = min(j + 1, ke)
             self.decode_tokens += len(toks_emit)
             # a request that got n tokens this step experienced dt/n per
             # token (the plain engine's dt-per-token at n == 1)
@@ -212,6 +226,88 @@ class SpecEngine(Engine):
                 self._emit(r, tok, finished)
             if r.done:
                 self._req_acc.pop(r.rid, None)   # bounded per-slot history
+        return sel, adv
+
+    def _do_decode_paged(self, finished: list[Request]) -> None:
+        reqs = self.sched.running()
+        if not reqs:
+            return
+        t0 = time.time()
+        st = self._round_state(reqs)
+        draft_toks, draft_probs = self.proposer.propose(st, self.spec_k)
+        t_draft = time.time() - t0
+
+        tokens = np.concatenate([st.last_tok[:, None], draft_toks], axis=1)
+        logits, self.pool.data = self._verify(
+            self.params, self.pool.data, jnp.asarray(st.bt),
+            jnp.asarray(st.lens), jnp.asarray(st.active),
+            jnp.asarray(st.k_eff), jnp.asarray(tokens))
+        out_toks, n_emit, n_acc = map(np.asarray, self._accept(
+            logits, jnp.asarray(draft_toks), jnp.asarray(draft_probs),
+            jnp.asarray(st.k_eff), jnp.asarray(st.temps),
+            jnp.asarray(st.topks), jnp.asarray(st.seeds),
+            jnp.asarray(st.tok_idx)))
+
+        dt = time.time() - t0
+        self._observe_costs(t_draft, dt - t_draft,
+                            int(st.k_eff.max(initial=0)))
+        self.decode_s += dt
+        self.decode_steps += 1
+        self.verify_steps += 1
+        self.verify_slot_rounds += len(reqs)
+        self._account_round(reqs, out_toks, n_emit, n_acc, st.k_eff, dt,
+                            finished)
+
+    def _do_decode_stepped(self, finished: list[Request]) -> None:
+        """Slab-state round: sequential stepped verify + snapshot/restore.
+
+        Each of the k+1 scored positions is one masked call of THE plain
+        engine's jitted ``decode_step_slots`` (row-scope numerics), so the
+        i-th scored logits are bitwise what the plain engine would produce
+        after the same accepted prefix + i round tokens — greedy outputs
+        match the plain engine token for token for every draft mode.
+        Snapshot S_i (a zero-copy reference; the slab step never donates)
+        captures the state after consuming i round tokens; after acceptance
+        each slot restores S[#emitted] and the proposer's mirrored chain
+        restores its confirmed prefix.
+        """
+        reqs = self.sched.running()
+        if not reqs:
+            return
+        t0 = time.time()
+        ns, k = self.n_slots, self.spec_k
+        st = self._round_state(reqs)
+        draft_toks, draft_probs = self.proposer.propose(st, k)
+        t_draft = time.time() - t0
+
+        tokens = np.concatenate([st.last_tok[:, None], draft_toks], axis=1)
+        logits = np.zeros((ns, k + 1, self.cfg.vocab_size), np.float32)
+        snaps = [self.state.snapshot()]
+        for i in range(k + 1):
+            act_i = st.active & (i <= st.k_eff)
+            lg = self.state.decode(reqs, tokens[:, i:i + 1], st.lens + i,
+                                   act_i)
+            logits[:, i] = np.asarray(lg[:, 0, :], np.float32)
+            snaps.append(self.state.snapshot())
+        out_toks, n_emit, n_acc = map(np.asarray, self._accept(
+            jnp.asarray(logits), jnp.asarray(draft_toks),
+            jnp.asarray(draft_probs), jnp.asarray(st.k_eff),
+            jnp.asarray(st.temps), jnp.asarray(st.topks),
+            jnp.asarray(st.seeds), jnp.asarray(st.tok_idx)))
+
+        dt = time.time() - t0
+        self._observe_costs(t_draft, dt - t_draft,
+                            int(st.k_eff.max(initial=0)))
+        self.decode_s += dt
+        self.decode_steps += 1
+        self.verify_steps += 1
+        self.verify_slot_rounds += len(reqs)
+        sel, adv = self._account_round(reqs, out_toks, n_emit, n_acc,
+                                       st.k_eff, dt, finished)
+        # lossless rollback: every slot's state becomes exactly the state
+        # after its emitted tokens — bitwise, never having drafted
+        self.state.restore_select(snaps, sel)
+        self.proposer.commit(adv)
 
     # -- draft-cost-aware adaptive k ---------------------------------------
 

@@ -1,8 +1,10 @@
-"""Draft proposers: autoregressive k-token proposals over a mirrored pool.
+"""Draft proposers: autoregressive k-token proposals over mirrored state.
 
-A proposer owns a draft model (config + params + quant policy) and a paged
-KV pool with the SAME block geometry as the target engine's pool, indexed
-by the SAME block ids — one allocator governs both caches, so admission,
+A proposer owns a draft model (config + params + quant policy) and a
+mirror of the target engine's request state: ``DraftProposer`` keeps a
+paged KV pool with the SAME block geometry, indexed by the SAME block ids;
+``SlabDraftProposer`` keeps per-slot state slabs addressed by the SAME
+slot indices — either way one allocator governs both caches, so admission,
 rollback, and retirement stay single-sourced in the scheduler.
 
 Draft-prefix bookkeeping lives in ``Request.draft_cached``: the number of
@@ -49,6 +51,10 @@ def self_draft_model(cfg, params, mode: str = "qdq", n_layers: int = 0):
         return cfg, params
     if mode != "truncate":
         raise ValueError(f"unknown self-draft mode {mode!r}")
+    if "layers" not in params:
+        raise ValueError(
+            "self-truncate needs a stacked 'layers' parameter tree; "
+            f"{cfg.family!r} params have none — use self-qdq or two-model")
     dl = n_layers or max(1, cfg.n_layers // 2)
     if not 1 <= dl <= cfg.n_layers:
         raise ValueError(f"draft depth {dl} outside 1..{cfg.n_layers}")
@@ -188,3 +194,140 @@ class DraftProposer:
             draft_probs[:, i] = np.asarray(q)
             cur = tok
         return draft_toks, draft_probs
+
+    def commit(self, adv) -> None:
+        """Post-accept hook: positional draft pools need no device rollback
+        (rejected positions are dead behind the prefix counter)."""
+
+
+class SlabDraftProposer:
+    """k-token autoregressive proposals against a mirrored *state slab*.
+
+    The slab twin of ``DraftProposer`` for recurrent / encoder-conditioned
+    drafts: the draft model keeps its own constant-size per-slot state
+    (same ``slot_state_specs`` protocol as the target's ``SlabState``),
+    addressed by the engine's slot indices.  Because recurrent state is
+    cumulative — a consumed-but-rejected token pollutes it irreversibly —
+    the proposal loop snapshots the (immutable) state tree after the
+    catch-up step and after every proposal step; the engine calls
+    ``commit`` with each slot's confirmed advance and the proposer restores
+    the matching per-slot trees, keeping ``Request.draft_cached`` exact.
+    """
+
+    def __init__(self, cfg, params, qcfg, *, engine, s_alloc):
+        from repro.models.registry import get_model
+        from repro.serve import state as state_mod
+        self._state_mod = state_mod
+        if cfg.n_experts and cfg.moe_dispatch not in ("local", "token"):
+            cfg = dataclasses.replace(cfg, moe_dispatch="local")
+        self.cfg = cfg
+        self.eng = engine
+        self.model = get_model(cfg)
+        sq = dataclasses.replace(qcfg, quantize_weights=False)
+        # the stepped verify reuses the plain engine's ROW-scope decode, so
+        # the draft mirrors it (unlike the paged proposer's token scope,
+        # which mirrors verify_step_paged) — a self-qdq draft then
+        # reproduces the verify numerics exactly, the acceptance ceiling
+        self.psq = dataclasses.replace(sq, act_scope="row")     # prefill
+        self.dsq = self.psq                                     # decode
+        if engine.mesh is not None:
+            params = engine._shard(params, self.model.param_specs(cfg))
+        self.params = params
+        self.specs = self.model.slot_state_specs(cfg, engine.n_slots,
+                                                 s_alloc)
+        from repro.models import common
+        self.data = engine._shard(common.zeros_from_specs(self.specs),
+                                  self.specs)
+
+        # NO donation: snapshots must stay valid across steps
+        self._step = jax.jit(
+            lambda data, lens, active, toks, temps, topks, seeds, tidx:
+            self._step_impl(data, lens, active, toks, temps, topks, seeds,
+                            tidx))
+        self._prefill_fns: dict[int, object] = {}
+        self._write_fns: dict[int, object] = {}
+        self._restore_fns: dict[int, object] = {}
+        self._snaps: list = []
+
+    def _step_impl(self, data, lens, active, toks, temps, topks, seeds,
+                   tidx):
+        logits, data = self.eng._traced(
+            self.model.decode_step_slots, self.cfg, self.params, data,
+            {"tokens": toks}, lens, active, self.dsq)
+        tok, q = draft_sample_tokens(logits[:, 0, :], temps, topks, seeds,
+                                     tidx)
+        return tok, q, data
+
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in jax.tree.leaves(self.data))
+
+    # -- per-request lifecycle --------------------------------------------
+
+    def prefill_request(self, req) -> None:
+        """Whole-prompt draft prefill into this request's state slot."""
+        p = req.prompt_len
+        if p not in self._prefill_fns:
+            self._prefill_fns[p] = jax.jit(
+                lambda params, batch: self.eng._traced(
+                    self.model.prefill, self.cfg, params, batch, self.psq,
+                    None))
+            self._write_fns[p] = jax.jit(
+                lambda data, cache, slot:
+                self._state_mod.slab_write(self.specs, data, cache, slot))
+        _, cache = self._prefill_fns[p](self.params,
+                                        self.eng.prefill_batch(req))
+        cache = {k: v for k, v in cache.items() if k != "pos"}
+        self.data = self._write_fns[p](self.data, cache,
+                                       jnp.asarray(req.slot, jnp.int32))
+        req.draft_cached = p
+
+    # -- the proposal round ------------------------------------------------
+
+    def propose(self, st, k: int):
+        """Same contract as ``DraftProposer.propose`` (``st.bt`` unused);
+        additionally arms the snapshot chain ``commit`` consumes."""
+        ns = st.lens.shape[0]
+        v = self.cfg.vocab_size
+        temps, topks, seeds = (jnp.asarray(st.temps), jnp.asarray(st.topks),
+                               jnp.asarray(st.seeds))
+        lag = st.lens - st.draft_lens
+        assert not (st.active & (lag > 1)).any(), \
+            f"draft prefix lags > 1 position: {lag}"
+        need = st.active & (lag == 1)
+        if need.any():
+            _, _, self.data = self._step(
+                self.data, jnp.asarray(st.draft_lens), jnp.asarray(need),
+                jnp.asarray(st.prev_tok[:, None]), temps, topks, seeds,
+                jnp.asarray(st.tok_idx))
+
+        # D_i = draft state having consumed i proposal tokens (on top of
+        # the caught-up accepted prefix); commit picks per slot
+        self._snaps = [self.data]
+        draft_toks = np.zeros((ns, k), np.int32)
+        draft_probs = np.zeros((ns, k, v), np.float32)
+        cur = jnp.asarray(st.last_tok)
+        for i in range(int(st.k_eff.max(initial=0))):
+            act_i = jnp.asarray(st.active & (i < st.k_eff))
+            tok, q, self.data = self._step(
+                self.data, jnp.asarray(st.lens + i), act_i, cur[:, None],
+                temps, topks, seeds, jnp.asarray(st.tok_idx + i))
+            draft_toks[:, i] = np.asarray(tok)
+            draft_probs[:, i] = np.asarray(q)
+            cur = tok
+            self._snaps.append(self.data)
+        return draft_toks, draft_probs
+
+    def commit(self, adv) -> None:
+        """Restore each slot's draft state to snapshot ``adv[slot]`` —
+        the confirmed prefix advance min(j+1, k_eff) the engine computed
+        from the accept results."""
+        snaps, self._snaps = self._snaps, []
+        if not snaps:
+            return
+        sel = np.minimum(np.asarray(adv, np.int32), len(snaps) - 1)
+        key = len(snaps)
+        if key not in self._restore_fns:
+            self._restore_fns[key] = jax.jit(
+                lambda sn, sel:
+                self._state_mod.slab_restore_select(self.specs, sn, sel))
+        self.data = self._restore_fns[key](list(snaps), jnp.asarray(sel))

@@ -240,9 +240,12 @@ def test_engine_latency_telemetry(loaded):
         assert req.ttft_s > 0
 
 
-def test_engine_rejects_non_decoder_families():
-    cfg = configs.get_smoke("rwkv6-3b")
-    with pytest.raises(ValueError, match="decoder family"):
+def test_engine_rejects_unsupported_state_plans():
+    """RWKV6 / RG-LRU / Whisper now serve through the state protocol; the
+    remaining refusal is a plan with an unimplemented kind (qwen2-vl's
+    vision_prefix), named in a one-line capability error."""
+    cfg = configs.get_smoke("qwen2-vl-2b")
+    with pytest.raises(ValueError, match="vision_prefix"):
         Engine(cfg, params={}, qcfg=None)
 
 

@@ -1,0 +1,247 @@
+"""Per-layer state protocol (repro.serve.state): registry plans and the
+capability probe, slab-state engine parity vs sequential ``serve_batch``
+(RWKV6 / RG-LRU recurrent slabs, Whisper dense-KV + encoder slots),
+snapshot/restore semantics (the speculative rollback property: snapshot ->
+draft k -> reject -> restore -> continue is bitwise identical to never
+having drafted, across paged / recurrent / encoder state kinds), and
+admission accounting (constant-size state never sees phantom block
+pressure; encoder-conditioned requests must carry their extras).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import serve, specs
+from repro.models import registry
+from repro.serve import Engine, UnsupportedStateError
+from repro.spec import SpecEngine
+
+SLAB_ARCHS = ("rwkv6-3b", "recurrentgemma-2b", "whisper-tiny")
+ENG_KW = dict(n_slots=2, block_size=8, max_blocks_per_slot=4, n_blocks=16)
+GEN = 4
+
+
+@pytest.fixture(scope="module")
+def loaded():
+    out = {}
+    for arch in SLAB_ARCHS + ("qwen1.5-0.5b",):
+        cfg = configs.get_smoke(arch)
+        out[arch] = (cfg, *serve.load_quantized(cfg, jax.random.PRNGKey(0),
+                                                "qdq"))
+    return out
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = jax.random.PRNGKey(seed)
+    return [np.asarray(jax.random.randint(jax.random.fold_in(rng, i),
+                                          (l,), 4, cfg.vocab_size))
+            for i, l in enumerate(lens)]
+
+
+def _extras(cfg, i):
+    """Per-request non-token prefill inputs, where the plan demands them."""
+    if "encoder_output" not in registry.serve_state_plan(cfg):
+        return None
+    return {"enc_frames": np.asarray(jax.random.normal(
+        jax.random.PRNGKey(1000 + i), (cfg.enc_seq, cfg.d_model),
+        jnp.float32))}
+
+
+# ---------------------------------------------------------------------------
+# registry: plans + capability probe
+# ---------------------------------------------------------------------------
+
+
+def test_state_plans_and_capability_probe():
+    plans = {a: registry.serve_state_plan(configs.get_smoke(a))
+             for a in SLAB_ARCHS + ("qwen1.5-0.5b", "qwen2-vl-2b")}
+    assert plans["qwen1.5-0.5b"] == ("paged_kv",)
+    assert plans["rwkv6-3b"] == ("recurrent",)
+    assert plans["recurrentgemma-2b"] == ("recurrent", "window_kv")
+    assert plans["whisper-tiny"] == ("dense_kv", "encoder_output")
+    assert plans["qwen2-vl-2b"] == ("paged_kv", "vision_prefix")
+    for a in SLAB_ARCHS + ("qwen1.5-0.5b",):
+        cap = registry.serve_capabilities(configs.get_smoke(a))
+        assert cap["supported"] and cap["missing"] == ()
+    cap = registry.serve_capabilities(configs.get_smoke("qwen2-vl-2b"))
+    assert not cap["supported"] and cap["missing"] == ("vision_prefix",)
+    # windowless RG-LRU hybrids fall back to a FINITE dense local-attn KV
+    # (admission must bound it) rather than an unbounded ring
+    nowin = dataclasses.replace(configs.get_smoke("recurrentgemma-2b"),
+                                window=0)
+    assert registry.serve_state_plan(nowin) == ("recurrent", "dense_kv")
+
+
+def test_unsupported_plan_is_one_line_capability_error():
+    cfg = configs.get_smoke("qwen2-vl-2b")
+    with pytest.raises(UnsupportedStateError, match="vision_prefix"):
+        Engine(cfg, params={}, qcfg=None)
+    # the error is catchable as ValueError (CLI turns it into SystemExit)
+    with pytest.raises(ValueError, match="cannot serve state kind"):
+        Engine(cfg, params={}, qcfg=None)
+
+
+# ---------------------------------------------------------------------------
+# engine parity: slab archs drain token-for-token equal to serve_batch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", SLAB_ARCHS)
+def test_slab_engine_parity_matches_serve_batch(loaded, arch):
+    cfg, params, qcfg = loaded[arch]
+    eng = Engine(cfg, params, qcfg, **ENG_KW)
+    assert eng.state.stats()["state_backend"] == "slab"
+    prompts = _prompts(cfg, [4, 11, 16])
+    extras = [_extras(cfg, i) for i in range(len(prompts))]
+
+    rids = [eng.submit(prompts[0], GEN, extras=extras[0]),
+            eng.submit(prompts[1], GEN, extras=extras[1])]
+    eng.step()                                       # staggered arrival
+    rids.append(eng.submit(prompts[2], GEN, extras=extras[2]))
+    outputs = eng.drain(max_steps=500)
+
+    assert sorted(outputs) == sorted(rids)
+    assert not eng.state.leaked()                    # every slot released
+    st = eng.state.stats()
+    assert st["peak_used_slots"] == ENG_KW["n_slots"]
+    assert st["state_bytes_per_slot"] > 0
+    for rid, prompt, ex in zip(rids, prompts, extras):
+        bex = ({k: jnp.asarray(v)[None] for k, v in ex.items()}
+               if ex else None)
+        ref, _ = serve.serve_batch(cfg, params, jnp.asarray(prompt[None]),
+                                   GEN, qcfg=qcfg, extras=bex)
+        np.testing.assert_array_equal(outputs[rid], np.asarray(ref[0]),
+                                      err_msg=f"{arch} request {rid}")
+
+
+# ---------------------------------------------------------------------------
+# the snapshot/restore property: draft -> reject -> restore leaves the
+# stream bitwise identical to never having drafted (all state kinds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "rwkv6-3b",
+                                  "whisper-tiny"])
+def test_snapshot_draft_reject_restore_bitwise(loaded, arch):
+    """A fresh random student of the same architecture drafts at
+    near-chance acceptance, so most rounds reject and roll back — via pool
+    truncation on the paged plan, protocol snapshot/restore on slab plans.
+    Greedy output must stay token-for-token the plain engine's."""
+    cfg, params, qcfg = loaded[arch]
+    prompts = _prompts(cfg, [5, 13], seed=7)
+    extras = [_extras(cfg, i) for i in range(len(prompts))]
+
+    plain = Engine(cfg, params, qcfg, **ENG_KW)
+    rids = [plain.submit(p, GEN + 1, extras=e)
+            for p, e in zip(prompts, extras)]
+    ref = plain.drain(max_steps=500)
+    assert not plain.state.leaked()
+
+    dcfg = dataclasses.replace(cfg, name="student")
+    dparams, dqcfg = serve.load_quantized(dcfg, jax.random.PRNGKey(99),
+                                          "qdq")
+    eng = SpecEngine(cfg, params, qcfg, draft_k=3,
+                     draft_model=(dcfg, dparams, dqcfg), **ENG_KW)
+    srids = [eng.submit(p, GEN + 1, extras=e)
+             for p, e in zip(prompts, extras)]
+    out = eng.drain(max_steps=500)
+    assert not eng.state.leaked()
+    for rid, srid in zip(rids, srids):
+        np.testing.assert_array_equal(out[srid], ref[rid],
+                                      err_msg=f"{arch} request {srid}")
+    st = eng.stats()
+    # the property is only exercised if rejections actually happened
+    assert st["rolled_back_tokens"] > 0
+    assert st["drafted_tokens"] == (st["accepted_tokens"]
+                                    + st["rolled_back_tokens"])
+
+
+def test_slab_snapshot_restore_unit(loaded):
+    """SlabState snapshots are zero-copy immutable trees: decode after
+    restore reproduces the pre-pollution logits bitwise, and
+    ``restore_select`` gathers per-slot states from a snapshot chain."""
+    cfg, params, qcfg = loaded["rwkv6-3b"]
+    eng = Engine(cfg, params, qcfg, **ENG_KW)
+    rid = eng.submit(_prompts(cfg, [8], seed=5)[0], 6)
+    eng.step()                                     # prefill + first decode
+    (req,) = eng.sched.in_flight()
+    st, ns = eng.state, eng.n_slots
+
+    toks = np.full((ns, 1), 7, np.int32)
+    lens = np.full((ns,), req.n_cached, np.int32)
+    active = np.zeros((ns,), bool)
+    active[req.slot] = True
+
+    snap = st.snapshot()
+    lg1 = np.asarray(st.decode(None, toks, lens, active))
+    mid = st.snapshot()                            # state after one token
+    st.decode(None, toks + 1, lens + 1, active)    # pollute further
+    st.restore(snap)
+    lg2 = np.asarray(st.decode(None, toks, lens, active))
+    np.testing.assert_array_equal(lg1, lg2)        # bitwise, not approx
+    # select snap (index 0) for every slot out of a 2-snapshot chain
+    st.restore_select([snap, mid], np.zeros((ns,), np.int32))
+    lg3 = np.asarray(st.decode(None, toks, lens, active))
+    np.testing.assert_array_equal(lg1, lg3)
+    del rid
+
+
+# ---------------------------------------------------------------------------
+# admission: constant-size state sees no phantom block pressure; extras
+# are checked at submit
+# ---------------------------------------------------------------------------
+
+
+def test_recurrent_admission_ignores_block_pressure(loaded):
+    """A generation budget that would need ~64 KV blocks must not be
+    refused on a recurrent plan — its state is O(1) per slot.  The same
+    request IS refused on the paged plan (never-admittable guard)."""
+    cfg, params, qcfg = loaded["rwkv6-3b"]
+    eng = Engine(cfg, params, qcfg, **{**ENG_KW, "n_blocks": 2})
+    rid = eng.submit(_prompts(cfg, [8], seed=9)[0], 500)
+    eng.step()
+    assert rid in {r.rid for r in eng.sched.in_flight()}
+    (req,) = eng.sched.in_flight()
+    assert eng.state.draft_cap(req) > 1_000_000    # no positional bound
+
+    dcfg, dparams, dqcfg = loaded["qwen1.5-0.5b"]
+    paged = Engine(dcfg, dparams, dqcfg, **{**ENG_KW, "n_blocks": 2})
+    with pytest.raises(ValueError, match="pool capacity"):
+        paged.submit(_prompts(dcfg, [8], seed=9)[0], 500)
+
+
+def test_encoder_requests_require_extras(loaded):
+    cfg, params, qcfg = loaded["whisper-tiny"]
+    eng = Engine(cfg, params, qcfg, **ENG_KW)
+    with pytest.raises(ValueError, match="enc_frames"):
+        eng.submit(_prompts(cfg, [6], seed=11)[0], 3)
+    # dense self-KV is a finite slab: admission bounds prompt + generation
+    with pytest.raises(ValueError, match="slab capacity"):
+        eng.submit(_prompts(cfg, [6], seed=11)[0], 1000,
+                   extras=_extras(cfg, 0))
+
+
+# ---------------------------------------------------------------------------
+# memory pricing: the state_protocol section covers every family
+# ---------------------------------------------------------------------------
+
+
+def test_serve_memory_report_prices_state_protocol():
+    for arch in SLAB_ARCHS + ("qwen1.5-0.5b", "qwen2-vl-2b"):
+        cfg = configs.get_smoke(arch)
+        sp = specs.serve_memory_report(cfg)["state_protocol"]
+        assert sp["plan"] == list(registry.serve_state_plan(cfg))
+        assert sp["supported"] == registry.serve_capabilities(
+            cfg)["supported"]
+        assert sp["state_bytes_per_slot"] > 0
+        assert sp["state_bytes_per_slot_bf16"] >= sp["state_bytes_per_slot"]
+    # recurrent slabs are O(1): far smaller than a paged slot's worst case
+    slab = specs.serve_memory_report(
+        configs.get_smoke("rwkv6-3b"))["state_protocol"]
+    paged = specs.serve_memory_report(
+        configs.get_smoke("qwen1.5-0.5b"))["state_protocol"]
+    assert slab["state_bytes_per_slot"] < paged["state_bytes_per_slot"]
