@@ -15,8 +15,11 @@ recurrent archs), and sweeps speculative decoding
 (``repro.spec``) over draft length k — acceptance rate, per-slot accepted
 tokens, and tok/s vs the plain-engine baseline for a dense and a
 MoE/FP8-KV arch plus a two-model draft and an adaptive-k row (chosen-k
-distribution) — recording everything to ``BENCH_serve.json`` (and the
-harness CSV via ``emit``):
+distribution) — and A/Bs the fused serving-kernel tier (``kernels``
+section: per-decode-step latency with ``--fused-kernels`` off vs on and
+the analytic bytes each step stops moving: dense gather intermediates,
+MoE dequant slabs) — recording everything to ``BENCH_serve.json`` (and
+the harness CSV via ``emit``):
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen1.5-0.5b]
 
@@ -202,6 +205,81 @@ def speculative_rows(dense_arch: str, moe_arch: str, gen: int,
     return out
 
 
+def _fusion_bytes_estimate(cfg, slots: int, s_alloc: int) -> dict:
+    """Per-decode-step HBM traffic the fused tier removes (analytic).
+
+    * attention: the gather+dequant two-step materializes a dense
+      [slots, s_alloc, Hkv, hd] BF16 k AND v view per attention layer
+      (write + re-read); the fused kernel streams pool pages straight into
+      VMEM scratch.
+    * MoE GEMMs: the dequant backend writes every expert's BF16 slab to
+      HBM each step (then reads it back); the grouped kernel reads the
+      packed 0.5625 B/param codes+scales only.
+    """
+    qcfg = specs.recipe_qconfig(cfg)
+    kv_bytes = 1 if qcfg.kv_cache_dtype == "fp8" else 2
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    # dense BF16 intermediate (2 for k+v, 2 B/elem, write + re-read)
+    gather = 2 * slots * s_alloc * hkv * hd * 2 * 2
+    out = {"kv_elem_bytes": kv_bytes,
+           "attn_layers": cfg.n_layers,
+           "attn_gather_bytes_per_layer": gather,
+           "attn_gather_bytes_per_step": gather * cfg.n_layers}
+    if cfg.n_experts:
+        # swiglu expert FFN: gate + up + down projections per expert
+        params = cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff
+        out.update({
+            "moe_layers": cfg.n_layers,
+            "moe_expert_params_per_layer": params,
+            "moe_dequant_slab_bytes_per_layer": params * 2 * 2,  # write+read
+            "moe_packed_read_bytes_per_layer": int(params * 0.5625),
+            "moe_dequant_slab_bytes_per_step": params * 2 * 2 * cfg.n_layers,
+        })
+    return out
+
+
+def kernel_rows(dense_arch: str = "qwen1.5-0.5b",
+                moe_arch: str = "arctic-480b", requests: int = 4,
+                gen: int = 6, slots: int = 2) -> dict:
+    """Fused serving-kernel tier A/B: the SAME packed engine workload with
+    ``--fused-kernels`` off vs on (one-pass paged attention + grouped MoE
+    GEMM), per-decode-step latency, and the analytic bytes-moved estimate
+    for what fusion removes from each step.  Dense + MoE/FP8-KV archs."""
+    out = {}
+    for arch in dict.fromkeys((dense_arch, moe_arch)):
+        cfg = configs.get_smoke(arch)
+        params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0),
+                                            "packed")
+        row = {"arch": arch, "weight_format": "packed", "modes": {}}
+        for mode in ("off", "on"):
+            args = serve.build_parser().parse_args(
+                ["--engine", "--arch", arch, "--requests", str(requests),
+                 "--gen", str(gen), "--slots", str(slots), "--no-parity",
+                 "--fused-kernels", mode])
+            res = serve.run_engine(cfg, params, qcfg, args)
+            st = res["stats"]
+            row["modes"][mode] = {
+                "completed": res["ok"],
+                "fused_kernels": st["fused_kernels"],
+                "packed_backend": st["packed_backend"],
+                "decode_tok_s": st["decode_tok_s"],
+                "decode_step_s": st["decode_s"] / max(st["decode_steps"], 1),
+                "decode_lat_p50_s": st["decode_lat_p50_s"],
+                "decode_lat_p95_s": st["decode_lat_p95_s"]}
+            emit(f"serve/kernels/{arch}/fused_{mode}",
+                 1e6 * row["modes"][mode]["decode_step_s"],
+                 f"tok_s={st['decode_tok_s']:.1f};"
+                 f"backend={st['packed_backend']}")
+        on, off = row["modes"]["on"], row["modes"]["off"]
+        row["decode_step_speedup"] = (off["decode_step_s"]
+                                      / max(on["decode_step_s"], 1e-9))
+        mb = max(1, -(-(args.max_prompt + gen - 1) // args.block_size))
+        row["bytes_moved"] = _fusion_bytes_estimate(
+            cfg, slots, mb * args.block_size)
+        out[arch] = row
+    return out
+
+
 def sharded_rows(archs, tps=(2, 8), n_blocks: int = 1024) -> dict:
     """Per-device weight/KV bytes under TP partitions of the full-scale
     configs (analytic — ``sharding.resolve_packed`` divisibility, no
@@ -266,6 +344,19 @@ def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
                   f"weights/dev={sh['weight_bytes_packed_per_device']/2**20:.1f}MiB "
                   f"kv-pool/dev={sh['kv_pool_bytes_per_device']/2**20:.1f}MiB "
                   f"shard-eff={sh['weight_shard_efficiency']:.3f}")
+
+    results["kernels"] = kernel_rows(arch, gen=gen)
+    for a, row in results["kernels"].items():
+        bm = row["bytes_moved"]
+        moe = (f" moe-dequant-avoided="
+               f"{bm['moe_dequant_slab_bytes_per_step']/2**20:.2f}MiB/step"
+               if "moe_dequant_slab_bytes_per_step" in bm else "")
+        print(f"[serve_bench] kernels {a}: "
+              f"step_off={row['modes']['off']['decode_step_s']*1e3:.1f}ms "
+              f"step_on={row['modes']['on']['decode_step_s']*1e3:.1f}ms "
+              f"speedup={row['decode_step_speedup']:.2f}x "
+              f"gather-avoided="
+              f"{bm['attn_gather_bytes_per_step']/2**20:.2f}MiB/step{moe}")
 
     results["speculative"] = speculative_rows(arch, "arctic-480b", gen)
     for row in (results["speculative"]["dense"]

@@ -57,9 +57,14 @@ class QuantConfig:
     # --- packed-GEMM backend ---
     #   "auto"    — Pallas nvfp4_matmul for 2-D packed weights, dequant-then-
     #               einsum for >2-D (MoE experts)
+    #   "grouped" — "auto" plus: 3-D packed MoE expert stacks run the grouped
+    #               Pallas kernel (one launch over the expert grid, dequant
+    #               in VMEM — no per-step expert-slab dequant to HBM).  The
+    #               serving engine's fused-kernel tier selects this; meshless
+    #               only (under a mesh the dequant-einsum path GSPMD-shards).
     #   "dequant" — always dequantize then einsum (GSPMD-shardable fallback;
     #               bitwise-identical to serving the QDQ'd BF16 weights)
-    packed_backend: Literal["auto", "dequant"] = "auto"
+    packed_backend: Literal["auto", "grouped", "dequant"] = "auto"
 
     # --- activation tensor-scale source ---
     #   "dynamic"    — amax from the tensor itself (default)

@@ -50,6 +50,27 @@ def _nibble_to_f32(n):
     return sign * mag
 
 
+def _dequant_tile(codes, scales, s_tensor):
+    """codes [tn, tk/2] + scales [tn, >=tk/16] -> BF16-rounded w [tn, tk] f32.
+
+    ``scales`` may be WIDER than tk/16 — the lane-aligned "lane128" layout
+    pads each K-tile's scale strip to 128 lanes so the scale operand tiles
+    cleanly on the TPU lane dim when lowering through Mosaic; the dequant
+    only consumes the leading tk/16 columns either way.
+    """
+    tn, tk2 = codes.shape
+    lo = _nibble_to_f32(codes & jnp.uint8(0xF))
+    hi = _nibble_to_f32(codes >> 4)
+    w = jnp.stack([lo, hi], axis=-1).reshape(tn, tk2 * 2)
+
+    # apply two-level scales, then round to BF16 — the MXU operand precision,
+    # and exactly the values the QDQ serving path stores
+    s = scales[:, : tk2 * 2 // BLOCK].astype(jnp.float32) * s_tensor
+    w = (w.reshape(tn, tk2 * 2 // BLOCK, BLOCK) * s[..., None]
+         ).reshape(tn, tk2 * 2)
+    return w.astype(jnp.bfloat16).astype(jnp.float32)
+
+
 def _matmul_kernel(s_tensor_ref, x_ref, codes_ref, scales_ref, o_ref, acc_ref,
                    *, n_k_steps: int):
     k_step = pl.program_id(2)
@@ -58,20 +79,7 @@ def _matmul_kernel(s_tensor_ref, x_ref, codes_ref, scales_ref, o_ref, acc_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # unpack nibbles: codes[n, k//2] -> w[n, k]
-    codes = codes_ref[...]
-    lo = _nibble_to_f32(codes & jnp.uint8(0xF))
-    hi = _nibble_to_f32(codes >> 4)
-    tn, tk2 = codes.shape
-    w = jnp.stack([lo, hi], axis=-1).reshape(tn, tk2 * 2)
-
-    # apply two-level scales, then round to BF16 — the MXU operand precision,
-    # and exactly the values the QDQ serving path stores
-    s = scales_ref[...].astype(jnp.float32) * s_tensor_ref[0, 0]   # [tn, tk/16]
-    w = (w.reshape(tn, tk2 * 2 // BLOCK, BLOCK) * s[..., None]
-         ).reshape(tn, tk2 * 2)
-    w = w.astype(jnp.bfloat16).astype(jnp.float32)
-
+    w = _dequant_tile(codes_ref[...], scales_ref[...], s_tensor_ref[0, 0])
     x = x_ref[...].astype(jnp.float32)
     acc_ref[...] += jax.lax.dot_general(
         x, w, (((1,), (1,)), ((), ())),
@@ -82,11 +90,47 @@ def _matmul_kernel(s_tensor_ref, x_ref, codes_ref, scales_ref, o_ref, acc_ref,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def swizzle_scales(scales: jax.Array, tile_k: int) -> jax.Array:
+    """Relayout block scales [..., K/16] to the lane-aligned Mosaic layout.
+
+    Compact [..., K/16] strips put only tile_k/16 values (32 for the default
+    tile_k=512) on the TPU lane dimension — a sub-lane-width operand Mosaic
+    would have to mask-pad on every tile fetch.  The "lane128" layout gives
+    each K-tile a full 128-lane strip: tile ki's scales live at lanes
+    [ki*128, ki*128 + tile_k/16), zero-padded to 128.  ``_dequant_tile``
+    reads only the leading tile_k/16 lanes of its strip, so the kernel body
+    is layout-agnostic and the swizzle is a pure host-side relayout (done
+    once at weight-load time on TPU; the interpret path keeps compact).
+    """
+    tkb = tile_k // BLOCK
+    assert tkb <= 128, f"tile_k {tile_k} puts {tkb} > 128 scales on a lane"
+    *lead, kb = scales.shape
+    nk = -(-kb // tkb)                        # K tiles (kb already padded)
+    pad = nk * tkb - kb
+    if pad:
+        scales = jnp.pad(scales, [(0, 0)] * len(lead) + [(0, pad)])
+    s = scales.reshape(*lead, nk, tkb)
+    s = jnp.pad(s, [(0, 0)] * (len(lead) + 1) + [(0, 128 - tkb)])
+    return s.reshape(*lead, nk * 128)
+
+
+def _resolve_scale_layout(scale_layout: str | None, interpret: bool) -> str:
+    """Default layout per target: Mosaic lowering wants lane-aligned scale
+    strips ("lane128"); interpret mode keeps the compact [N, K/16]."""
+    if scale_layout is None:
+        return "compact" if interpret else "lane128"
+    if scale_layout not in ("compact", "lane128"):
+        raise ValueError(f"unknown scale_layout {scale_layout!r}")
+    return scale_layout
+
+
 @functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k",
-                                             "out_dtype", "interpret"))
+                                             "out_dtype", "interpret",
+                                             "scale_layout"))
 def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, *,
                  tile_m: int = 128, tile_n: int = 256, tile_k: int = 512,
-                 out_dtype=jnp.bfloat16, interpret: bool = True) -> jax.Array:
+                 out_dtype=jnp.bfloat16, interpret: bool = True,
+                 scale_layout: str | None = None) -> jax.Array:
     """y = x @ W where W is stored packed-NVFP4 as W^T:[N,K].
 
     Leading dims of x are flattened into M; x's last dim is the logical
@@ -94,6 +138,12 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, *,
     tile multiples — tiles are shrunk to the (sublane, lane)-aligned
     envelope of the problem and inputs are zero-padded to tile multiples, so
     M=1 decode and odd K/N sizes work.
+
+    ``scale_layout``: "compact" feeds the scales as stored ([N, K/16]);
+    "lane128" relayouts them through ``swizzle_scales`` so each K-tile's
+    strip is 128-lane aligned (the Mosaic lowering layout).  ``None`` picks
+    by target: compact when interpreting, lane128 when lowering.  Both
+    layouts are bit-identical in output — the kernel reads the same values.
     """
     *lead, k = x.shape
     xm = x.reshape(-1, k)
@@ -120,6 +170,13 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, *,
         codes = jnp.pad(codes, ((0, pn), (0, pk // 2)))
         scales = jnp.pad(scales, ((0, pn), (0, pk // BLOCK)))
 
+    layout = _resolve_scale_layout(scale_layout, interpret)
+    if layout == "lane128":
+        scales = swizzle_scales(scales, tk)
+        sk = 128
+    else:
+        sk = tk // BLOCK
+
     mm, nn, kk = xm.shape[0], codes.shape[0], xm.shape[1]
     grid = (nn // tn, mm // tm, kk // tk)        # K innermost for accumulation
     # accepts a scalar or any size-1 tensor_scale (a scan-sliced [1, 1] slab)
@@ -132,7 +189,7 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, *,
             pl.BlockSpec((1, 1), lambda ni, mi, ki: (0, 0)),
             pl.BlockSpec((tm, tk), lambda ni, mi, ki: (mi, ki)),
             pl.BlockSpec((tn, tk // 2), lambda ni, mi, ki: (ni, ki)),
-            pl.BlockSpec((tn, tk // BLOCK), lambda ni, mi, ki: (ni, ki)),
+            pl.BlockSpec((tn, sk), lambda ni, mi, ki: (ni, ki)),
         ],
         out_specs=pl.BlockSpec((tm, tn), lambda ni, mi, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((mm, nn), out_dtype),
@@ -144,6 +201,113 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, *,
     if pm or pn:
         out = out[:m, :n]
     return out.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# grouped GEMM: one launch for a whole stack of per-group skinny matmuls
+# ---------------------------------------------------------------------------
+
+
+def _grouped_kernel(s_tensor_ref, x_ref, codes_ref, scales_ref, o_ref,
+                    acc_ref, *, n_k_steps: int):
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_tile(codes_ref[0], scales_ref[0], s_tensor_ref[0, 0, 0])
+    x = x_ref[0].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k",
+                                             "out_dtype", "interpret",
+                                             "scale_layout"))
+def nvfp4_matmul_grouped(x: jax.Array, packed: PackedNVFP4, *,
+                         tile_m: int = 128, tile_n: int = 256,
+                         tile_k: int = 512, out_dtype=jnp.bfloat16,
+                         interpret: bool = True,
+                         scale_layout: str | None = None) -> jax.Array:
+    """y[g] = x[g] @ W_g for a packed weight stack W^T:[G, N, K] — ONE
+    ``pallas_call`` with a group grid dim instead of G dequant+einsum
+    launches.
+
+    This is the MoE decode GEMM: x [G, M, K] holds every active slot's
+    token rows routed to expert g (M is tiny at decode), and the unfused
+    path would dequantize ALL G expert slabs to BF16 in HBM every step —
+    exactly the 4x weight-traffic blowup packed serving exists to avoid.
+    Here each (g, n, k) weight tile is unpacked in VMEM and consumed in
+    place, so HBM traffic stays at the packed 0.5625 B/param.
+
+    ``packed.tensor_scale`` is one scale per group ([G, 1, 1], the
+    ``pack(..., n_lead=1)`` layout) or one shared scale for the whole stack
+    ([1, 1, 1], broadcast here).  Tiling/padding rules and ``scale_layout``
+    are ``nvfp4_matmul``'s.
+    """
+    g, m, k = x.shape
+    n = packed.codes.shape[1]
+    kp = packed.codes.shape[2] * 2
+    assert (packed.orig_k or kp) == k, "weight K mismatch"
+    xm = x
+    if kp > k:
+        xm = jnp.pad(xm, ((0, 0), (0, 0), (0, kp - k)))
+
+    def rup(v, mult):
+        return v + (-v) % mult
+
+    tm = min(tile_m, rup(m, 8))
+    tn = min(tile_n, rup(n, 128))
+    tk = min(tile_k, rup(kp, 128))
+    pm, pn, pk = (-m) % tm, (-n) % tn, (-kp) % tk
+    if pm or pk:
+        xm = jnp.pad(xm, ((0, 0), (0, pm), (0, pk)))
+    codes, scales = packed.codes, packed.scales
+    if pn or pk:
+        codes = jnp.pad(codes, ((0, 0), (0, pn), (0, pk // 2)))
+        scales = jnp.pad(scales, ((0, 0), (0, pn), (0, pk // BLOCK)))
+
+    layout = _resolve_scale_layout(scale_layout, interpret)
+    if layout == "lane128":
+        scales = swizzle_scales(scales, tk)
+        sk = 128
+    else:
+        sk = tk // BLOCK
+
+    mm, nn, kk = xm.shape[1], codes.shape[1], xm.shape[2]
+    grid = (g, nn // tn, mm // tm, kk // tk)
+    # per-group scales when the stack was packed with n_lead=1 ([G, 1, 1]);
+    # a shared whole-stack scale ([1, 1, 1], n_lead=0) broadcasts to every
+    # group
+    s_tensor = jnp.broadcast_to(
+        packed.tensor_scale.astype(jnp.float32).reshape(-1, 1, 1), (g, 1, 1))
+
+    out = pl.pallas_call(
+        functools.partial(_grouped_kernel, n_k_steps=kk // tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1), lambda gi, ni, mi, ki: (gi, 0, 0)),
+            pl.BlockSpec((1, tm, tk), lambda gi, ni, mi, ki: (gi, mi, ki)),
+            pl.BlockSpec((1, tn, tk // 2),
+                         lambda gi, ni, mi, ki: (gi, ni, ki)),
+            pl.BlockSpec((1, tn, sk), lambda gi, ni, mi, ki: (gi, ni, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, tm, tn),
+                               lambda gi, ni, mi, ki: (gi, mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((g, mm, nn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(s_tensor, xm, codes, scales)
+
+    if pm or pn:
+        out = out[:, :m, :n]
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -2,13 +2,19 @@
 
 On this CPU container, kernels run in interpret mode (the kernel body is
 executed in Python for correctness validation); on TPU, ``interpret=False``
-lowers through Mosaic.  ``interpret_default()`` auto-detects — lazily, so
-importing this module never initializes the jax backend (the multi-pod
-dry-run must set its forced device count before first backend use).
+lowers through Mosaic with the lane-aligned scale layout
+(``nvfp4_matmul.swizzle_scales``).  ``interpret_default()`` auto-detects —
+lazily, so importing this module never initializes the jax backend (the
+multi-pod dry-run must set its forced device count before first backend
+use) — and honors ``REPRO_PALLAS_INTERPRET=0/1`` as an explicit override
+(benches/CI A/B the lowering path without code edits).  The probe result
+is cached; tests that flip the env var call
+``interpret_default.cache_clear()``.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -18,12 +24,20 @@ from repro.core.nvfp4 import PackedNVFP4, pack, unpack_layout
 from . import ref
 from .kl_loss import kl_loss as _kl_loss
 from .nvfp4_matmul import nvfp4_matmul as _nvfp4_matmul
+from .nvfp4_matmul import nvfp4_matmul_grouped as _nvfp4_matmul_grouped
 from .nvfp4_matmul import nvfp4_matmul_tp as _nvfp4_matmul_tp
 from .nvfp4_qdq import nvfp4_qdq as _nvfp4_qdq
+from .paged_attention import paged_attention as _paged_attention
 
 
 @functools.cache
 def interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip()
+    if env in ("0", "1"):
+        return env == "1"          # explicit override wins over auto-detect
+    if env:
+        raise ValueError(
+            f"REPRO_PALLAS_INTERPRET={env!r}: expected '0' or '1'")
     return jax.default_backend() != "tpu"
 
 
@@ -44,12 +58,34 @@ def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, **kw) -> jax.Array:
     return _nvfp4_matmul(x, packed, **kw)
 
 
+def nvfp4_matmul_grouped(x: jax.Array, packed: PackedNVFP4,
+                         **kw) -> jax.Array:
+    """y[g] = x[g] @ W_g for a packed stack [G, N, K] in one grouped launch
+    (the fused MoE decode GEMM — no per-expert dequant to HBM)."""
+    kw.setdefault("interpret", interpret_default())
+    return _nvfp4_matmul_grouped(x, packed, **kw)
+
+
 def nvfp4_matmul_tp(x: jax.Array, packed: PackedNVFP4, mesh,
                     parallelism: str, **kw) -> jax.Array:
     """Tensor-parallel ``x @ W``: shard_map'd kernel over per-shard packed
     tiles — "column" shards N (no collective), "row" shards K (psum)."""
     kw.setdefault("interpret", interpret_default())
     return _nvfp4_matmul_tp(x, packed, mesh, parallelism, **kw)
+
+
+def paged_attention(q: jax.Array, pool_sl: dict, block_tables: jax.Array,
+                    pos: jax.Array, *, window: int = 0, **kw) -> jax.Array:
+    """Fused page-gather + FP8-dequant + attend over a paged-pool layer.
+
+    Drop-in for the ``paged_gather_layer`` -> ``paged_attend`` two-step
+    (``models.attention``), which remains its parity oracle — bitwise for
+    BF16 pools, per-element FP8 dequant identical for FP8 pools.
+    """
+    kw.setdefault("interpret", interpret_default())
+    return _paged_attention(q, pool_sl["k"], pool_sl["v"], block_tables,
+                            pos, pool_sl.get("k_scale"),
+                            pool_sl.get("v_scale"), window=window, **kw)
 
 
 def dequant_weight(packed: PackedNVFP4, contract_axis: int,
@@ -72,5 +108,6 @@ def kl_loss(t_logits: jax.Array, s_logits: jax.Array, mask: jax.Array,
     return _kl_loss(t_logits, s_logits, mask, tile_t, tile_v, interpret)
 
 
-__all__ = ["nvfp4_qdq", "nvfp4_matmul", "nvfp4_matmul_tp", "pack_weight",
+__all__ = ["nvfp4_qdq", "nvfp4_matmul", "nvfp4_matmul_grouped",
+           "nvfp4_matmul_tp", "paged_attention", "pack_weight",
            "dequant_weight", "kl_loss", "ref", "interpret_default"]

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: fused paged attention for the serving decode path.
+
+The unfused hot path (``models.attention``) is a two-step:
+
+    paged_gather_layer   — gather pool pages [n_blocks, bs, Hkv, hd] into a
+                           dense per-request view [B, MB*bs, Hkv, hd],
+                           dequantizing FP8 pages to BF16 on the way
+    paged_attend         — repeat_kv + score/softmax/weighted-sum einsums
+
+which materializes the gathered KV in HBM (reads every page, writes a dense
+copy, reads it again) and runs the FP8 dequant as a separate elementwise
+pass.  This kernel does page-table gather + FP8-KV dequant + attend in ONE
+``pallas_call`` over the block table: the per-request block table rides in
+as a scalar-prefetch operand, so each grid step's ``BlockSpec`` index map
+computes the page to DMA next — pages stream HBM→VMEM exactly once and the
+dense intermediate never exists.
+
+Both serving shapes share the kernel:
+
+  * ``q_len == 1``   — the engine's one-token decode step,
+  * ``q_len == k+1`` — the speculative verify step; per-query positions
+    ``pos[b, i] = lens[b] + i + 1`` ARE the causal intra-chunk mask, exactly
+    as in ``paged_attend``.
+
+Parity contract (why softmax is exact, not flash-rescaled): the unfused
+path is this kernel's oracle, and the engine's greedy tokens must not move
+when fusion is switched on.  A running-rescale online softmax reassociates
+the exp/sum arithmetic, which perturbs BF16 probabilities by 1 ulp often
+enough to flip greedy argmaxes over a long decode.  Instead the kernel
+streams pages in one pass, buffering the f32 score strip [R, MB*bs] and the
+dequantized V pages in VMEM scratch, and runs the softmax ONCE over the
+fully-masked strip on the last grid step — the associativity-sensitive math
+happens exactly once, in the oracle's order, so BF16-KV greedy decode is
+bitwise-stable under fusion.  VMEM cost is s_alloc*(4*R + 2*hd) bytes per
+(batch, kv-head) program — ~9 MB at 32k context, hd 128, R 8 — the right
+trade for decode, where R = n_rep * q_len is tiny.  (A rescaling online
+softmax only wins when the score strip itself is too big, i.e. large R —
+the prefill regime, which ``blockwise_attention`` already covers.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attend_kernel(bt_ref, q_ref, pos_ref, k_ref, v_ref, ks_ref, vs_ref,
+                   o_ref, s_scr, v_scr, *, mb: int, bs: int, n_rep: int,
+                   s_q: int, window: int, fp8: bool):
+    """grid (B, Hkv, MB); page j arrives via the scalar-prefetched table."""
+    j = pl.program_id(2)
+    r = n_rep * s_q
+
+    k = k_ref[0, :, 0, :]                                # [bs, hd]
+    v = v_ref[0, :, 0, :]
+    if fp8:
+        k = (k.astype(jnp.float32) * ks_ref[0, :, 0][:, None])
+        v = (v.astype(jnp.float32) * vs_ref[0, :, 0][:, None])
+    k = k.astype(q_ref.dtype)
+    v = v.astype(q_ref.dtype)
+
+    q = q_ref[0, 0]                                      # [R, hd]
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s_scr[:, pl.ds(j * bs, bs)] = s
+    v_scr[pl.ds(j * bs, bs), :] = v
+
+    @pl.when(j == mb - 1)
+    def _attend():
+        # per-query valid-key counts -> the oracle's position mask; the
+        # q rows are laid out [n_rep, s_q] so row i's query index is i % s_q
+        qpos = jnp.broadcast_to(pos_ref[0][None, :], (n_rep, s_q)).reshape(r)
+        slot = jax.lax.broadcasted_iota(jnp.int32, (r, mb * bs), 1)
+        valid = slot < qpos[:, None]
+        if window:
+            valid &= slot >= qpos[:, None] - window
+        sm = jnp.where(valid, s_scr[...], NEG_INF)
+        p = jax.nn.softmax(sm, axis=-1)
+        out = jax.lax.dot_general(p.astype(q_ref.dtype), v_scr[...],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, pos: jax.Array,
+                    k_scale: jax.Array | None = None,
+                    v_scale: jax.Array | None = None, *,
+                    window: int = 0, interpret: bool = True) -> jax.Array:
+    """Fused gather+dequant+attend; drop-in for the gather/attend two-step.
+
+    q: [B, S, H, hd]; pages: [n_blocks, bs, Hkv, hd] (+ optional fp32
+    [n_blocks, bs, Hkv] scale planes for FP8 pools); block_tables: [B, MB];
+    pos: [B] or [B, S] per-query valid-key counts, ``paged_attend``
+    semantics.  Returns [B, S, H, hd] in q's dtype.
+    """
+    b, s_q, h, hd = q.shape
+    n_blocks, bs, hkv, _ = k_pages.shape
+    mb = block_tables.shape[1]
+    n_rep = h // hkv
+    r = n_rep * s_q
+    fp8 = k_scale is not None
+
+    # head h = hkv_idx * n_rep + rep (repeat_kv layout) -> group by kv head
+    q4 = q.reshape(b, s_q, hkv, n_rep, hd).transpose(0, 2, 3, 1, 4)
+    q4 = q4.reshape(b, hkv, r, hd)
+    pos = jnp.asarray(pos, jnp.int32)
+    pos2 = jnp.broadcast_to(pos[:, None] if pos.ndim == 1 else pos, (b, s_q))
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def k_map(bi, hi, ji, bt):
+        return (bt[bi, ji], 0, hi, 0)
+
+    def ks_map(bi, hi, ji, bt):
+        return (bt[bi, ji], 0, hi)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, r, hd), lambda bi, hi, ji, bt: (bi, hi, 0, 0)),
+        pl.BlockSpec((1, s_q), lambda bi, hi, ji, bt: (bi, 0)),
+        pl.BlockSpec((1, bs, 1, hd), k_map),
+        pl.BlockSpec((1, bs, 1, hd), k_map),
+    ]
+    args = [q4, pos2, k_pages, v_pages]
+    if fp8:
+        in_specs += [pl.BlockSpec((1, bs, 1), ks_map),
+                     pl.BlockSpec((1, bs, 1), ks_map)]
+        args += [k_scale, v_scale]
+    else:
+        # dummy scalars (kernel ignores them when fp8=False)
+        in_specs += [pl.BlockSpec((1, 1), lambda bi, hi, ji, bt: (0, 0))] * 2
+        args += [jnp.zeros((1, 1), jnp.float32)] * 2
+
+    kern = functools.partial(_attend_kernel, mb=mb, bs=bs, n_rep=n_rep,
+                             s_q=s_q, window=window, fp8=fp8)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hkv, mb),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, r, hd),
+                                   lambda bi, hi, ji, bt: (bi, hi, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((r, mb * bs), jnp.float32),
+                            pltpu.VMEM((mb * bs, hd), q.dtype)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, r, hd), q.dtype),
+        interpret=interpret,
+    )(bt, *args)
+
+    out = out.reshape(b, hkv, n_rep, s_q, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, s_q, h, hd)

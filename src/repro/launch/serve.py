@@ -30,6 +30,10 @@ and the state must drain back to empty.  Unservable configs (e.g. M-RoPE
   --slots / --block-size / --n-blocks   decode slots and pool geometry
   --prefill-mode exact|chunked   whole-prompt (bitwise-parity) vs fixed-size
                           chunked prefill; --prefill-chunk sets the size
+  --fused-kernels on|off|auto   fused serving-kernel tier: one-pass paged
+                          attention + grouped NVFP4 MoE decode GEMM
+                          ("auto" = paged-KV configs without --tp); greedy
+                          tokens stay identical to the gather+dequant path
   --speculative K         speculative decoding (repro.spec): draft K tokens
                           per slot, verify all K+1 in one paged forward;
                           greedy output stays token-identical to the plain
@@ -150,7 +154,8 @@ def build_engine(cfg, params, qcfg, args, mesh=None, rules=None):
     n_blocks = args.n_blocks or args.slots * mb
     kw = dict(n_slots=args.slots, block_size=bs, n_blocks=n_blocks,
               max_blocks_per_slot=mb, prefill_mode=args.prefill_mode,
-              prefill_chunk=args.prefill_chunk, mesh=mesh, rules=rules)
+              prefill_chunk=args.prefill_chunk, mesh=mesh, rules=rules,
+              fused_kernels=getattr(args, "fused_kernels", "auto"))
     spec_k = getattr(args, "speculative", 0)
     if not spec_k:
         return Engine(cfg, params, qcfg, **kw), n_blocks
@@ -286,12 +291,18 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
     parity = None
     if check:
         parity = True
+        # the reference must run the engine's effective packed-GEMM backend
+        # (fused mode upgrades "auto" -> "grouped"), so both sides of the
+        # parity check share one set of MoE GEMM numerics
+        ref_qcfg = (dataclasses.replace(
+            qcfg, packed_backend=eng.sq.packed_backend)
+            if qcfg is not None else None)
         for rid, prompt, ex in zip(rids, prompts, extras_list):
             # reference: single-request static batch on the engine's cfg
             # (MoE archs force per-row dispatch)
             bex = ({k: v[None] for k, v in ex.items()} if ex else None)
             ref, _ = serve_batch(eng.cfg, params, prompt[None], args.gen,
-                                 qcfg=qcfg, extras=bex)
+                                 qcfg=ref_qcfg, extras=bex)
             if not np.array_equal(np.asarray(ref[0]), outputs[rid]):
                 parity = False
                 print(f"[engine] FAIL: request {rid} diverges from "
@@ -308,7 +319,9 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
           f"requests={args.requests} "
           f"prompts={args.min_prompt}..{args.max_prompt} gen={args.gen} "
           f"slots={args.slots} {pool_desc} "
-          f"prefill={args.prefill_mode}"
+          f"prefill={args.prefill_mode} "
+          f"fused-kernels={'on' if st['fused_kernels'] else 'off'}"
+          f"/{st['packed_backend']}"
           + (f" speculative=k{spec}/{args.draft}" if spec else ""))
     print(f"[engine] decode={st['decode_tok_s']:.1f} tok/s "
           f"e2e={st['e2e_tok_s']:.1f} tok/s "
@@ -361,6 +374,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--prefill-mode", choices=("exact", "chunked"),
                     default="exact")
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--fused-kernels", choices=("on", "off", "auto"),
+                    default="auto",
+                    help="fused serving-kernel tier: one-pass paged "
+                    "attention (page gather + FP8 dequant + attend in one "
+                    "Pallas launch) and grouped NVFP4 MoE decode GEMM. "
+                    "'auto' enables it for paged-KV configs without --tp; "
+                    "greedy output stays bitwise identical either way")
     # --- speculative decoding (repro.spec, engine mode only) ---
     ap.add_argument("--speculative", type=int, default=0, metavar="K",
                     help="draft length k per verify step (0 = off); greedy "

@@ -362,3 +362,19 @@ def paged_attend(q, pool_sl, block_tables, pos, *, window: int = 0):
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.astype(q.dtype)
+
+
+def paged_attend_fused(q, pool_sl, block_tables, pos, *, window: int = 0):
+    """``paged_attend`` through the fused Pallas kernel — page-table gather,
+    FP8 dequant, and attend in ONE pass over the block table, no dense
+    [B, MB*bs, Hkv, hd] intermediate in HBM.
+
+    Same contract as ``paged_attend`` (its parity oracle: bitwise for BF16
+    pools — the kernel defers softmax until the fully-masked score strip is
+    resident, so no rescaling reassociation — and per-element-identical FP8
+    dequant).  Single-device only: a ``pallas_call`` cannot be partitioned
+    by GSPMD, so mesh-traced paths keep the gather+attend two-step
+    (``serve.engine`` resolves ``fused_kernels="auto"`` accordingly).
+    """
+    from repro.kernels import ops
+    return ops.paged_attention(q, pool_sl, block_tables, pos, window=window)

@@ -391,13 +391,17 @@ def write_prompt_to_pool(pool, cache, block_ids):
 
 
 def _attention_paged(qcfg, cfg, p, h, pos, psl, block_tables, positions,
-                     active):
+                     active, fused: bool = False):
     """Paged attention for S >= 1 new positions per slot.
 
     ``positions``: [B] (one-token decode) or [B, S] (multi-token verify)
     absolute write positions — RoPE ``pos`` must address the same positions;
     ``active``: [B] or [B, S] write mask.  Each query attends positions
     < its own position + 1 (causal within the new chunk).
+
+    ``fused`` routes the gather+attend through the one-pass Pallas kernel
+    (``attn.paged_attend_fused``); the two-step stays as its parity oracle
+    and as the mesh path (the engine only enables fusion meshless).
 
     Under a TP mesh the whole block is head-local: q shards on "heads", new
     k/v and the pool pages on "kv" (same shards — GQA groups never split),
@@ -416,8 +420,9 @@ def _attention_paged(qcfg, cfg, p, h, pos, psl, block_tables, positions,
     v = cst(attn.split_heads(v, nkv, hd), kax)
     new_psl = attn.paged_update_layer(psl, k, v, block_tables, positions,
                                       active)
-    out = cst(attn.paged_attend(q, new_psl, block_tables, positions + 1,
-                                window=cfg.window), hax)
+    attend = attn.paged_attend_fused if fused else attn.paged_attend
+    out = cst(attend(q, new_psl, block_tables, positions + 1,
+                     window=cfg.window), hax)
     out = cst(layers.qdense(qcfg, "attn", out.reshape(b, s, nh * hd), p["wo"],
                             parallelism="row"),
               ("batch", "seq", "none"))
@@ -425,13 +430,14 @@ def _attention_paged(qcfg, cfg, p, h, pos, psl, block_tables, positions,
 
 
 def decode_step_paged(cfg, params, pool, block_tables, lens, active, batch,
-                      qcfg: QuantConfig):
+                      qcfg: QuantConfig, fused: bool = False):
     """One-token decode for a slot batch against the paged KV pool.
 
     batch["tokens"]: [n_slots, 1]; block_tables: [n_slots, MB] pool block
     ids; lens: [n_slots] cached-token counts; active: [n_slots] bool.
     Inactive slots compute garbage logits (the engine ignores them) but
     their pool writes are dropped, so live blocks are never corrupted.
+    ``fused`` (static) selects the one-pass fused paged-attention kernel.
     Returns (logits [n_slots, 1, V], new_pool).
     """
     if cfg.mrope_sections:
@@ -444,7 +450,8 @@ def decode_step_paged(cfg, params, pool, block_tables, lens, active, batch,
             p, psl = inp
             h = run_norm(cfg, p["ln1"], carry)
             a, new_psl = _attention_paged(qc, cfg, p, h, pos, psl,
-                                          block_tables, lens, active)
+                                          block_tables, lens, active,
+                                          fused=fused)
             y = carry + a
             h = run_norm(cfg, p["ln2"], y)
             f, _ = _ffn(qc, cfg, p, h)
@@ -461,7 +468,7 @@ def decode_step_paged(cfg, params, pool, block_tables, lens, active, batch,
 
 
 def verify_step_paged(cfg, params, pool, block_tables, lens, active, n_prop,
-                      batch, qcfg: QuantConfig):
+                      batch, qcfg: QuantConfig, fused: bool = False):
     """Multi-token speculative verification: score k+1 positions at once.
 
     batch["tokens"]: [n_slots, K1] where row token 0 is the slot's last
@@ -501,7 +508,8 @@ def verify_step_paged(cfg, params, pool, block_tables, lens, active, n_prop,
             p, psl = inp
             h = run_norm(cfg, p["ln1"], carry)
             a, new_psl = _attention_paged(qc, cfg, p, h, positions, psl,
-                                          block_tables, positions, tok_active)
+                                          block_tables, positions, tok_active,
+                                          fused=fused)
             y = carry + a
             h = run_norm(cfg, p["ln2"], y)
             f, _ = _ffn(qc, cfg, p, h)

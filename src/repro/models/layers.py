@@ -30,6 +30,7 @@ from repro.kernels import ops
 # ---------------------------------------------------------------------------
 
 _DENSE_EQ = "...k,ko->...o"
+_MOE_EQ = "...eck,eko->...eco"
 
 
 def qeinsum(qcfg: QuantConfig, kind: str, eq: str, x: jax.Array, w,
@@ -62,8 +63,14 @@ def qeinsum(qcfg: QuantConfig, kind: str, eq: str, x: jax.Array, w,
     xq = qcfg.q_act(x, kind) if quantize_act else x
     wr = qcfg.resolve_weight(w, kind, contract_axis)
     if isinstance(wr, PackedNVFP4):
+        if (wr.ndim == 3 and contract_axis == 1 and eq == _MOE_EQ
+                and qcfg.packed_backend == "grouped" and not ctx.active()):
+            # MoE expert stack -> ONE grouped Pallas launch over the expert
+            # grid (dequant in VMEM).  Mesh-traced paths keep dequant-einsum
+            # so GSPMD can shard the expert dim freely.
+            return _moe_grouped(xq, wr)
         if (wr.ndim == 2 and contract_axis == 0 and eq == _DENSE_EQ
-                and qcfg.packed_backend == "auto"):
+                and qcfg.packed_backend in ("auto", "grouped")):
             tp_n = ctx.tp_size()
             if tp_n > 1:
                 mode = nvfp4.tp_shard_mode(wr, tp_n, parallelism)
@@ -80,6 +87,19 @@ def qeinsum(qcfg: QuantConfig, kind: str, eq: str, x: jax.Array, w,
         return _einsum(eq, xq, ops.dequant_weight(wr, contract_axis,
                                                   xq.dtype))
     return _einsum(eq, xq, wr)
+
+
+def _moe_grouped(xq: jax.Array, wr: PackedNVFP4) -> jax.Array:
+    """``_MOE_EQ`` through ``ops.nvfp4_matmul_grouped``: collapse every
+    leading batch dim into the per-expert M rows, one launch for all
+    experts.  x: [..., E, C, K] -> [E, (lead*C), K]; y back to
+    [..., E, C, N]."""
+    *lead, e, c, k = xq.shape
+    xg = jnp.moveaxis(xq.reshape(-1, e, c, k), 1, 0).reshape(e, -1, k)
+    y = ops.nvfp4_matmul_grouped(xg, wr, out_dtype=xq.dtype)
+    n = y.shape[-1]
+    y = jnp.moveaxis(y.reshape(e, -1, c, n), 0, 1)
+    return y.reshape(*lead, e, c, n)
 
 
 def _einsum(eq: str, x: jax.Array, w: jax.Array) -> jax.Array:
@@ -122,7 +142,7 @@ def qdense(qcfg: QuantConfig, kind: str, x: jax.Array, w,
         y = qeinsum(qcfg, kind, _DENSE_EQ, x, w, 0, quantize_act,
                     parallelism)
     elif ndim == 3 and contract_axis == 1:
-        y = qeinsum(qcfg, kind, "...eck,eko->...eco", x, w, 1, quantize_act,
+        y = qeinsum(qcfg, kind, _MOE_EQ, x, w, 1, quantize_act,
                     parallelism)
     else:
         raise ValueError(f"unsupported weight rank/contract_axis: "

@@ -70,7 +70,7 @@ class Engine:
                  max_blocks_per_slot: int = 8,
                  prefill_mode: str = "exact", prefill_chunk: int = 8,
                  prefill_budget: int | None = None, eos_id: int | None = None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None, fused_kernels: str = "auto"):
         # refuse unservable configs before touching params or quant policy
         plan = state_mod.check_supported(cfg)
         self.state_plan = plan
@@ -101,6 +101,29 @@ class Engine:
             qcfg = specs.recipe_qconfig(cfg)
         self.sq = dataclasses.replace(qcfg, quantize_weights=False,
                                       act_scope="row")
+
+        # --- fused serving-kernel tier -------------------------------------
+        # "on"/"off" force it; "auto" enables it when the fused kernels can
+        # serve this config: paged-KV state plan (the fused attention kernel
+        # streams pool pages) and no mesh (pallas_call does not partition
+        # under GSPMD — TP keeps the shard_map'd 2-D GEMM + gather attend).
+        if fused_kernels not in ("on", "off", "auto"):
+            raise ValueError(f"fused_kernels={fused_kernels!r}: "
+                             "expected 'on', 'off' or 'auto'")
+        if fused_kernels == "on" and not self.paged:
+            raise ValueError("fused_kernels='on' requires the paged-KV "
+                             f"state plan; {cfg.name} plans "
+                             f"{' + '.join(plan)}")
+        if fused_kernels == "on" and mesh is not None:
+            raise ValueError("fused_kernels='on' is single-device only; "
+                             "drop the mesh or use 'auto'")
+        self.fused = (fused_kernels == "on"
+                      or (fused_kernels == "auto" and self.paged
+                          and mesh is None))
+        if self.fused and self.sq.packed_backend == "auto":
+            # route 3-D packed MoE expert stacks through the grouped Pallas
+            # GEMM instead of dequant-to-HBM + einsum
+            self.sq = dataclasses.replace(self.sq, packed_backend="grouped")
 
         self.n_slots = n_slots
         self.max_blocks_per_slot = max_blocks_per_slot
@@ -145,7 +168,7 @@ class Engine:
 
     # -- TP plumbing -------------------------------------------------------
 
-    def _traced(self, fn, *args):
+    def _traced(self, fn, *args, **kw):
         """Run a step builder inside the TP (mesh, rules) context.
 
         The context must be live at TRACE time (first jitted call), not at
@@ -153,7 +176,7 @@ class Engine:
         both, and is a no-op without a mesh.
         """
         with shd_ctx.maybe_use(self.mesh, self.rules):
-            return fn(*args)
+            return fn(*args, **kw)
 
     def _shard(self, tree, specs):
         """device_put a spec-described tree per the TP rules (identity
@@ -208,6 +231,8 @@ class Engine:
 
     def stats(self) -> dict:
         d = {"steps": self.step_count, "decode_steps": self.decode_steps,
+             "fused_kernels": self.fused,
+             "packed_backend": self.sq.packed_backend,
              "requests_finished": len(self.sched.finished),
              "tokens_generated": self.tokens_generated,
              "prefill_tokens": self.prefill_tokens,

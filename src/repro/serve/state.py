@@ -166,7 +166,8 @@ class PagedKVState:
         self._decode_fn = jax.jit(
             lambda params, pool, bt, lens, active, toks:
             engine._traced(decoder.decode_step_paged, cfg, params, pool,
-                           bt, lens, active, {"tokens": toks}, engine.sq),
+                           bt, lens, active, {"tokens": toks}, engine.sq,
+                           fused=engine.fused),
             donate_argnums=(1,))
         self._write_fns: dict[int, object] = {}
 

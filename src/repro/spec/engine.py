@@ -100,12 +100,14 @@ class SpecEngine(Engine):
         if self.paged:
             self.proposer = DraftProposer(dcfg, dparams, dqcfg,
                                           pool=self.pool, mesh=self.mesh,
-                                          rules=self.rules)
+                                          rules=self.rules,
+                                          fused=self.fused)
             self._verify = jax.jit(
                 lambda params, pool, bt, lens, active, nprop, toks:
                 self._traced(decoder.verify_step_paged, self.vcfg, params,
                              pool, bt, lens, active, nprop,
-                             {"tokens": toks}, self.vsq),
+                             {"tokens": toks}, self.vsq,
+                             fused=self.fused),
                 donate_argnums=(1,))
         else:
             if dcfg.family != self.cfg.family:

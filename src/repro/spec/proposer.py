@@ -77,12 +77,17 @@ class DraftProposer:
     its own device pages.
     """
 
-    def __init__(self, cfg, params, qcfg, *, pool, mesh=None, rules=None):
+    def __init__(self, cfg, params, qcfg, *, pool, mesh=None, rules=None,
+                 fused: bool = False):
         if cfg.n_experts and cfg.moe_dispatch not in ("local", "token"):
             cfg = dataclasses.replace(cfg, moe_dispatch="local")
         self.cfg = cfg
         self.dcfg = (dataclasses.replace(cfg, moe_dispatch="token")
                      if cfg.n_experts else cfg)
+        # mirror the engine's kernel tier: a self-qdq draft must run the
+        # SAME attend + GEMM numerics as verify for the 1.0 acceptance
+        # ceiling to hold
+        self.fused = fused
         self.mesh, self.rules = mesh, rules
         if mesh is not None:
             # TP: the draft shards exactly like the target (self-draft
@@ -93,6 +98,8 @@ class DraftProposer:
                                       mesh, rules)
         self.params = params
         sq = dataclasses.replace(qcfg, quantize_weights=False)
+        if fused and sq.packed_backend == "auto":
+            sq = dataclasses.replace(sq, packed_backend="grouped")
         self.psq = dataclasses.replace(sq, act_scope="row")     # prefill
         self.dsq = dataclasses.replace(sq, act_scope="token")   # decode
         self.pool = pool                                        # geometry only
@@ -122,7 +129,7 @@ class DraftProposer:
         with self._traced_ctx():
             logits, data = decoder.decode_step_paged(
                 self.dcfg, self.params, data, bt, lens, active,
-                {"tokens": toks}, self.dsq)
+                {"tokens": toks}, self.dsq, fused=self.fused)
         tok, q = draft_sample_tokens(logits[:, 0, :], temps, topks, seeds,
                                      tidx)
         return tok, q, data
