@@ -39,6 +39,7 @@ import sys
 sys.path.insert(0, "src")
 
 import jax                                                  # noqa: E402
+import numpy as np                                          # noqa: E402
 
 from repro import configs                                   # noqa: E402
 from repro.configs import SHAPES                            # noqa: E402
@@ -280,6 +281,77 @@ def kernel_rows(dense_arch: str = "qwen1.5-0.5b",
     return out
 
 
+def observability_rows(arch: str, requests: int, gen: int,
+                       slots: int) -> dict:
+    """Telemetry overhead A/B/C: the SAME packed engine workload with
+    observability off / metrics / trace (``repro.obs``).  Per-step
+    telemetry is a handful of bound-method calls in host Python between
+    compiled steps — microseconds against a multi-ms decode step — so the
+    measurement has to beat two CPU-container artifacts that each dwarf
+    it: jit compile (each fresh engine's first drain; dominates mean
+    tok/s at smoke-scale gen) and slow machine drift (~10% step-time
+    wander over the minutes a sequential A/B/C takes — either sign,
+    either order).  So: build all three engines up front, absorb compile
+    in one untimed warmup drain per engine, then run the measured rounds
+    with the three engines stepped in LOCKSTEP (per-step interleave) so
+    drift lands on every mode within one step of itself, and
+    compare the per-token latency FLOOR (min over steps — scheduling
+    jitter only ever inflates a step, so the floor is where a systematic
+    per-step cost would still show).  The acceptance bound is metrics-on
+    overhead < 2% on the floor; decode tok/s and p50 are recorded
+    per-mode as steady-state (post-warmup) context."""
+    cfg = configs.get_smoke(arch)
+    params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0),
+                                        "packed")
+    gen = max(gen, 12)                  # enough decode steps for the floor
+    modes = ("off", "metrics", "trace")
+    engines, baselines = {}, {}
+    prompts = None
+    for mode in modes:
+        args = serve.build_parser().parse_args(
+            ["--engine", "--arch", arch, "--requests", str(requests),
+             "--gen", str(gen), "--slots", str(slots), "--no-parity",
+             "--obs", mode])
+        eng, _ = serve.build_engine(cfg, params, qcfg, args)
+        engines[mode] = eng
+        prompts = [np.asarray(p) for p in serve.mixed_prompts(
+            jax.random.PRNGKey(7), requests, args.min_prompt,
+            args.max_prompt, cfg.vocab_size)]
+        for p in prompts:                            # warmup: compile lands
+            eng.submit(p, gen)                       # on no mode's clock
+        eng.drain(max_steps=2000)
+        eng.token_lat_s.clear()
+        baselines[mode] = (eng.decode_s, eng.decode_tokens)
+    for _ in range(3):                               # measured rounds
+        for mode in modes:
+            for p in prompts:
+                engines[mode].submit(p, gen)
+        # per-STEP interleave: the three engines advance in lockstep, so
+        # machine drift lands on every mode within one ~step of itself
+        while any(engines[m].sched.has_work() for m in modes):
+            for mode in modes:
+                if engines[mode].sched.has_work():
+                    engines[mode].step()
+    row = {"arch": arch, "weight_format": "packed", "gen": gen, "modes": {}}
+    for mode in modes:
+        eng = engines[mode]
+        d0, t0 = baselines[mode]
+        lat_min = min(eng.token_lat_s)
+        row["modes"][mode] = {
+            "completed": len(eng.outputs()) == 4 * requests,
+            "decode_tok_s": ((eng.decode_tokens - t0)
+                             / max(eng.decode_s - d0, 1e-9)),
+            "decode_lat_p50_s": float(np.percentile(eng.token_lat_s, 50)),
+            "decode_lat_min_s": lat_min}
+        emit(f"serve/obs/{arch}/{mode}", lat_min * 1e6,
+             f"tok_lat_min={lat_min * 1e3:.2f}ms")
+    off = row["modes"]["off"]["decode_lat_min_s"]
+    for m in ("metrics", "trace"):
+        row[f"{m}_overhead_pct"] = 100.0 * (
+            row["modes"][m]["decode_lat_min_s"] / max(off, 1e-9) - 1.0)
+    return row
+
+
 def sharded_rows(archs, tps=(2, 8), n_blocks: int = 1024) -> dict:
     """Per-device weight/KV bytes under TP partitions of the full-scale
     configs (analytic — ``sharding.resolve_packed`` divisibility, no
@@ -357,6 +429,16 @@ def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
               f"speedup={row['decode_step_speedup']:.2f}x "
               f"gather-avoided="
               f"{bm['attn_gather_bytes_per_step']/2**20:.2f}MiB/step{moe}")
+
+    results["observability"] = observability_rows(arch, engine_requests,
+                                                  gen, engine_slots)
+    ob = results["observability"]
+    print(f"[serve_bench] observability {arch}: tok_lat_min "
+          f"off={ob['modes']['off']['decode_lat_min_s'] * 1e3:.2f}ms "
+          f"metrics={ob['modes']['metrics']['decode_lat_min_s'] * 1e3:.2f}ms "
+          f"trace={ob['modes']['trace']['decode_lat_min_s'] * 1e3:.2f}ms "
+          f"metrics-overhead={ob['metrics_overhead_pct']:+.1f}% "
+          f"trace-overhead={ob['trace_overhead_pct']:+.1f}%")
 
     results["speculative"] = speculative_rows(arch, "arctic-480b", gen)
     for row in (results["speculative"]["dense"]

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.nvfp4 import PackedNVFP4, pack, unpack_layout
+from repro.obs import dispatch as obs_dispatch
 
 from . import ref
 from .kl_loss import kl_loss as _kl_loss
@@ -41,10 +42,23 @@ def interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _note(name: str) -> None:
+    """Count one kernel-wrapper dispatch if an engine step is recording.
+
+    These wrappers execute Python only while jax traces a specialization,
+    so the count is per-compile, not per-step — see ``repro.obs.dispatch``.
+    """
+    rec = obs_dispatch.active()
+    if rec is not None:
+        rec.kernel(name)
+
+
 def nvfp4_qdq(x: jax.Array, tensor_amax=None, **kw) -> jax.Array:
     """Fused NVFP4 fake-quant (blocked along last dim)."""
     kw.setdefault("interpret", interpret_default())
-    return _nvfp4_qdq(x, tensor_amax, **kw)
+    _note("nvfp4_qdq")
+    with jax.named_scope("repro.nvfp4_qdq"):
+        return _nvfp4_qdq(x, tensor_amax, **kw)
 
 
 def pack_weight(w: jax.Array) -> PackedNVFP4:
@@ -55,7 +69,9 @@ def pack_weight(w: jax.Array) -> PackedNVFP4:
 def nvfp4_matmul(x: jax.Array, packed: PackedNVFP4, **kw) -> jax.Array:
     """y = x @ W from packed NVFP4 weights, dequantized on the fly in VMEM."""
     kw.setdefault("interpret", interpret_default())
-    return _nvfp4_matmul(x, packed, **kw)
+    _note("nvfp4_matmul")
+    with jax.named_scope("repro.nvfp4_matmul"):
+        return _nvfp4_matmul(x, packed, **kw)
 
 
 def nvfp4_matmul_grouped(x: jax.Array, packed: PackedNVFP4,
@@ -63,7 +79,9 @@ def nvfp4_matmul_grouped(x: jax.Array, packed: PackedNVFP4,
     """y[g] = x[g] @ W_g for a packed stack [G, N, K] in one grouped launch
     (the fused MoE decode GEMM — no per-expert dequant to HBM)."""
     kw.setdefault("interpret", interpret_default())
-    return _nvfp4_matmul_grouped(x, packed, **kw)
+    _note("nvfp4_matmul_grouped")
+    with jax.named_scope("repro.nvfp4_matmul_grouped"):
+        return _nvfp4_matmul_grouped(x, packed, **kw)
 
 
 def nvfp4_matmul_tp(x: jax.Array, packed: PackedNVFP4, mesh,
@@ -71,7 +89,9 @@ def nvfp4_matmul_tp(x: jax.Array, packed: PackedNVFP4, mesh,
     """Tensor-parallel ``x @ W``: shard_map'd kernel over per-shard packed
     tiles — "column" shards N (no collective), "row" shards K (psum)."""
     kw.setdefault("interpret", interpret_default())
-    return _nvfp4_matmul_tp(x, packed, mesh, parallelism, **kw)
+    _note("nvfp4_matmul_tp")
+    with jax.named_scope("repro.nvfp4_matmul_tp"):
+        return _nvfp4_matmul_tp(x, packed, mesh, parallelism, **kw)
 
 
 def paged_attention(q: jax.Array, pool_sl: dict, block_tables: jax.Array,
@@ -83,9 +103,11 @@ def paged_attention(q: jax.Array, pool_sl: dict, block_tables: jax.Array,
     BF16 pools, per-element FP8 dequant identical for FP8 pools.
     """
     kw.setdefault("interpret", interpret_default())
-    return _paged_attention(q, pool_sl["k"], pool_sl["v"], block_tables,
-                            pos, pool_sl.get("k_scale"),
-                            pool_sl.get("v_scale"), window=window, **kw)
+    _note("paged_attention")
+    with jax.named_scope("repro.paged_attention"):
+        return _paged_attention(q, pool_sl["k"], pool_sl["v"], block_tables,
+                                pos, pool_sl.get("k_scale"),
+                                pool_sl.get("v_scale"), window=window, **kw)
 
 
 def dequant_weight(packed: PackedNVFP4, contract_axis: int,
@@ -105,7 +127,9 @@ def kl_loss(t_logits: jax.Array, s_logits: jax.Array, mask: jax.Array,
     """Streaming masked-mean KL(p_t || p_s) over [T, V] logits."""
     if interpret is None:
         interpret = interpret_default()
-    return _kl_loss(t_logits, s_logits, mask, tile_t, tile_v, interpret)
+    _note("kl_loss")
+    with jax.named_scope("repro.kl_loss"):
+        return _kl_loss(t_logits, s_logits, mask, tile_t, tile_v, interpret)
 
 
 __all__ = ["nvfp4_qdq", "nvfp4_matmul", "nvfp4_matmul_grouped",

@@ -145,6 +145,24 @@ def mixed_prompts(rng, n: int, min_len: int, max_len: int, vocab: int):
                                vocab) for i, l in enumerate(lens)]
 
 
+def obs_from_args(args):
+    """Observability bundle from CLI args (None = fully disabled).
+
+    ``--obs metrics|trace`` turns telemetry on explicitly; an output path
+    implies the mode that produces it (``--trace-out`` needs the tracer,
+    ``--metrics-out`` at least the registry).
+    """
+    mode = getattr(args, "obs", "off") or "off"
+    if getattr(args, "trace_out", None):
+        mode = "trace"
+    elif getattr(args, "metrics_out", None) and mode == "off":
+        mode = "metrics"
+    if mode == "off":
+        return None
+    from repro.obs import Observability
+    return Observability(metrics=True, trace=(mode == "trace"))
+
+
 def build_engine(cfg, params, qcfg, args, mesh=None, rules=None):
     """Engine (or SpecEngine when --speculative k > 0) from CLI args."""
     from repro.serve import Engine
@@ -155,7 +173,8 @@ def build_engine(cfg, params, qcfg, args, mesh=None, rules=None):
     kw = dict(n_slots=args.slots, block_size=bs, n_blocks=n_blocks,
               max_blocks_per_slot=mb, prefill_mode=args.prefill_mode,
               prefill_chunk=args.prefill_chunk, mesh=mesh, rules=rules,
-              fused_kernels=getattr(args, "fused_kernels", "auto"))
+              fused_kernels=getattr(args, "fused_kernels", "auto"),
+              obs=obs_from_args(args))
     spec_k = getattr(args, "speculative", 0)
     if not spec_k:
         return Engine(cfg, params, qcfg, **kw), n_blocks
@@ -220,6 +239,11 @@ def tp_shard_report(eng) -> dict:
         "kv_pool_bytes_per_device": sst["pool_bytes_per_device"],
         "kv_pool_bytes_total": sst["pool_bytes"],
     }
+
+
+def _ms(v) -> str:
+    """Format seconds as ms; percentiles are None (= "n/a") with no data."""
+    return f"{v * 1e3:.1f}ms" if v is not None else "n/a"
 
 
 def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
@@ -327,23 +351,48 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
           f"e2e={st['e2e_tok_s']:.1f} tok/s "
           f"peak-pool-util={st['peak_utilization']:.2f} "
           f"steps={st['steps']} "
-          f"ttft_p50={st['ttft_p50_s']*1e3:.1f}ms "
-          f"ttft_p95={st['ttft_p95_s']*1e3:.1f}ms "
-          f"tok_lat_p50={st['decode_lat_p50_s']*1e3:.1f}ms "
-          f"tok_lat_p95={st['decode_lat_p95_s']*1e3:.1f}ms "
+          f"ttft_p50={_ms(st['ttft_p50_s'])} "
+          f"ttft_p95={_ms(st['ttft_p95_s'])} "
+          f"tok_lat_p50={_ms(st['decode_lat_p50_s'])} "
+          f"tok_lat_p95={_ms(st['decode_lat_p95_s'])} "
           f"parity={'AGREE' if parity else ('skipped' if parity is None else 'DISAGREE')} "
           f"state-drained={drained}")
     if spec:
         adaptive = (f" chosen-k={st['chosen_k_hist']}"
                     if st.get("adaptive_k") else "")
-        print(f"[engine] speculative: acceptance={st['acceptance_rate']:.3f} "
-              f"accepted/step={st['accepted_per_step']:.2f} "
+        acc = st["acceptance_rate"]
+        aps = st["accepted_per_step"]
+        acc_s = f"{acc:.3f}" if acc is not None else "n/a"
+        aps_s = f"{aps:.2f}" if aps is not None else "n/a"
+        print(f"[engine] speculative: acceptance={acc_s} "
+              f"accepted/step={aps_s} "
               f"drafted={st['drafted_tokens']} "
               f"rolled-back={st['rolled_back_tokens']} "
               f"verify-steps={st['verify_steps']}{adaptive}")
+
+    if eng.obs.enabled:
+        from repro.obs import export as obs_export
+        qw = eng.obs.metrics.get("serve_queue_wait_seconds")
+        gemms = eng.obs.metrics.get("qeinsum_dispatch_total")
+        backends = ""
+        if gemms is not None:
+            backends = " qeinsum=" + ",".join(
+                f"{e['labels']['backend']}:{int(e['value'])}"
+                for e in gemms.snapshot().get("labels", []))
+        print(f"[metrics] enabled "
+              f"queue_wait_p50={_ms(qw.percentile(50) if qw else None)}"
+              f"{backends} "
+              f"trace_events={len(eng.obs.trace.events)}")
+        if getattr(args, "metrics_out", None):
+            obs_export.write_metrics(eng, args.metrics_out)
+            print(f"[metrics] wrote {args.metrics_out} (+ .prom)")
+        if getattr(args, "trace_out", None):
+            obs_export.write_trace(eng, args.trace_out)
+            print(f"[metrics] wrote {args.trace_out}")
+
     return {"ok": ok, "outputs": outputs, "stats": st,
             "tokens_match_serve_batch": parity, "n_blocks": n_blocks,
-            "pool_drained": drained, "tp": tp_rep}
+            "pool_drained": drained, "tp": tp_rep, "obs": eng.obs.enabled}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -397,6 +446,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="draft-cost-aware per-slot draft length: adapt k "
                     "from the measured acceptance rate and draft/verify "
                     "wall clock (requires --speculative)")
+    # --- observability (repro.obs, engine mode) ---
+    ap.add_argument("--obs", choices=("off", "metrics", "trace"),
+                    default="off",
+                    help="serving telemetry: 'metrics' = counters/gauges/"
+                    "latency histograms + dispatch counts; 'trace' adds the "
+                    "request-lifecycle tracer (Chrome-trace export). "
+                    "Greedy tokens are bitwise identical in every mode")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the repro.obs.metrics/v1 JSON snapshot here "
+                    "(plus Prometheus text at the sibling .prom path); "
+                    "implies at least --obs metrics")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the Chrome-trace/Perfetto JSON here; "
+                    "implies --obs trace")
     # --- tensor parallelism (engine mode) ---
     ap.add_argument("--tp", type=int, default=1, metavar="N",
                     help="tensor-parallel degree: shard packed codes/scales "
@@ -412,6 +475,10 @@ def main(argv=None):
     if args.adaptive_k and not args.speculative:
         raise SystemExit("--adaptive-k requires --speculative K (it adapts "
                          "the draft length)")
+    if (args.obs != "off" or args.metrics_out or args.trace_out) \
+            and not args.engine:
+        raise SystemExit("--obs/--metrics-out/--trace-out require --engine "
+                         "(telemetry instruments the serving engine)")
 
     mesh = rules = None
     if args.tp > 1:

@@ -23,6 +23,7 @@ from repro.core.qconfig import QuantConfig
 from repro.distributed import ctx
 from repro.distributed.ctx import cst
 from repro.kernels import ops
+from repro.obs import dispatch as obs_dispatch
 
 
 # ---------------------------------------------------------------------------
@@ -62,12 +63,16 @@ def qeinsum(qcfg: QuantConfig, kind: str, eq: str, x: jax.Array, w,
     """
     xq = qcfg.q_act(x, kind) if quantize_act else x
     wr = qcfg.resolve_weight(w, kind, contract_axis)
+    rec = obs_dispatch.active()   # non-None only while tracing under an
+    #                               engine step with metrics on — compiled
+    #                               replays never re-enter this Python
     if isinstance(wr, PackedNVFP4):
         if (wr.ndim == 3 and contract_axis == 1 and eq == _MOE_EQ
                 and qcfg.packed_backend == "grouped" and not ctx.active()):
             # MoE expert stack -> ONE grouped Pallas launch over the expert
             # grid (dequant in VMEM).  Mesh-traced paths keep dequant-einsum
             # so GSPMD can shard the expert dim freely.
+            _note_gemm(rec, "pallas_grouped", wr)
             return _moe_grouped(xq, wr)
         if (wr.ndim == 2 and contract_axis == 0 and eq == _DENSE_EQ
                 and qcfg.packed_backend in ("auto", "grouped")):
@@ -76,17 +81,40 @@ def qeinsum(qcfg: QuantConfig, kind: str, eq: str, x: jax.Array, w,
                 mode = nvfp4.tp_shard_mode(wr, tp_n, parallelism)
                 if mode:
                     mesh, _ = ctx.current()
+                    _note_gemm(rec, f"pallas_tp_{mode}", wr)
                     return ops.nvfp4_matmul_tp(xq, wr, mesh, mode,
                                                out_dtype=xq.dtype)
                 # TP mesh active but this weight can't shard whole-block
                 # (or the site declared no parallelism): dequant-einsum is
                 # the GSPMD-safe path
+                _note_gemm(rec, "dequant", wr)
                 return _einsum(eq, xq, ops.dequant_weight(wr, contract_axis,
                                                           xq.dtype))
+            _note_gemm(rec, "pallas_2d", wr)
             return ops.nvfp4_matmul(xq, wr, out_dtype=xq.dtype)
+        _note_gemm(rec, "dequant", wr)
         return _einsum(eq, xq, ops.dequant_weight(wr, contract_axis,
                                                   xq.dtype))
+    _note_gemm(rec, "dense", wr)
     return _einsum(eq, xq, wr)
+
+
+def _note_gemm(rec, backend: str, w) -> None:
+    """Record one qeinsum dispatch with analytic weight bytes moved.
+
+    Sizes come from ``.size``/``itemsize`` (shape-only), never ``.nbytes``
+    — under jit ``w``'s leaves are tracers and only shape metadata exists.
+    PackedNVFP4 moves its uint8 code bytes + fp8 block scales + one f32
+    tensor scale; a dense weight moves its array bytes.
+    """
+    if rec is None:
+        return
+    if isinstance(w, PackedNVFP4):
+        nbytes = (int(w.codes.size) + int(w.scales.size)
+                  + int(w.tensor_scale.size) * 4)
+    else:
+        nbytes = int(w.size) * w.dtype.itemsize
+    rec.gemm(backend, nbytes)
 
 
 def _moe_grouped(xq: jax.Array, wr: PackedNVFP4) -> jax.Array:

@@ -1,0 +1,47 @@
+"""``repro.obs`` — zero-dependency serving telemetry.
+
+Three pieces, one facade:
+
+  * ``metrics``  — counter / gauge / bounded-reservoir-histogram registry
+    (``MetricsRegistry``); a disabled registry is a true no-op.
+  * ``trace``    — request-lifecycle tracer with Chrome-trace/Perfetto
+    export and ``jax.profiler.TraceAnnotation`` alignment hooks.
+  * ``dispatch`` — trace-time qeinsum / fused-kernel dispatch recording
+    (one count per compiled specialization, zero steady-state cost).
+
+``Observability(metrics=..., trace=...)`` bundles them for the engine;
+the module-level ``NOOP`` singleton is what an engine built without
+telemetry holds — every instrument handle it hands out is the shared
+do-nothing object, so the decode hot path pays only no-op method calls.
+
+Export / validation live in ``repro.obs.export`` (Prometheus text +
+structured JSON + Chrome trace) and ``repro.obs.validate`` (the CI
+schema + span-semantics gate) — imported on use, not here, to keep
+engine construction free of export machinery.  See docs/observability.md.
+"""
+from __future__ import annotations
+
+from .dispatch import DispatchRecorder
+from .metrics import NOOP_REGISTRY, MetricsRegistry
+from .trace import NOOP_TRACER, Tracer
+
+
+class Observability:
+    """Bundle of (metrics registry, tracer, dispatch recorder).
+
+    ``metrics=False, trace=False`` yields a fully disabled bundle —
+    prefer the shared ``NOOP`` singleton for that.  Tracing implies a
+    live registry is still optional; the two toggle independently.
+    """
+
+    def __init__(self, metrics: bool = True, trace: bool = False):
+        self.metrics = MetricsRegistry() if metrics else NOOP_REGISTRY
+        self.trace = Tracer() if trace else NOOP_TRACER
+        self.dispatch = DispatchRecorder(self.metrics) if metrics else None
+        self.enabled = bool(metrics or trace)
+
+
+NOOP = Observability(metrics=False, trace=False)
+
+__all__ = ["Observability", "NOOP", "MetricsRegistry", "Tracer",
+           "DispatchRecorder", "NOOP_REGISTRY", "NOOP_TRACER"]

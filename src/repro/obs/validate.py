@@ -1,0 +1,143 @@
+"""CLI validator for exported obs artifacts — the CI ``obs-smoke`` gate.
+
+    python -m repro.obs.validate [--trace trace.json]
+        [--metrics metrics.json] [--prom metrics.prom] [--expect-spec]
+
+Checks, exiting nonzero on any failure:
+
+  * **schema** — the Chrome trace and the metrics JSON validate against
+    the checked-in ``schemas/*.schema.json`` (the drift tripwire: a key
+    rename or type change in ``Engine.stats()`` / the tracer fails here,
+    not in a dashboard three PRs later);
+  * **span semantics** — per-lane B/E events balance (every span that
+    opens closes, no cross-nesting), timestamps are non-decreasing, and
+    the required lifecycle spans all occur: ``request``, ``queue``,
+    ``prefill``, ``decode``, ``engine.decode_step`` — plus ``spec.draft``
+    and ``spec.verify`` under ``--expect-spec``;
+  * **prometheus** — every non-comment line of the ``.prom`` text parses
+    as ``name[{labels}] value``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+from .schema import load_schema, validate
+
+REQUIRED_SPANS = ("request", "queue", "prefill", "decode",
+                  "engine.decode_step")
+SPEC_SPANS = ("spec.draft", "spec.verify")
+
+_PROM_LINE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? (-?[0-9.eE+-]+|NaN|[+-]Inf)$")
+
+
+def check_trace(doc: dict, expect_spec: bool = False) -> list:
+    """Schema + span-semantics errors for a Chrome-trace document."""
+    errs = validate(doc, load_schema("trace"))
+    if errs:
+        return errs
+    events = doc["traceEvents"]
+    stacks: dict[int, list] = {}
+    last_ts = None
+    seen = set()
+    for i, ev in enumerate(events):
+        ph, name, tid = ev["ph"], ev["name"], ev["tid"]
+        if ph == "M":
+            continue
+        seen.add(name)
+        if last_ts is not None and ev["ts"] < last_ts:
+            errs.append(f"event {i} ({name}): ts {ev['ts']} < previous "
+                        f"{last_ts} (events must be emitted in order)")
+        last_ts = ev["ts"]
+        if ph == "B":
+            stacks.setdefault(tid, []).append(name)
+        elif ph == "E":
+            stack = stacks.setdefault(tid, [])
+            if not stack:
+                errs.append(f"event {i}: E {name!r} on tid {tid} "
+                            "with no open span")
+            elif stack[-1] != name:
+                errs.append(f"event {i}: E {name!r} on tid {tid} but "
+                            f"innermost open span is {stack[-1]!r} "
+                            "(spans must nest)")
+                stack.pop()
+            else:
+                stack.pop()
+    for tid, stack in sorted(stacks.items()):
+        if stack:
+            errs.append(f"tid {tid}: unclosed span(s) {stack!r}")
+    want = REQUIRED_SPANS + (SPEC_SPANS if expect_spec else ())
+    for name in want:
+        if name not in seen:
+            errs.append(f"required span {name!r} never occurs")
+    if "first_token" not in seen:
+        errs.append("required instant 'first_token' never occurs")
+    return errs
+
+
+def check_metrics(doc: dict, expect_spec: bool = False) -> list:
+    errs = validate(doc, load_schema("metrics"))
+    if not errs and expect_spec and not doc["speculative"]["enabled"]:
+        errs.append("$.speculative.enabled: expected true (--expect-spec)")
+    return errs
+
+
+def check_prometheus(text: str) -> list:
+    errs = []
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines:
+        return ["prometheus text is empty"]
+    for i, ln in enumerate(lines):
+        if ln.startswith("#"):
+            continue
+        if not _PROM_LINE.match(ln):
+            errs.append(f"prom line {i}: unparseable: {ln!r}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", help="Chrome-trace JSON to validate")
+    ap.add_argument("--metrics", help="metrics snapshot JSON to validate")
+    ap.add_argument("--prom", help="Prometheus text file to validate")
+    ap.add_argument("--expect-spec", action="store_true",
+                    help="require speculative spans + enabled flag")
+    args = ap.parse_args(argv)
+    if not (args.trace or args.metrics or args.prom):
+        ap.error("nothing to validate: pass --trace / --metrics / --prom")
+
+    failures = 0
+    for label, path, check in (
+            ("trace", args.trace,
+             lambda d: check_trace(d, args.expect_spec)),
+            ("metrics", args.metrics,
+             lambda d: check_metrics(d, args.expect_spec))):
+        if not path:
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        errs = check(doc)
+        for e in errs:
+            print(f"[obs.validate] {label} {path}: {e}")
+        failures += len(errs)
+        if not errs:
+            n = len(doc["traceEvents"]) if label == "trace" else \
+                len(doc["metrics"])
+            print(f"[obs.validate] {label} {path}: OK ({n} "
+                  f"{'events' if label == 'trace' else 'instruments'})")
+    if args.prom:
+        with open(args.prom) as f:
+            errs = check_prometheus(f.read())
+        for e in errs:
+            print(f"[obs.validate] prom {args.prom}: {e}")
+        failures += len(errs)
+        if not errs:
+            print(f"[obs.validate] prom {args.prom}: OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

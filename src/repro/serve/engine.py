@@ -38,6 +38,9 @@ import numpy as np
 from repro.distributed import ctx as shd_ctx
 from repro.models import common, decoder
 from repro.models.registry import get_model
+from repro.obs import NOOP as OBS_NOOP
+from repro.obs import dispatch as obs_dispatch
+from repro.obs.trace import request_tid
 
 from . import state as state_mod
 from .sampling import SamplingParams, sample_tokens_seeded
@@ -70,7 +73,8 @@ class Engine:
                  max_blocks_per_slot: int = 8,
                  prefill_mode: str = "exact", prefill_chunk: int = 8,
                  prefill_budget: int | None = None, eos_id: int | None = None,
-                 mesh=None, rules=None, fused_kernels: str = "auto"):
+                 mesh=None, rules=None, fused_kernels: str = "auto",
+                 obs=None):
         # refuse unservable configs before touching params or quant policy
         plan = state_mod.check_supported(cfg)
         self.state_plan = plan
@@ -166,6 +170,48 @@ class Engine:
         # tokens that step emitted) — feeds the p50/p95 report
         self.token_lat_s: list[float] = []
 
+        # --- telemetry (repro.obs) -----------------------------------------
+        # Instrument handles are bound ONCE here; the hot path only calls
+        # bound no-arg/one-arg methods.  Without an ``obs`` bundle every
+        # handle is the shared no-op singleton — the engine allocates no
+        # metric objects and the decode loop is unchanged.
+        self.obs = obs if obs is not None else OBS_NOOP
+        m = self.obs.metrics
+        req_events = m.counter("serve_requests_total",
+                               "request lifecycle events",
+                               labels=("event",))
+        self._m_req_submitted = req_events.labels(event="submitted")
+        self._m_req_finished = {
+            r: req_events.labels(event=f"finished_{r}")
+            for r in ("eos", "length")}
+        toks = m.counter("serve_tokens_total", "tokens processed per phase",
+                         labels=("phase",))
+        self._m_tok_prefill = toks.labels(phase="prefill")
+        self._m_tok_decode = toks.labels(phase="decode")
+        self._m_queue_depth = m.gauge("serve_queue_depth",
+                                      "requests waiting for admission")
+        self._m_active_slots = m.gauge("serve_active_slots",
+                                       "slots occupied at the last decode")
+        self._m_state_used = m.gauge(
+            "serve_state_used",
+            "state backend occupancy, used allocation units "
+            "(blocks for paged KV, slots for slabs)")
+        self._m_state_capacity = m.gauge(
+            "serve_state_capacity", "state backend capacity, same unit")
+        self._m_queue_wait = m.histogram("serve_queue_wait_seconds",
+                                         "submit-to-admission wait")
+        self._m_ttft = m.histogram("serve_ttft_seconds",
+                                   "submit-to-first-token latency")
+        self._m_itl = m.histogram("serve_inter_token_seconds",
+                                  "per-request gap between emitted tokens")
+        self._m_prefill_step = m.histogram(
+            "serve_prefill_step_seconds",
+            "wall time of one step's admission + prefill work")
+        self._m_decode_step = m.histogram(
+            "serve_decode_step_seconds",
+            "wall time of one batched decode (or draft+verify) step")
+        self._m_state_capacity.set(self.state.occupancy()[1])
+
     # -- TP plumbing -------------------------------------------------------
 
     def _traced(self, fn, *args, **kw):
@@ -199,7 +245,19 @@ class Engine:
         """
         req = self.sched.submit(prompt, max_new_tokens, sampling,
                                 step=self.step_count, extras=extras)
-        req.submit_t = time.time()
+        req.submit_t = time.monotonic()
+        req.submit_wall_t = time.time()     # the one wall-clock anchor
+        self._m_req_submitted.inc()
+        self._m_queue_depth.set(len(self.sched.waiting))
+        tr = self.obs.trace
+        if tr.enabled:
+            tid = request_tid(req.rid)
+            tr.thread_name(tid, f"request {req.rid}")
+            tr.begin("request", tid, rid=req.rid,
+                     prompt_len=req.prompt_len,
+                     max_new_tokens=max_new_tokens,
+                     submit_wall_t=req.submit_wall_t)
+            tr.begin("queue", tid)
         return req.rid
 
     def step(self) -> list[Request]:
@@ -209,6 +267,16 @@ class Engine:
         then runs one batched decode step for all running slots.  Returns
         the requests that finished during this step.
         """
+        # install the dispatch recorder for the step's dynamic extent so
+        # first-trace qeinsum/kernel dispatches are attributed to this
+        # engine (compiled replays never reach the recorder — see
+        # repro.obs.dispatch)
+        if self.obs.dispatch is None:
+            return self._step_impl()
+        with obs_dispatch.recording(self.obs.dispatch):
+            return self._step_impl()
+
+    def _step_impl(self) -> list[Request]:
         finished: list[Request] = []
         self._do_prefills(finished)
         self._do_decode(finished)
@@ -233,6 +301,12 @@ class Engine:
         d = {"steps": self.step_count, "decode_steps": self.decode_steps,
              "fused_kernels": self.fused,
              "packed_backend": self.sq.packed_backend,
+             # unified schema with SpecEngine.stats(): plain decode reports
+             # the speculative keys as disabled/None so exporters and
+             # dashboards read one shape for both engines
+             "speculative": False,
+             "acceptance_rate": None,
+             "accepted_per_step": None,
              "requests_finished": len(self.sched.finished),
              "tokens_generated": self.tokens_generated,
              "prefill_tokens": self.prefill_tokens,
@@ -245,40 +319,69 @@ class Engine:
         return d
 
     def _latency_stats(self) -> dict:
-        """Per-request TTFT and per-token decode latency percentiles."""
+        """Per-request TTFT and per-token decode latency percentiles.
+
+        Empty populations report ``None`` (not 0.0) — "no data" and "zero
+        latency" are different answers and exporters render them apart.
+        """
         ttfts = [r.ttft_s for r in self.sched.finished.values()
                  if r.first_tok_t]
         out = {}
         for name, vals in (("ttft", ttfts), ("decode_lat", self.token_lat_s)):
-            out[f"{name}_p50_s"] = float(np.percentile(vals, 50)) if vals else 0.0
-            out[f"{name}_p95_s"] = float(np.percentile(vals, 95)) if vals else 0.0
+            out[f"{name}_p50_s"] = float(np.percentile(vals, 50)) \
+                if vals else None
+            out[f"{name}_p95_s"] = float(np.percentile(vals, 95)) \
+                if vals else None
         return out
 
     # -- prefill -----------------------------------------------------------
 
     def _do_prefills(self, finished: list[Request]) -> None:
         budget = self.prefill_budget
-        t0 = time.time()
+        t0 = time.monotonic()
+        any_work = False
         while budget > 0:
             req = self._in_flight_prefill()
             if req is None:
                 req = self.sched.admit_next()
+                if req is not None:
+                    self._on_admit(req)
             if req is None:
                 break
-            if self.prefill_mode == "exact":
-                if req.prompt_len > budget and budget < self.prefill_budget:
-                    break                  # defer to next step; never livelock
-                logits = self._prefill_exact(req)
-                used = req.prompt_len
-            else:
-                logits, used = self._prefill_chunked(req, budget)
+            any_work = True
+            with self.obs.trace.annotate("engine.prefill", rid=req.rid):
+                if self.prefill_mode == "exact":
+                    if req.prompt_len > budget \
+                            and budget < self.prefill_budget:
+                        break              # defer to next step; never livelock
+                    logits = self._prefill_exact(req)
+                    used = req.prompt_len
+                else:
+                    logits, used = self._prefill_chunked(req, budget)
             budget -= used
             self.prefill_tokens += used
+            self._m_tok_prefill.inc(used)
             if logits is None:
                 break                      # budget ran out mid-prompt
             self._after_prefill(req)
+            if self.obs.trace.enabled:
+                self.obs.trace.end("prefill", request_tid(req.rid))
             self._emit(req, self._sample_one(req, logits), finished)
-        self.prefill_s += time.time() - t0
+        dt = time.monotonic() - t0
+        self.prefill_s += dt
+        if any_work:
+            self._m_prefill_step.observe(dt)
+
+    def _on_admit(self, req: Request) -> None:
+        """A request left the queue for a slot (state reserved)."""
+        self._m_queue_depth.set(len(self.sched.waiting))
+        self._m_queue_wait.observe(req.queue_wait_s)
+        tr = self.obs.trace
+        if tr.enabled:
+            tid = request_tid(req.rid)
+            tr.end("queue", tid, slot=req.slot,
+                   queue_wait_s=req.queue_wait_s)
+            tr.begin("prefill", tid, prompt_len=req.prompt_len)
 
     def _after_prefill(self, req: Request) -> None:
         """Hook: a request's prompt is fully prefilled (state written), its
@@ -345,7 +448,7 @@ class Engine:
         reqs = self.sched.running()
         if not reqs:
             return
-        t0 = time.time()
+        t0 = time.monotonic()
         ns = self.n_slots
         toks = np.zeros((ns, 1), np.int32)
         lens = np.zeros((ns,), np.int32)
@@ -363,15 +466,18 @@ class Engine:
             topks[s] = r.sampling.top_k
             seeds[s] = r.sampling.seed
             idxs[s] = len(r.output)
-        logits = self.state.decode(reqs, toks, lens, active)
-        sampled = np.asarray(self._sample(logits[:, 0, :], jnp.asarray(temps),
-                                          jnp.asarray(topks),
-                                          jnp.asarray(seeds),
-                                          jnp.asarray(idxs)))
-        dt = time.time() - t0
-        self.decode_s += dt
-        self.decode_steps += 1
+        with self.obs.trace.annotate("engine.decode_step",
+                                     n_active=len(reqs)):
+            logits = self.state.decode(reqs, toks, lens, active)
+            sampled = np.asarray(self._sample(logits[:, 0, :],
+                                              jnp.asarray(temps),
+                                              jnp.asarray(topks),
+                                              jnp.asarray(seeds),
+                                              jnp.asarray(idxs)))
+        dt = time.monotonic() - t0
+        self._note_decode_step(dt, len(reqs))
         self.decode_tokens += len(reqs)
+        self._m_tok_decode.inc(len(reqs))
         self.token_lat_s.extend([dt] * len(reqs))
         for r in reqs:
             r.n_cached += 1
@@ -379,6 +485,19 @@ class Engine:
             self._emit(r, int(sampled[r.slot]), finished)
 
     # -- shared ------------------------------------------------------------
+
+    def _note_decode_step(self, dt: float, n_active: int) -> None:
+        """Account one batched decode (or draft+verify) step's wall time and
+        refresh the occupancy gauges.  Shared with the speculative engine so
+        both report through the same instruments."""
+        self.decode_s += dt
+        self.decode_steps += 1
+        self._m_decode_step.observe(dt)
+        if self.obs.metrics.enabled:
+            self._m_active_slots.set(n_active)
+            used, cap = self.state.occupancy()
+            self._m_state_used.set(used)
+            self._m_state_capacity.set(cap)
 
     def _sample_one(self, req: Request, logits: jax.Array) -> int:
         req.state = RUNNING
@@ -392,11 +511,29 @@ class Engine:
     def _emit(self, req: Request, tok: int, finished: list[Request]) -> None:
         req.output.append(tok)
         self.tokens_generated += 1
+        tr = self.obs.trace
         if not req.first_tok_t:
-            req.first_tok_t = time.time()
+            req.first_tok_t = req.last_tok_t = time.monotonic()
+            self._m_ttft.observe(req.ttft_s)
+            if tr.enabled:
+                tid = request_tid(req.rid)
+                tr.instant("first_token", tid, token=tok,
+                           ttft_s=req.ttft_s)
+                tr.begin("decode", tid)
+        elif self.obs.metrics.enabled:
+            now = time.monotonic()
+            self._m_itl.observe(now - req.last_tok_t)
+            req.last_tok_t = now
         if self.eos_id is not None and tok == self.eos_id:
-            self.sched.finish(req, "eos", self.step_count)
-            finished.append(req)
+            reason = "eos"
         elif len(req.output) >= req.max_new_tokens:
-            self.sched.finish(req, "length", self.step_count)
-            finished.append(req)
+            reason = "length"
+        else:
+            return
+        self.sched.finish(req, reason, self.step_count)
+        finished.append(req)
+        self._m_req_finished[reason].inc()
+        if tr.enabled:
+            tid = request_tid(req.rid)
+            tr.end("decode", tid)
+            tr.end("request", tid, reason=reason, tokens=len(req.output))

@@ -58,6 +58,10 @@ class PagedKVPool:
     def utilization(self) -> float:
         return self.used_blocks / max(self.n_blocks, 1)
 
+    def occupancy(self) -> tuple[int, int]:
+        """(used, capacity) in blocks — the telemetry pool-occupancy pair."""
+        return self.used_blocks, self.n_blocks
+
     def blocks_for(self, n_tokens: int) -> int:
         return max(1, math.ceil(n_tokens / self.block_size))
 

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
 from typing import Optional
 
@@ -69,9 +70,18 @@ class Request:
     finish_reason: str = ""
     submit_step: int = -1
     finish_step: int = -1
-    # --- latency telemetry (wall-clock seconds, engine-stamped) ---
+    # --- latency telemetry ---
+    # monotonic-clock seconds (time.monotonic): differences survive
+    # wall-clock adjustments, so TTFT / queue-wait / inter-token stats are
+    # always well-defined.  0.0 means "not stamped yet".
     submit_t: float = 0.0
+    admit_t: float = 0.0                  # scheduler-stamped at admission
     first_tok_t: float = 0.0              # 0 until the first token emits
+    last_tok_t: float = 0.0               # newest emission (inter-token lat)
+    finish_t: float = 0.0
+    # ONE wall-clock anchor per request (time.time at submit), kept solely
+    # so trace export / logs can place the request in absolute time
+    submit_wall_t: float = 0.0
 
     @property
     def prompt_len(self) -> int:
@@ -91,6 +101,12 @@ class Request:
         """Submit-to-first-token latency (0.0 until the first emission)."""
         return max(self.first_tok_t - self.submit_t, 0.0) \
             if self.first_tok_t else 0.0
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Submit-to-admission wait (0.0 until admitted)."""
+        return max(self.admit_t - self.submit_t, 0.0) \
+            if self.admit_t else 0.0
 
     def next_input_token(self) -> int:
         """The token the next decode step feeds for this request."""
@@ -158,6 +174,7 @@ class Scheduler:
         req.slot = slot
         self.state.reserve(req)
         req.state = PREFILL
+        req.admit_t = time.monotonic()
         self.slots[slot] = req
         return req
 
@@ -180,6 +197,7 @@ class Scheduler:
         req.state = FINISHED
         req.finish_reason = reason
         req.finish_step = step
+        req.finish_t = time.monotonic()
         self.state.release(req)
         if req.slot is not None:
             self.slots[req.slot] = None

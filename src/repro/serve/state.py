@@ -237,6 +237,10 @@ class PagedKVState:
     def leaked(self) -> bool:
         return self.pool.used_blocks != 0
 
+    def occupancy(self) -> tuple[int, int]:
+        """(used, capacity) in the backend's own allocation unit (blocks)."""
+        return self.pool.occupancy()
+
     def nbytes(self) -> int:
         return self.pool.nbytes()
 
@@ -368,6 +372,10 @@ class SlabState:
 
     def leaked(self) -> bool:
         return any(self.in_use)
+
+    def occupancy(self) -> tuple[int, int]:
+        """(used, capacity) in the backend's own allocation unit (slots)."""
+        return sum(self.in_use), self.n_slots
 
     def nbytes(self) -> int:
         return _tree_nbytes(self.data)

@@ -101,7 +101,7 @@ class SpecEngine(Engine):
             self.proposer = DraftProposer(dcfg, dparams, dqcfg,
                                           pool=self.pool, mesh=self.mesh,
                                           rules=self.rules,
-                                          fused=self.fused)
+                                          fused=self.fused, obs=self.obs)
             self._verify = jax.jit(
                 lambda params, pool, bt, lens, active, nprop, toks:
                 self._traced(decoder.verify_step_paged, self.vcfg, params,
@@ -125,6 +125,30 @@ class SpecEngine(Engine):
         self.drafted_tokens = 0
         self.accepted_tokens = 0
         self.rolled_back_tokens = 0
+
+        # --- speculative telemetry (repro.obs) -----------------------------
+        # the draft kind is fixed at construction, so the per-draft-kind
+        # counters are bound once; the accounting loop pays plain inc()s.
+        # acceptance_rate doubles as the live QAD closeness signal: the
+        # fraction of student proposals the NVFP4 target endorses.
+        m = self.obs.metrics
+        kind = {"draft": self.draft_mode}
+        self._m_drafted = m.counter(
+            "spec_draft_tokens_total", "draft tokens proposed",
+            labels=("draft",)).labels(**kind)
+        self._m_accepted = m.counter(
+            "spec_accepted_tokens_total",
+            "draft tokens the verify step accepted",
+            labels=("draft",)).labels(**kind)
+        self._m_rolled_back = m.counter(
+            "spec_rolled_back_tokens_total",
+            "draft tokens rejected and rolled back",
+            labels=("draft",)).labels(**kind)
+        self._m_draft_s = m.histogram(
+            "spec_draft_seconds", "wall time of one round's draft phase")
+        self._m_verify_s = m.histogram(
+            "spec_verify_seconds",
+            "wall time of one round's verify + accept phase")
 
         # --- draft-cost-aware adaptive k (ROADMAP next step) ---
         # choose per-slot draft length k* = argmax over 1..draft_k of
@@ -204,6 +228,9 @@ class SpecEngine(Engine):
             self.drafted_tokens += ke
             self.accepted_tokens += j
             self.rolled_back_tokens += ke - j
+            self._m_drafted.inc(ke)
+            self._m_accepted.inc(j)
+            self._m_rolled_back.inc(ke - j)
             if ke:
                 d0, a0 = self._req_acc.get(r.rid, (0, 0))
                 self._req_acc[r.rid] = (d0 + ke, a0 + j)
@@ -221,6 +248,7 @@ class SpecEngine(Engine):
             sel[s] = len(toks_emit)
             adv[s] = min(j + 1, ke)
             self.decode_tokens += len(toks_emit)
+            self._m_tok_decode.inc(len(toks_emit))
             # a request that got n tokens this step experienced dt/n per
             # token (the plain engine's dt-per-token at n == 1)
             self.token_lat_s.extend([dt / len(toks_emit)] * len(toks_emit))
@@ -234,31 +262,41 @@ class SpecEngine(Engine):
         reqs = self.sched.running()
         if not reqs:
             return
-        t0 = time.time()
-        st = self._round_state(reqs)
-        draft_toks, draft_probs = self.proposer.propose(st, self.spec_k)
-        t_draft = time.time() - t0
+        t0 = time.monotonic()
+        # the whole draft/verify round IS this engine's decode step — the
+        # engine-lane span name is shared with the plain engine so one
+        # trace schema covers both (spec.* spans nest inside it)
+        with self.obs.trace.span("engine.decode_step", n_active=len(reqs)):
+            st = self._round_state(reqs)
+            with self.obs.trace.annotate("spec.draft", n_active=len(reqs),
+                                         k=self.spec_k):
+                draft_toks, draft_probs = self.proposer.propose(st,
+                                                                self.spec_k)
+            t_draft = time.monotonic() - t0
 
-        tokens = np.concatenate([st.last_tok[:, None], draft_toks], axis=1)
-        logits, self.pool.data = self._verify(
-            self.params, self.pool.data, jnp.asarray(st.bt),
-            jnp.asarray(st.lens), jnp.asarray(st.active),
-            jnp.asarray(st.k_eff), jnp.asarray(tokens))
-        out_toks, n_emit, n_acc = map(np.asarray, self._accept(
-            logits, jnp.asarray(draft_toks), jnp.asarray(draft_probs),
-            jnp.asarray(st.k_eff), jnp.asarray(st.temps),
-            jnp.asarray(st.topks), jnp.asarray(st.seeds),
-            jnp.asarray(st.tok_idx)))
+            tokens = np.concatenate([st.last_tok[:, None], draft_toks],
+                                    axis=1)
+            with self.obs.trace.annotate("spec.verify", n_active=len(reqs)):
+                logits, self.pool.data = self._verify(
+                    self.params, self.pool.data, jnp.asarray(st.bt),
+                    jnp.asarray(st.lens), jnp.asarray(st.active),
+                    jnp.asarray(st.k_eff), jnp.asarray(tokens))
+                out_toks, n_emit, n_acc = map(np.asarray, self._accept(
+                    logits, jnp.asarray(draft_toks),
+                    jnp.asarray(draft_probs), jnp.asarray(st.k_eff),
+                    jnp.asarray(st.temps), jnp.asarray(st.topks),
+                    jnp.asarray(st.seeds), jnp.asarray(st.tok_idx)))
 
-        dt = time.time() - t0
-        self._observe_costs(t_draft, dt - t_draft,
-                            int(st.k_eff.max(initial=0)))
-        self.decode_s += dt
-        self.decode_steps += 1
-        self.verify_steps += 1
-        self.verify_slot_rounds += len(reqs)
-        self._account_round(reqs, out_toks, n_emit, n_acc, st.k_eff, dt,
-                            finished)
+            dt = time.monotonic() - t0
+            self._observe_costs(t_draft, dt - t_draft,
+                                int(st.k_eff.max(initial=0)))
+            self._note_decode_step(dt, len(reqs))
+            self._m_draft_s.observe(t_draft)
+            self._m_verify_s.observe(dt - t_draft)
+            self.verify_steps += 1
+            self.verify_slot_rounds += len(reqs)
+            self._account_round(reqs, out_toks, n_emit, n_acc, st.k_eff, dt,
+                                finished)
 
     def _do_decode_stepped(self, finished: list[Request]) -> None:
         """Slab-state round: sequential stepped verify + snapshot/restore.
@@ -276,40 +314,47 @@ class SpecEngine(Engine):
         reqs = self.sched.running()
         if not reqs:
             return
-        t0 = time.time()
+        t0 = time.monotonic()
         ns, k = self.n_slots, self.spec_k
-        st = self._round_state(reqs)
-        draft_toks, draft_probs = self.proposer.propose(st, k)
-        t_draft = time.time() - t0
+        with self.obs.trace.span("engine.decode_step", n_active=len(reqs)):
+            st = self._round_state(reqs)
+            with self.obs.trace.annotate("spec.draft", n_active=len(reqs),
+                                         k=k):
+                draft_toks, draft_probs = self.proposer.propose(st, k)
+            t_draft = time.monotonic() - t0
 
-        tokens = np.concatenate([st.last_tok[:, None], draft_toks], axis=1)
-        logits = np.zeros((ns, k + 1, self.cfg.vocab_size), np.float32)
-        snaps = [self.state.snapshot()]
-        for i in range(k + 1):
-            act_i = st.active & (i <= st.k_eff)
-            lg = self.state.decode(reqs, tokens[:, i:i + 1], st.lens + i,
-                                   act_i)
-            logits[:, i] = np.asarray(lg[:, 0, :], np.float32)
-            snaps.append(self.state.snapshot())
-        out_toks, n_emit, n_acc = map(np.asarray, self._accept(
-            jnp.asarray(logits), jnp.asarray(draft_toks),
-            jnp.asarray(draft_probs), jnp.asarray(st.k_eff),
-            jnp.asarray(st.temps), jnp.asarray(st.topks),
-            jnp.asarray(st.seeds), jnp.asarray(st.tok_idx)))
+            tokens = np.concatenate([st.last_tok[:, None], draft_toks],
+                                    axis=1)
+            logits = np.zeros((ns, k + 1, self.cfg.vocab_size), np.float32)
+            snaps = [self.state.snapshot()]
+            with self.obs.trace.annotate("spec.verify", n_active=len(reqs)):
+                for i in range(k + 1):
+                    act_i = st.active & (i <= st.k_eff)
+                    lg = self.state.decode(reqs, tokens[:, i:i + 1],
+                                           st.lens + i, act_i)
+                    logits[:, i] = np.asarray(lg[:, 0, :], np.float32)
+                    snaps.append(self.state.snapshot())
+                out_toks, n_emit, n_acc = map(np.asarray, self._accept(
+                    jnp.asarray(logits), jnp.asarray(draft_toks),
+                    jnp.asarray(draft_probs), jnp.asarray(st.k_eff),
+                    jnp.asarray(st.temps), jnp.asarray(st.topks),
+                    jnp.asarray(st.seeds), jnp.asarray(st.tok_idx)))
 
-        dt = time.time() - t0
-        self._observe_costs(t_draft, dt - t_draft,
-                            int(st.k_eff.max(initial=0)))
-        self.decode_s += dt
-        self.decode_steps += 1
-        self.verify_steps += 1
-        self.verify_slot_rounds += len(reqs)
-        sel, adv = self._account_round(reqs, out_toks, n_emit, n_acc,
-                                       st.k_eff, dt, finished)
-        # lossless rollback: every slot's state becomes exactly the state
-        # after its emitted tokens — bitwise, never having drafted
-        self.state.restore_select(snaps, sel)
-        self.proposer.commit(adv)
+            dt = time.monotonic() - t0
+            self._observe_costs(t_draft, dt - t_draft,
+                                int(st.k_eff.max(initial=0)))
+            self._note_decode_step(dt, len(reqs))
+            self._m_draft_s.observe(t_draft)
+            self._m_verify_s.observe(dt - t_draft)
+            self.verify_steps += 1
+            self.verify_slot_rounds += len(reqs)
+            sel, adv = self._account_round(reqs, out_toks, n_emit, n_acc,
+                                           st.k_eff, dt, finished)
+            # lossless rollback: every slot's state becomes exactly the
+            # state after its emitted tokens — bitwise, never having drafted
+            with self.obs.trace.span("spec.rollback", n_active=len(reqs)):
+                self.state.restore_select(snaps, sel)
+                self.proposer.commit(adv)
 
     # -- draft-cost-aware adaptive k ---------------------------------------
 
@@ -365,20 +410,24 @@ class SpecEngine(Engine):
     def stats(self) -> dict:
         d = super().stats()
         d.update({
+            "speculative": True,
             "spec_k": self.spec_k, "draft_mode": self.draft_mode,
             "verify_steps": self.verify_steps,
             "verify_slot_rounds": self.verify_slot_rounds,
             "drafted_tokens": self.drafted_tokens,
             "accepted_tokens": self.accepted_tokens,
             "rolled_back_tokens": self.rolled_back_tokens,
-            "acceptance_rate": self.accepted_tokens
-            / max(self.drafted_tokens, 1),
+            # None (not 0.0) before any draft/verify round has run — "no
+            # data" and "nothing accepted" are different answers
+            "acceptance_rate": (self.accepted_tokens / self.drafted_tokens
+                                if self.drafted_tokens else None),
             # tokens a slot emits per verify round (accepted + the always-
             # emitted correction/bonus token): 1.0 = no speculation win,
             # k+1 = every proposal accepted
-            "accepted_per_step": (self.accepted_tokens
-                                  + self.verify_slot_rounds)
-            / max(self.verify_slot_rounds, 1),
+            "accepted_per_step": ((self.accepted_tokens
+                                   + self.verify_slot_rounds)
+                                  / self.verify_slot_rounds
+                                  if self.verify_slot_rounds else None),
             "draft_pool_bytes": self.proposer.nbytes(),
             "adaptive_k": self.adaptive_k,
             # chosen-k distribution (post-clamp; populated when adaptive)

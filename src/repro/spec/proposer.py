@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decoder
+from repro.obs import NOOP as OBS_NOOP
 
 from repro.serve.sampling import draft_sample_tokens
 
@@ -78,7 +79,11 @@ class DraftProposer:
     """
 
     def __init__(self, cfg, params, qcfg, *, pool, mesh=None, rules=None,
-                 fused: bool = False):
+                 fused: bool = False, obs=None):
+        self.obs = obs if obs is not None else OBS_NOOP
+        self._m_draft_steps = self.obs.metrics.counter(
+            "spec_draft_steps_total",
+            "single-token draft-model decode steps (incl. catch-up feeds)")
         if cfg.n_experts and cfg.moe_dispatch not in ("local", "token"):
             cfg = dataclasses.replace(cfg, moe_dispatch="local")
         self.cfg = cfg
@@ -151,11 +156,14 @@ class DraftProposer:
             self._prefill_fns[p] = jax.jit(_prefill)
             self._write_fns[p] = jax.jit(decoder.write_prompt_to_pool,
                                          donate_argnums=(0,))
-        _, cache = self._prefill_fns[p](self.params,
-                                        jnp.asarray(req.prompt[None]))
-        cache = {k: v for k, v in cache.items() if k != "pos"}
-        ids = np.asarray(req.block_ids[: self.pool.blocks_for(p)], np.int32)
-        self.data = self._write_fns[p](self.data, cache, jnp.asarray(ids))
+        with self.obs.trace.annotate("spec.draft_prefill", rid=req.rid):
+            _, cache = self._prefill_fns[p](self.params,
+                                            jnp.asarray(req.prompt[None]))
+            cache = {k: v for k, v in cache.items() if k != "pos"}
+            ids = np.asarray(req.block_ids[: self.pool.blocks_for(p)],
+                             np.int32)
+            self.data = self._write_fns[p](self.data, cache,
+                                           jnp.asarray(ids))
         req.draft_cached = p
 
     # -- the proposal round ------------------------------------------------
@@ -183,6 +191,7 @@ class DraftProposer:
         if need.any():
             # catch-up: feed the token at position draft_lens (the second-
             # newest emission) so the draft prefix reaches the target's
+            self._m_draft_steps.inc()
             _, _, self.data = self._step(
                 self.data, bt, jnp.asarray(st.draft_lens),
                 jnp.asarray(need), jnp.asarray(st.prev_tok[:, None]),
@@ -193,6 +202,7 @@ class DraftProposer:
         cur = jnp.asarray(st.last_tok)
         for i in range(int(st.k_eff.max(initial=0))):
             act_i = jnp.asarray(st.active & (i < st.k_eff))
+            self._m_draft_steps.inc()
             tok, q, self.data = self._step(
                 self.data, bt, jnp.asarray(st.lens + i), act_i,
                 cur[:, None], temps, topks, seeds,
@@ -229,6 +239,10 @@ class SlabDraftProposer:
             cfg = dataclasses.replace(cfg, moe_dispatch="local")
         self.cfg = cfg
         self.eng = engine
+        self.obs = engine.obs
+        self._m_draft_steps = self.obs.metrics.counter(
+            "spec_draft_steps_total",
+            "single-token draft-model decode steps (incl. catch-up feeds)")
         self.model = get_model(cfg)
         sq = dataclasses.replace(qcfg, quantize_weights=False)
         # the stepped verify reuses the plain engine's ROW-scope decode, so
@@ -281,11 +295,12 @@ class SlabDraftProposer:
             self._write_fns[p] = jax.jit(
                 lambda data, cache, slot:
                 self._state_mod.slab_write(self.specs, data, cache, slot))
-        _, cache = self._prefill_fns[p](self.params,
-                                        self.eng.prefill_batch(req))
-        cache = {k: v for k, v in cache.items() if k != "pos"}
-        self.data = self._write_fns[p](self.data, cache,
-                                       jnp.asarray(req.slot, jnp.int32))
+        with self.obs.trace.annotate("spec.draft_prefill", rid=req.rid):
+            _, cache = self._prefill_fns[p](self.params,
+                                            self.eng.prefill_batch(req))
+            cache = {k: v for k, v in cache.items() if k != "pos"}
+            self.data = self._write_fns[p](self.data, cache,
+                                           jnp.asarray(req.slot, jnp.int32))
         req.draft_cached = p
 
     # -- the proposal round ------------------------------------------------
@@ -302,6 +317,7 @@ class SlabDraftProposer:
             f"draft prefix lags > 1 position: {lag}"
         need = st.active & (lag == 1)
         if need.any():
+            self._m_draft_steps.inc()
             _, _, self.data = self._step(
                 self.data, jnp.asarray(st.draft_lens), jnp.asarray(need),
                 jnp.asarray(st.prev_tok[:, None]), temps, topks, seeds,
@@ -315,6 +331,7 @@ class SlabDraftProposer:
         cur = jnp.asarray(st.last_tok)
         for i in range(int(st.k_eff.max(initial=0))):
             act_i = jnp.asarray(st.active & (i < st.k_eff))
+            self._m_draft_steps.inc()
             tok, q, self.data = self._step(
                 self.data, jnp.asarray(st.lens + i), act_i, cur[:, None],
                 temps, topks, seeds, jnp.asarray(st.tok_idx + i))
