@@ -352,6 +352,80 @@ def observability_rows(arch: str, requests: int, gen: int,
     return row
 
 
+def numerics_rows(arch: str, requests: int, gen: int, slots: int) -> dict:
+    """Numerics observability plane A/B: the SAME packed workload with the
+    shadow teacher off / sampling 1-in-16 decode steps / sampling every
+    step.  Reports the per-layer SQNR summary and live teacher-student KL
+    at each rate, plus the probe overhead on the per-token decode-latency
+    FLOOR (same lockstep + floor method as ``observability_rows``; the
+    shadow forward itself runs between decode steps and is priced
+    separately as ``shadow_s_per_sampled_step``).  Acceptance bound:
+    sampled-probe overhead on the decode floor < 2%."""
+    cfg = configs.get_smoke(arch)
+    params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0),
+                                        "packed")
+    gen = max(gen, 12)
+    rates = {"off": 0.0, "rate_1_16": 1.0 / 16.0, "rate_1": 1.0}
+    engines = {}
+    prompts = None
+    for mode, rate in rates.items():
+        argv = ["--engine", "--arch", arch, "--requests", str(requests),
+                "--gen", str(gen), "--slots", str(slots), "--no-parity"]
+        if rate:
+            argv += ["--shadow-rate", str(rate)]
+        args = serve.build_parser().parse_args(argv)
+        eng, _ = serve.build_engine(cfg, params, qcfg, args)
+        engines[mode] = eng
+        prompts = [np.asarray(p) for p in serve.mixed_prompts(
+            jax.random.PRNGKey(7), requests, args.min_prompt,
+            args.max_prompt, cfg.vocab_size)]
+        for p in prompts:                    # warmup: compile off the clock
+            eng.submit(p, gen)
+        eng.drain(max_steps=2000)
+        eng.token_lat_s.clear()
+    for _ in range(3):                       # measured lockstep rounds
+        for mode in rates:
+            for p in prompts:
+                engines[mode].submit(p, gen)
+        while any(engines[m].sched.has_work() for m in rates):
+            for mode in rates:
+                if engines[mode].sched.has_work():
+                    engines[mode].step()
+    row = {"arch": arch, "weight_format": "packed", "gen": gen, "modes": {}}
+    for mode, rate in rates.items():
+        eng = engines[mode]
+        r = {"shadow_rate": rate,
+             "decode_lat_min_s": min(eng.token_lat_s),
+             "decode_lat_p50_s": float(np.percentile(eng.token_lat_s, 50))}
+        if eng.numerics is not None:
+            ns = eng.numerics.summary()
+            kl = [v for _, v in ns["series"].get("qad_live_kl", [])]
+            r.update({"shadow_steps": eng.shadow_steps,
+                      "sampled_records": ns["sampled_records"],
+                      "qad_live_kl_mean": (float(np.mean(kl)) if kl
+                                           else None),
+                      "qad_top1_agree_mean": (float(np.mean(
+                          [v for _, v in ns["series"].get(
+                              "qad_top1_agree", [])])) if kl else None),
+                      "sqnr_db_min": ns["sqnr_db_min"],
+                      "sqnr_db_mean": ns["sqnr_db_mean"]})
+        row["modes"][mode] = r
+        emit(f"serve/numerics/{arch}/{mode}", r["decode_lat_min_s"] * 1e6,
+             f"tok_lat_min={r['decode_lat_min_s'] * 1e3:.2f}ms")
+    off = row["modes"]["off"]["decode_lat_min_s"]
+    row["probe_overhead_pct"] = 100.0 * (
+        row["modes"]["rate_1_16"]["decode_lat_min_s"] / max(off, 1e-9) - 1.0)
+    # price the sampled work itself: amortized shadow seconds per sampled
+    # decode step at rate 1 (full-context teacher+student re-forwards)
+    e1 = engines["rate_1"]
+    row["shadow_s_per_sampled_step"] = (e1.shadow_s / e1.shadow_steps
+                                        if e1.shadow_steps else None)
+    # per-layer summary at rate 1 (densest sampling) for the artifact
+    if e1.numerics is not None:
+        row["per_layer"] = e1.numerics.summary()["per_layer"]
+    return row
+
+
 def sharded_rows(archs, tps=(2, 8), n_blocks: int = 1024) -> dict:
     """Per-device weight/KV bytes under TP partitions of the full-scale
     configs (analytic — ``sharding.resolve_packed`` divisibility, no
@@ -439,6 +513,18 @@ def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
           f"trace={ob['modes']['trace']['decode_lat_min_s'] * 1e3:.2f}ms "
           f"metrics-overhead={ob['metrics_overhead_pct']:+.1f}% "
           f"trace-overhead={ob['trace_overhead_pct']:+.1f}%")
+
+    results["numerics"] = numerics_rows(arch, engine_requests, gen,
+                                        engine_slots)
+    nr = results["numerics"]
+    r1 = nr["modes"]["rate_1"]
+    print(f"[serve_bench] numerics {arch}: tok_lat_min "
+          f"off={nr['modes']['off']['decode_lat_min_s'] * 1e3:.2f}ms "
+          f"1/16={nr['modes']['rate_1_16']['decode_lat_min_s'] * 1e3:.2f}ms "
+          f"1/1={r1['decode_lat_min_s'] * 1e3:.2f}ms "
+          f"probe-overhead={nr['probe_overhead_pct']:+.1f}% "
+          f"live_kl={r1['qad_live_kl_mean']:.4f} "
+          f"sqnr_min={r1['sqnr_db_min']:.1f}dB")
 
     results["speculative"] = speculative_rows(arch, "arctic-480b", gen)
     for row in (results["speculative"]["dense"]

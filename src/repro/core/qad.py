@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from . import losses
 from .qconfig import QuantConfig, BF16
+from ..obs import numerics as obs_numerics
 
 
 class TrainState(NamedTuple):
@@ -69,19 +70,42 @@ def make_loss_fn(model, cfg, qcfg: QuantConfig, qad: QADConfig):
                                         qad.loss_chunks)
             return kl, {"kl": kl}
 
-        s_logits = model.apply(cfg, student, batch, qcfg)
+        # numerics probes (repro.obs.numerics): with qcfg.numerics on, a
+        # local Tape collects per-layer quant-error stats from the
+        # student forward and per-layer hiddens from BOTH forwards; the
+        # drained values join the metrics aux as ordinary jit outputs.
+        # The context managers run at trace time; numerics=False (the
+        # default) takes the exact pre-probe path.
+        tape = obs_numerics.Tape() if qcfg.numerics else None
+        if tape is not None:
+            with obs_numerics.collecting(tape):
+                s_logits = model.apply(cfg, student, batch, qcfg)
+            s_aux = tape.drain()
+        else:
+            s_logits = model.apply(cfg, student, batch, qcfg)
         metrics = {}
         ce = losses.ce_from_logits(s_logits, batch["labels"], mask)
         metrics["ce"] = ce
 
         if qad.loss == "ce":                       # QAT
+            if tape is not None:
+                metrics["numerics"] = _numerics_metrics(s_aux, None, mask)
             return ce, metrics
 
-        t_logits = jax.lax.stop_gradient(
-            model.apply(cfg, teacher, batch, BF16))
+        if tape is not None:
+            t_qcfg = dataclasses.replace(BF16, numerics=True)
+            with obs_numerics.collecting(tape):
+                t_logits = jax.lax.stop_gradient(
+                    model.apply(cfg, teacher, batch, t_qcfg))
+            t_aux = tape.drain()
+        else:
+            t_logits = jax.lax.stop_gradient(
+                model.apply(cfg, teacher, batch, BF16))
         kl = losses.kl_from_logits(t_logits / t, s_logits / t, mask)
         metrics["kl"] = kl
         metrics["top1_agree"] = losses.top1_agreement(t_logits, s_logits, mask)
+        if tape is not None:
+            metrics["numerics"] = _numerics_metrics(s_aux, t_aux, mask)
 
         if qad.loss == "kl":                       # QAD
             return kl, metrics
@@ -94,6 +118,28 @@ def make_loss_fn(model, cfg, qcfg: QuantConfig, qad: QADConfig):
         raise ValueError(qad.loss)
 
     return loss_fn
+
+
+def _numerics_metrics(s_aux, t_aux, mask):
+    """Shape drained probe tapes into the ``metrics["numerics"]`` aux.
+
+    Raw per-layer hiddens (``layers.hidden``) from the two forwards are
+    reduced to per-layer cosine/MSE here (the "internal geometry" view);
+    every other student probe site (quant-error stats, incl. the
+    ``layers.``-prefixed per-layer series from ``scan_layers``) passes
+    through as ``{site: {stat: value}}``.  Everything is stop-gradient'd:
+    probes observe training, they never steer it.
+    """
+    sg = jax.lax.stop_gradient
+    out = {}
+    h_s = s_aux.pop("layers.hidden", None)
+    h_t = t_aux.pop("layers.hidden", None) if t_aux else None
+    if h_s is not None and h_t is not None:
+        out["layers.hidden"] = obs_numerics.hidden_divergence(
+            sg(h_t["h"]), sg(h_s["h"]), mask)
+    for site, stats in s_aux.items():
+        out[site] = {k: sg(v) for k, v in stats.items()}
+    return out
 
 
 def make_train_step(model, cfg, qcfg: QuantConfig, opt,
@@ -112,6 +158,15 @@ def make_train_step(model, cfg, qcfg: QuantConfig, opt,
         metrics = dict(metrics, loss=loss,
                        grad_norm=_global_norm(grads),
                        update_norm=_global_norm(updates))
+        if qcfg.numerics and isinstance(grads, dict) and "layers" in grads:
+            # per-layer grad norm: every stacked-layer leaf carries the
+            # [n_layers, ...] leading dim, so reduce all trailing axes
+            sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)),
+                             axis=tuple(range(1, g.ndim)))
+                     for g in jax.tree.leaves(grads["layers"]))
+            num = dict(metrics.get("numerics") or {})
+            num["layers.grad"] = {"grad_norm": jnp.sqrt(sq)}
+            metrics["numerics"] = num
         return TrainState(step=state.step + 1, student=student,
                           teacher=state.teacher, opt_state=opt_state), metrics
 

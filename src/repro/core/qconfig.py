@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from . import nvfp4
+from ..obs import numerics as obs_numerics
 
 # GEMM sites, used by the policy:
 #   "mlp"       — feed-forward projections (incl. MoE expert GEMMs)
@@ -90,6 +91,15 @@ class QuantConfig:
     #              decode) "token" and "row" coincide.
     act_scope: Literal["tensor", "row", "token"] = "tensor"
 
+    # --- numerics observability (repro.obs.numerics) ---
+    # When True AND a probe Tape is installed (obs_numerics.collecting),
+    # q_act / q_weight record per-site quantization-error stats (SQNR,
+    # amax, clip fraction, scale utilization) onto the tape at TRACE
+    # time.  False (the default) adds zero operations to the jaxpr, so
+    # the off path is bitwise identical by construction.  Static, like
+    # every other field, so jit specializes cleanly.
+    numerics: bool = False
+
     def quantizes(self, kind: Kind) -> bool:
         """Does this policy quantize GEMMs of the given kind?"""
         if not self.enabled or not kind:
@@ -112,15 +122,19 @@ class QuantConfig:
         """Fake-quantize an activation (blocked along its last dim)."""
         if not (self.quantizes(kind) and self.quantize_activations):
             return x
+        amax = None
         if self.act_scope == "row":
             amax = jnp.max(jnp.abs(x.astype(jnp.float32)),
                            axis=tuple(range(1, x.ndim)), keepdims=True)
-            return _fq_lastdim(x, amax)
-        if self.act_scope == "token":
+        elif self.act_scope == "token":
             amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
                            keepdims=True)
-            return _fq_lastdim(x, amax)
-        return _fq_lastdim(x)
+        if self.numerics:
+            tape = obs_numerics.active()
+            if tape is not None:
+                tape.put(f"{kind}.act",
+                         obs_numerics.quant_error_stats(x, amax))
+        return _fq_lastdim(x, amax)
 
     def q_weight(self, w: jax.Array, kind: Kind, contract_axis: int = 0) -> jax.Array:
         """Fake-quantize a DENSE weight, blocked along the contraction axis."""
@@ -129,6 +143,11 @@ class QuantConfig:
                             "go through resolve_weight / layers.qeinsum")
         if not (self.quantizes(kind) and self.quantize_weights):
             return w
+        if self.numerics:
+            tape = obs_numerics.active()
+            if tape is not None:
+                wm = jnp.moveaxis(w, contract_axis % w.ndim, -1)
+                tape.put(f"{kind}.w", obs_numerics.quant_error_stats(wm))
         return _fq_axis(w, contract_axis)
 
     def resolve_weight(self, w, kind: Kind, contract_axis: int = 0):

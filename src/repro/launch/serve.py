@@ -83,6 +83,27 @@ def load_quantized(cfg, rng, weight_format: str = "qdq"):
     return ptq.quantize_weights(params, pspecs, qcfg), qcfg
 
 
+def inject_quant_noise(params, scale: float):
+    """Perturb every PackedNVFP4 leaf's per-tensor scale by (1 + scale).
+
+    The numerics-drift CI canary: a deliberate calibration error that the
+    shadow-teacher probes must surface (live KL up, per-layer amax
+    drifted) and the snapshot gate must trip on.  Greedy engine-vs-
+    ``serve_batch`` parity still holds — both sides share the perturbed
+    weights — so only the NUMERICS plane sees the fault, exactly the
+    failure class (quantizer drift with no crash) the gate exists for.
+    """
+
+    def bump(leaf):
+        if isinstance(leaf, PackedNVFP4):
+            return dataclasses.replace(
+                leaf, tensor_scale=leaf.tensor_scale * (1.0 + scale))
+        return leaf
+
+    return jax.tree.map(bump, params,
+                        is_leaf=lambda x: isinstance(x, PackedNVFP4))
+
+
 def serve_batch(cfg, params, prompts, n_gen: int, sample_rng=None, qcfg=None,
                 extras=None):
     """Prefill + greedy decode ``n_gen`` tokens for a [B, P] prompt batch.
@@ -175,6 +196,13 @@ def build_engine(cfg, params, qcfg, args, mesh=None, rules=None):
               prefill_chunk=args.prefill_chunk, mesh=mesh, rules=rules,
               fused_kernels=getattr(args, "fused_kernels", "auto"),
               obs=obs_from_args(args))
+    shadow_rate = getattr(args, "shadow_rate", 0.0) or 0.0
+    if shadow_rate > 0.0:
+        # the BF16 teacher is the deterministic pre-quantization init
+        # (same PRNGKey(0) as load_quantized) — the exact model the
+        # packed student was distilled/PTQ'd from
+        teacher = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+        kw.update(shadow_teacher=teacher, shadow_rate=shadow_rate)
     spec_k = getattr(args, "speculative", 0)
     if not spec_k:
         return Engine(cfg, params, qcfg, **kw), n_blocks
@@ -370,6 +398,17 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
               f"rolled-back={st['rolled_back_tokens']} "
               f"verify-steps={st['verify_steps']}{adaptive}")
 
+    if eng.numerics is not None:
+        ns = eng.numerics.summary()
+        kl_pts = ns["series"].get("qad_live_kl", [])
+        kl_s = f"{kl_pts[-1][1]:.4f}" if kl_pts else "n/a"
+        sq = ns["sqnr_db_min"]
+        sq_s = f"{sq:.1f}dB" if sq is not None else "n/a"
+        print(f"[numerics] shadow-steps={eng.shadow_steps} "
+              f"rate=1/{eng._shadow_every} "
+              f"records={ns['sampled_records']} "
+              f"live_kl={kl_s} sqnr_min={sq_s}")
+
     if eng.obs.enabled:
         from repro.obs import export as obs_export
         qw = eng.obs.metrics.get("serve_queue_wait_seconds")
@@ -460,6 +499,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the Chrome-trace/Perfetto JSON here; "
                     "implies --obs trace")
+    # --- numerics observability (repro.obs.numerics, engine mode) ---
+    ap.add_argument("--shadow-rate", type=float, default=0.0, metavar="R",
+                    help="shadow-teacher sampling rate: on ~R of decode "
+                    "steps, re-forward each running request's context "
+                    "through the BF16 teacher and the quantized student "
+                    "and record live KL / top-1 agreement plus per-layer "
+                    "divergence and quant-error stats (0 = off; stateless, "
+                    "token streams are unchanged)")
+    ap.add_argument("--inject-quant-noise", type=float, default=0.0,
+                    metavar="SCALE",
+                    help="CI canary: perturb every packed weight's "
+                    "per-tensor scale by (1 + SCALE) so the numerics "
+                    "gate has a fault to trip on (requires "
+                    "--weight-format packed)")
     # --- tensor parallelism (engine mode) ---
     ap.add_argument("--tp", type=int, default=1, metavar="N",
                     help="tensor-parallel degree: shard packed codes/scales "
@@ -479,6 +532,12 @@ def main(argv=None):
             and not args.engine:
         raise SystemExit("--obs/--metrics-out/--trace-out require --engine "
                          "(telemetry instruments the serving engine)")
+    if args.shadow_rate and not args.engine:
+        raise SystemExit("--shadow-rate requires --engine (the shadow "
+                         "teacher samples the engine's decode loop)")
+    if args.inject_quant_noise and args.weight_format != "packed":
+        raise SystemExit("--inject-quant-noise perturbs PackedNVFP4 "
+                         "tensor scales; use --weight-format packed")
 
     mesh = rules = None
     if args.tp > 1:
@@ -500,6 +559,10 @@ def main(argv=None):
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     rng = jax.random.PRNGKey(0)
     params, qcfg = load_quantized(cfg, rng, weight_format=args.weight_format)
+    if args.inject_quant_noise:
+        params = inject_quant_noise(params, args.inject_quant_noise)
+        print(f"[serve] CANARY: packed tensor scales perturbed by "
+              f"{args.inject_quant_noise:+.0%}")
     wr = weight_report(params)
     if wr["q_params"]:
         print(f"[serve] weights: total={wr['total_bytes']/2**20:.2f}MiB  "

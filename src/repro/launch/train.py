@@ -10,6 +10,7 @@ monitor, deterministic (step-indexed) data, Table-1-style eval (KL + CE).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -43,11 +44,28 @@ def train(arch: str, smoke: bool = True, steps: int = 200, lr: float = 1e-3,
           method: str = "qad", batch: int = 8, seq: int = 64,
           ckpt_dir: str | None = None, eval_every: int = 50,
           seed: int = 0, domains: tuple = ("math", "code", "prose"),
+          numerics: bool = False, metrics_out: str | None = None,
           log=print):
     cfg = configs.get_smoke(arch) if smoke else configs.get_config(arch)
     model = get_model(cfg)
     qcfg = specs.recipe_qconfig(cfg)
     qadcfg = make_method_qad(method, lr)
+
+    # --- numerics observability (repro.obs.numerics) -----------------------
+    # ``numerics=True`` turns on the trace-time probe plane for the TRAIN
+    # step only (per-layer SQNR / clip / scale-util, teacher-student hidden
+    # divergence, per-layer grad norms ride out of jit as extra metrics —
+    # the optimizer math is bitwise unchanged); the eval step stays
+    # probe-free so its aggregation loop sees only scalars.  Snapshots
+    # export per eval interval as ``repro.obs.metrics/v1`` documents.
+    registry = recorder = None
+    train_qcfg = qcfg
+    if numerics:
+        from repro.obs.metrics import MetricsRegistry
+        from repro.obs.numerics import NumericsRecorder
+        registry = MetricsRegistry()
+        recorder = NumericsRecorder(registry)
+        train_qcfg = dataclasses.replace(qcfg, numerics=True)
 
     opt = AdamW(lr=warmup_cosine(lr, steps // 10, steps), clip_norm=1.0)
     rng = jax.random.PRNGKey(seed)
@@ -59,8 +77,9 @@ def train(arch: str, smoke: bool = True, steps: int = 200, lr: float = 1e-3,
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
                       global_batch=batch, seed=seed, domains=domains)
 
-    step_fn = jax.jit(qad_mod.make_train_step(model, cfg, qcfg, opt, qadcfg),
-                      donate_argnums=(0,))
+    step_fn = jax.jit(
+        qad_mod.make_train_step(model, cfg, train_qcfg, opt, qadcfg),
+        donate_argnums=(0,))
     eval_fn = jax.jit(qad_mod.make_eval_step(model, cfg, qcfg, qadcfg))
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
@@ -90,6 +109,17 @@ def train(arch: str, smoke: bool = True, steps: int = 200, lr: float = 1e-3,
             history.append(m)
             log(f"[train] step {i+1} " +
                 " ".join(f"{k}={v:.4f}" for k, v in m.items() if k != "step"))
+            if recorder is not None:
+                recorder.record(metrics.get("numerics") or {})
+                recorder.series_point("qad_train_kl", i + 1, m.get("kl"))
+                recorder.series_point("qad_train_top1", i + 1,
+                                      m.get("top1_agree"))
+                if metrics_out:
+                    from repro.obs import export as obs_export
+                    obs_export.write_training_metrics(
+                        metrics_out, i + 1, registry, recorder=recorder,
+                        tokens=(i + 1) * batch * seq, evals=m)
+                    log(f"[train] wrote {metrics_out} (+ .prom)")
             if mgr is not None:
                 mgr.save(i + 1, state, metrics=m)
     if mgr is not None:
@@ -110,9 +140,18 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--numerics", action="store_true",
+                    help="per-layer quantization-error + teacher-student "
+                    "divergence probes on the train step (the optimizer "
+                    "math is bitwise unchanged)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a repro.obs.metrics/v1 snapshot here at "
+                    "every eval interval (implies --numerics)")
     args = ap.parse_args()
     _, history = train(args.arch, args.smoke, args.steps, args.lr,
-                       args.method, args.batch, args.seq, args.ckpt_dir)
+                       args.method, args.batch, args.seq, args.ckpt_dir,
+                       numerics=args.numerics or bool(args.metrics_out),
+                       metrics_out=args.metrics_out)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(history, f, indent=1)

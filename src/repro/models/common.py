@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import numerics as obs_numerics
+
 
 @dataclasses.dataclass(frozen=True)
 class ParamSpec:
@@ -165,22 +167,39 @@ def scan_layers(body_fn, carry, stacked_params, stacked_xs, qcfg,
     n = leaves[0].shape[0]
     skip_first = min(skip_first, n)
     skip_last = min(skip_last, n - skip_first)
-    bounds = [(0, skip_first, BF16), (skip_first, n - skip_last, qcfg),
-              (n - skip_last, n, BF16)]
+    # numerics probes: only when the policy opts in AND a tape is
+    # installed (both trace-time checks — the off path is unchanged).
+    # Skip segments keep the numerics flag so per-layer probes that are
+    # not quantization-gated (the decoder's hidden-state tap) still
+    # cover BF16 layers; quant probes stay silent there because
+    # ``quantizes()`` is False.
+    tape = obs_numerics.active() if getattr(qcfg, "numerics", False) else None
+    skip_qc = (dataclasses.replace(BF16, numerics=True)
+               if tape is not None else BF16)
+    bounds = [(0, skip_first, skip_qc), (skip_first, n - skip_last, qcfg),
+              (n - skip_last, n, skip_qc)]
 
-    ys_all = []
+    ys_all, probes_all = [], []
     for lo, hi, qc in bounds:
         if hi <= lo:
             continue
         seg_p = jax.tree.map(lambda a: a[lo:hi], stacked_params)
         seg_x = jax.tree.map(lambda a: a[lo:hi], stacked_xs) if stacked_xs is not None else None
         fn = body_fn(qc)
+        if tape is not None:
+            fn = _probe_scoped(fn, tape)
         if remat != "none":
             policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
                       if remat == "dots" else None)
             fn = jax.checkpoint(fn, policy=policy)
         carry, ys = jax.lax.scan(fn, carry, (seg_p, seg_x))
+        if tape is not None:
+            ys, probes = ys
+            probes_all.append((probes, hi - lo))
         ys_all.append(ys)
+    if tape is not None:
+        for site, stats in _merge_probes(probes_all).items():
+            tape.put(f"layers.{site}", stats)
     if not any(jax.tree.leaves(y) for y in ys_all):
         ys = None
     elif len(ys_all) > 1:
@@ -188,3 +207,50 @@ def scan_layers(body_fn, carry, stacked_params, stacked_xs, qcfg,
     else:
         ys = ys_all[0]
     return carry, ys
+
+
+def _probe_scoped(fn, tape):
+    """Ride the layer body's numerics probes out through the scan ``ys``.
+
+    Pushes a tape scope around each body trace so per-layer probe puts
+    stay separable from the enclosing forward's, then returns them as an
+    extra ``ys`` component: ``jax.lax.scan`` stacks each probe scalar
+    into a per-layer ``[seg_len]`` series.  Composes with
+    ``jax.checkpoint`` (applied outside): the backward retrace pushes and
+    pops its own balanced scope.
+    """
+    def wrapped(carry, inp):
+        tape.push_scope()
+        try:
+            carry, y = fn(carry, inp)
+        finally:
+            probes = tape.pop_scope()
+        return carry, (y, probes)
+    return wrapped
+
+
+def _merge_probes(segs):
+    """Key-union merge of per-segment scan probes into [n_layers] series.
+
+    ``segs``: list of ``(probes_dict, seg_len)`` in layer order.  BF16
+    skip segments record no quant probes, so sites missing from a
+    segment are NaN-filled for its layers — the host-side recorder
+    treats NaN as "layer not probed" and the per-layer series keeps a
+    stable length of ``n_layers``.
+    """
+    sites = sorted({s for d, _ in segs for s in d})
+    out = {}
+    for site in sites:
+        stats = sorted({k for d, _ in segs if site in d for k in d[site]})
+        out[site] = {}
+        for st in stats:
+            first = next(d[site][st] for d, _ in segs
+                         if site in d and st in d[site])
+            rest = first.shape[1:]
+            parts = [d[site][st].astype(jnp.float32) if site in d
+                     and st in d[site]
+                     else jnp.full((ln, *rest), jnp.nan, jnp.float32)
+                     for d, ln in segs]
+            out[site][st] = (jnp.concatenate(parts, 0) if len(parts) > 1
+                             else parts[0])
+    return out

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.qconfig import QuantConfig
 from repro.distributed.ctx import cst
+from repro.obs import numerics as obs_numerics
 
 from . import attention as attn
 from . import common, layers
@@ -209,7 +210,14 @@ def apply(cfg, params, batch, qcfg: QuantConfig, output: str = "logits"):
         def fn(carry, inp):
             p, _ = inp
             y, _, aux = _block(qc, cfg, p, carry, pos, "train", None, None)
-            return cst(y, ("batch", "seq", "none")), aux
+            y = cst(y, ("batch", "seq", "none"))
+            if qc.numerics:
+                # per-layer hidden-state tap: scan_layers stacks these
+                # into [n_layers, B, S, d] for teacher-student geometry
+                tape = obs_numerics.active()
+                if tape is not None:
+                    tape.put("hidden", {"h": y})
+            return y, aux
         return fn
 
     x, _ = common.scan_layers(body, x, params["layers"], None, qcfg,

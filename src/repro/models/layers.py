@@ -24,6 +24,7 @@ from repro.distributed import ctx
 from repro.distributed.ctx import cst
 from repro.kernels import ops
 from repro.obs import dispatch as obs_dispatch
+from repro.obs import numerics as obs_numerics
 
 
 # ---------------------------------------------------------------------------
@@ -66,6 +67,12 @@ def qeinsum(qcfg: QuantConfig, kind: str, eq: str, x: jax.Array, w,
     rec = obs_dispatch.active()   # non-None only while tracing under an
     #                               engine step with metrics on — compiled
     #                               replays never re-enter this Python
+    if qcfg.numerics and isinstance(wr, PackedNVFP4):
+        # packed weights bypass q_weight (already on the E2M1 grid), so
+        # their scale-structure probe lives at the dispatch point
+        tape = obs_numerics.active()
+        if tape is not None:
+            tape.put(f"{kind}.w", obs_numerics.packed_weight_stats(wr))
     if isinstance(wr, PackedNVFP4):
         if (wr.ndim == 3 and contract_axis == 1 and eq == _MOE_EQ
                 and qcfg.packed_backend == "grouped" and not ctx.active()):

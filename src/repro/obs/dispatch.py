@@ -68,6 +68,12 @@ class DispatchRecorder:
             "fused/primitive Pallas kernel wrapper dispatches "
             "(counted once per compiled specialization)",
             labels=("kernel",))
+        self._compiles = registry.counter(
+            "jit_compiles_total",
+            "engine entry points whose call (re)traced — dispatch "
+            "counters moved during the call, i.e. jit compiled a new "
+            "specialization",
+            labels=("fn",))
 
     def gemm(self, backend: str, weight_bytes: int = 0) -> None:
         self._gemm.labels(backend=backend).inc()
@@ -76,3 +82,18 @@ class DispatchRecorder:
 
     def kernel(self, name: str) -> None:
         self._kernel.labels(kernel=name).inc()
+
+    def compiled(self, fn: str) -> None:
+        self._compiles.labels(fn=fn).inc()
+
+    def gemm_total(self) -> float:
+        """Sum of all qeinsum dispatch counts so far.
+
+        The counts only ever move while jax traces, so an engine can
+        snapshot this around a step's jitted call: a nonzero delta means
+        that call (re)compiled — the recompile tripwire behind
+        ``jit_compiles_total{fn=...}``."""
+        children = getattr(self._gemm, "_children", None)
+        if not children:
+            return 0.0
+        return sum(c.value for c in children.values())

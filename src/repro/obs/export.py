@@ -59,7 +59,72 @@ def metrics_snapshot(engine) -> dict:
         },
         "state": engine.state.stats(),
         "metrics": engine.obs.metrics.snapshot(),
+        **_numerics_section(getattr(engine, "numerics", None)),
     }
+
+
+def _numerics_section(recorder) -> dict:
+    """Optional ``numerics`` key from a NumericsRecorder (or nothing)."""
+    if recorder is None:
+        return {}
+    return {"numerics": recorder.summary()}
+
+
+def training_snapshot(step: int, registry, *, recorder=None,
+                      tokens: int = 0, evals: dict | None = None) -> dict:
+    """A ``repro.obs.metrics/v1`` document for a QAD training run.
+
+    Same schema as the serving export (``engine.kind`` is ``"train"``;
+    serving-only sections carry their explicit "no data" shapes — null
+    latencies, ``speculative.enabled: false``), so one validator and one
+    differ cover both producers.
+    """
+    return {
+        "schema": SCHEMA,
+        "engine": {
+            "kind": "train",
+            "steps": int(step),
+            "decode_steps": 0,
+            "requests_finished": 0,
+            "fused_kernels": "off",
+            "packed_backend": "n/a",
+        },
+        "throughput": {
+            "tokens_generated": int(tokens),
+            "prefill_tokens": 0,
+            "prefill_s": 0.0,
+            "decode_s": 0.0,
+            "decode_tok_s": None,
+            "e2e_tok_s": None,
+        },
+        "latency": {k: None for k in _LATENCY_KEYS},
+        "speculative": {
+            "enabled": False,
+            "acceptance_rate": None,
+            "accepted_per_step": None,
+            "drafted_tokens": 0,
+            "accepted_tokens": 0,
+            "rolled_back_tokens": 0,
+            "draft_mode": None,
+            "spec_k": None,
+        },
+        "state": dict(evals or {}),
+        "metrics": registry.snapshot(),
+        **_numerics_section(recorder),
+    }
+
+
+def write_training_metrics(path: str, step: int, registry, *, recorder=None,
+                           tokens: int = 0, evals: dict | None = None) -> dict:
+    """Write a training snapshot to ``path`` (+ sibling ``.prom``)."""
+    snap = training_snapshot(step, registry, recorder=recorder,
+                             tokens=tokens, evals=evals)
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2)
+    prom = path.rsplit(".", 1)[0] + ".prom" if "." in path else path + ".prom"
+    with open(prom, "w") as f:
+        f.write(registry.to_prometheus())
+    return snap
 
 
 def _prom_value(v) -> str:

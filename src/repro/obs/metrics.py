@@ -112,15 +112,12 @@ class Counter:
         return lines
 
 
-class Gauge:
-    """Last-write-wins instantaneous value."""
+class _GaugeChild:
+    """One labeled gauge cell — the hot-path handle."""
 
-    kind = "gauge"
-    __slots__ = ("name", "help", "value")
+    __slots__ = ("value",)
 
-    def __init__(self, name: str, help: str = ""):
-        self.name = name
-        self.help = help
+    def __init__(self):
         self.value = 0.0
 
     def set(self, v: float) -> None:
@@ -129,13 +126,60 @@ class Gauge:
     def inc(self, n: float = 1.0) -> None:
         self.value += n
 
+
+class Gauge:
+    """Last-write-wins instantaneous value, optionally labeled.
+
+    Labeled gauges (``labels=("layer",)``) mirror labeled counters: bind
+    a child once with ``g.labels(layer="mlp.act")`` and ``set()`` the
+    child.  Children export sorted by label key, so per-layer series
+    keep a stable order in both JSON and Prometheus text.
+    """
+
+    kind = "gauge"
+    __slots__ = ("name", "help", "label_names", "value", "_children")
+
+    def __init__(self, name: str, help: str = "", label_names: tuple = ()):
+        self.name = name
+        self.help = help
+        self.label_names = tuple(label_names)
+        self.value = 0.0
+        self._children: dict[tuple, _GaugeChild] = {}
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def labels(self, **kv) -> _GaugeChild:
+        key = tuple(kv[n] for n in self.label_names)
+        child = self._children.get(key)
+        if child is None:
+            child = self._children[key] = _GaugeChild()
+        return child
+
     def snapshot(self) -> dict:
-        return {"kind": self.kind, "help": self.help, "value": self.value}
+        d = {"kind": self.kind, "help": self.help}
+        if self.label_names:
+            d["labels"] = [
+                {"labels": dict(zip(self.label_names, key)), "value": c.value}
+                for key, c in sorted(self._children.items())]
+        else:
+            d["value"] = self.value
+        return d
 
     def prometheus(self) -> list:
-        return [f"# HELP {self.name} {self.help}",
-                f"# TYPE {self.name} gauge",
-                f"{self.name} {self.value:g}"]
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} gauge"]
+        if self.label_names:
+            for key, c in sorted(self._children.items()):
+                lines.append(f"{self.name}"
+                             f"{_fmt_labels(self.label_names, key)}"
+                             f" {c.value:g}")
+        else:
+            lines.append(f"{self.name} {self.value:g}")
+        return lines
 
 
 class Histogram:
@@ -145,13 +189,16 @@ class Histogram:
     kind = "histogram"
     QUANTILES = (50.0, 90.0, 95.0, 99.0)
     __slots__ = ("name", "help", "cap", "count", "sum", "min", "max",
-                 "reservoir", "_rng")
+                 "reservoir", "_rng", "label_names", "_children")
 
-    def __init__(self, name: str, help: str = "", cap: int = 512):
+    def __init__(self, name: str, help: str = "", cap: int = 512,
+                 label_names: tuple = ()):
         if cap < 1:
             raise ValueError(f"histogram cap must be >= 1, got {cap}")
         self.name = name
         self.help = help
+        self.label_names = tuple(label_names)
+        self._children: dict[tuple, "Histogram"] = {}
         self.cap = int(cap)
         self.count = 0
         self.sum = 0.0
@@ -188,16 +235,51 @@ class Histogram:
         """q-th percentile of the reservoir, or None with no samples."""
         return _percentile(sorted(self.reservoir), q)
 
-    def snapshot(self) -> dict:
+    def labels(self, **kv) -> "Histogram":
+        """Bind (once) a labeled child histogram — a full reservoir per
+        label set.  The child's name embeds the label key so its
+        deterministic reservoir seed differs per child."""
+        key = tuple(kv[n] for n in self.label_names)
+        child = self._children.get(key)
+        if child is None:
+            child = self._children[key] = Histogram(
+                self.name + "{" + ",".join(map(str, key)) + "}",
+                self.help, self.cap)
+        return child
+
+    def _stats(self) -> dict:
         s = sorted(self.reservoir)
-        return {"kind": self.kind, "help": self.help, "count": self.count,
-                "sum": self.sum, "min": self.min, "max": self.max,
+        return {"count": self.count, "sum": self.sum,
+                "min": self.min, "max": self.max,
                 **{f"p{q:g}": _percentile(s, q) for q in self.QUANTILES}}
+
+    def snapshot(self) -> dict:
+        d = {"kind": self.kind, "help": self.help}
+        if self.label_names:
+            d["labels"] = [
+                {"labels": dict(zip(self.label_names, key)), **c._stats()}
+                for key, c in sorted(self._children.items())]
+            return d
+        return {**d, **self._stats()}
 
     def prometheus(self) -> list:
         # exported summary-style: quantiles + _sum/_count
         lines = [f"# HELP {self.name} {self.help}",
                  f"# TYPE {self.name} summary"]
+        if self.label_names:
+            for key, c in sorted(self._children.items()):
+                s = sorted(c.reservoir)
+                for q in self.QUANTILES:
+                    v = _percentile(s, q)
+                    if v is not None:
+                        lines.append(
+                            f"{self.name}"
+                            f"{_fmt_labels((*self.label_names, 'quantile'), (*key, f'{q / 100.0:g}'))}"
+                            f" {v:g}")
+                lbl = _fmt_labels(self.label_names, key)
+                lines.append(f"{self.name}_sum{lbl} {c.sum:g}")
+                lines.append(f"{self.name}_count{lbl} {c.count}")
+            return lines
         s = sorted(self.reservoir)
         for q in self.QUANTILES:
             v = _percentile(s, q)
@@ -229,12 +311,12 @@ class MetricsRegistry:
                 labels: tuple = ()) -> Counter:
         return self._get(name, lambda: Counter(name, help, labels), "counter")
 
-    def gauge(self, name: str, help: str = "") -> Gauge:
-        return self._get(name, lambda: Gauge(name, help), "gauge")
+    def gauge(self, name: str, help: str = "", labels: tuple = ()) -> Gauge:
+        return self._get(name, lambda: Gauge(name, help, labels), "gauge")
 
-    def histogram(self, name: str, help: str = "",
-                  cap: int = 512) -> Histogram:
-        return self._get(name, lambda: Histogram(name, help, cap),
+    def histogram(self, name: str, help: str = "", cap: int = 512,
+                  labels: tuple = ()) -> Histogram:
+        return self._get(name, lambda: Histogram(name, help, cap, labels),
                          "histogram")
 
     def get(self, name: str):
@@ -284,10 +366,11 @@ class NoopRegistry:
     def counter(self, name: str, help: str = "", labels: tuple = ()):
         return NOOP_INSTRUMENT
 
-    def gauge(self, name: str, help: str = ""):
+    def gauge(self, name: str, help: str = "", labels: tuple = ()):
         return NOOP_INSTRUMENT
 
-    def histogram(self, name: str, help: str = "", cap: int = 512):
+    def histogram(self, name: str, help: str = "", cap: int = 512,
+                  labels: tuple = ()):
         return NOOP_INSTRUMENT
 
     def get(self, name: str):

@@ -1,0 +1,289 @@
+"""Numerics observability: quantization-error and divergence probes.
+
+Where ``repro.obs.metrics``/``trace`` observe *time* (latency histograms,
+lifecycle spans), this plane observes *values*: per-layer NVFP4
+quantization error (SQNR, amax, clip fraction, scale utilization),
+per-layer teacher-student hidden-state geometry (cosine / MSE), and live
+teacher-student KL from the serving engines' shadow-teacher mode.
+
+The collection mechanism is ``jax.pure_callback``-free and rides the
+same trace-time property the dispatch counters use: instrumented
+call-sites (``QuantConfig.q_act`` / ``q_weight``, ``layers.qeinsum``,
+the decoder layer body) run Python only while jax traces.  A ``Tape``
+installed with ``collecting(tape)`` for the dynamic extent of a traced
+function accumulates *traced* jnp scalars keyed by site name; the traced
+function itself drains the tape into its own outputs (an aux pytree),
+so the probe values are ordinary jit outputs — no callbacks, no host
+syncs inside compiled code, and with probes off (``qcfg.numerics`` is
+False, the default) **zero** extra operations enter the jaxpr, which is
+what makes the off-path bitwise identical by construction.
+
+Per-layer collection under ``jax.lax.scan`` is handled by
+``models.common.scan_layers``: it pushes a tape scope around the layer
+body, rides the per-layer probe dicts out through the scan ``ys``
+(stacking scalars into ``[n_layers]`` series), and key-union-merges the
+BF16 skip segments (which record no quant probes) with NaN fill.
+
+Host side, ``NumericsRecorder`` aggregates drained aux pytrees into the
+PR 8 ``MetricsRegistry`` as ``layer=``-labeled gauges/histograms plus
+chart-ready ``(step, value)`` series (``qad_live_kl`` vs
+``spec_accept_rate``).  ``python -m repro.obs.numerics A.json B.json``
+diffs two exported snapshots (see ``repro.obs.compare``).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+
+from ..core import nvfp4
+
+_tape = None
+
+
+def active():
+    """The installed numerics Tape, or None (the common fast path)."""
+    return _tape
+
+
+@contextmanager
+def collecting(tape):
+    """Install ``tape`` as the active probe tape for the block.
+
+    Enter/exit run at *trace* time when used inside a function under
+    ``jax.jit`` — which is exactly right: probe ``put`` calls only
+    happen while tracing, and the traced function drains the tape into
+    its own outputs before returning.
+    """
+    global _tape
+    prev = _tape
+    _tape = tape
+    try:
+        yield tape
+    finally:
+        _tape = prev
+
+
+class Tape:
+    """Scoped trace-time probe store: site name -> {stat: traced scalar}.
+
+    Scopes nest (``scan_layers`` pushes one around the layer body so the
+    per-layer probes stay separable from the surrounding forward).
+    Duplicate site names within a scope auto-dedup with ``#2``, ``#3``
+    suffixes — deterministic, because tracing is deterministic.
+    """
+
+    def __init__(self):
+        self._scopes = [{}]
+
+    def push_scope(self) -> None:
+        self._scopes.append({})
+
+    def pop_scope(self) -> dict:
+        return self._scopes.pop()
+
+    def put(self, site: str, stats: dict) -> None:
+        scope = self._scopes[-1]
+        name, i = site, 1
+        while name in scope:
+            i += 1
+            name = f"{site}#{i}"
+        scope[name] = stats
+
+    def drain(self) -> dict:
+        """Return and clear the current scope's contents."""
+        out = self._scopes[-1]
+        self._scopes[-1] = {}
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Probe math (pure jnp, traced — these become part of the jit output)
+# ---------------------------------------------------------------------------
+
+
+def quant_error_stats(x: jax.Array, tensor_amax=None) -> dict:
+    """NVFP4 quantization-error stats for ``x``, blocked along the last dim.
+
+    Returns traced f32 scalars:
+
+      * ``sqnr_db``    — 10·log10(Σx² / Σ(x - qdq(x))²), the signal-to-
+        quantization-noise ratio of this tensor on the E2M1 grid
+      * ``amax``       — max |x| (the dynamic-range driver of s_tensor)
+      * ``clip_frac``  — fraction of elements whose magnitude exceeds
+        what their block's (FP8-rounded) scale can represent
+      * ``scale_util`` — mean block scale / E4M3_MAX, how much of the
+        FP8 scale range the block scales occupy
+
+    ``tensor_amax`` mirrors the ``q_act`` scoping argument (row/token
+    scope or calibrated scales) so the probe measures the *same*
+    quantization the layer actually applies.
+    """
+    xf = x.astype(jnp.float32)
+    k = xf.shape[-1]
+    pad = (-k) % nvfp4.BLOCK
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, pad)])
+    scales = nvfp4.compute_scales(xf, tensor_amax)
+    q = nvfp4.quantize_blocked(xf, scales)
+    s = (scales.block * scales.tensor)[..., None]
+    y = (q * s).reshape(xf.shape)
+    err = xf - y
+    sig = jnp.sum(xf * xf)
+    noise = jnp.sum(err * err)
+    sqnr_db = 10.0 * (jnp.log10(jnp.maximum(sig, 1e-30))
+                      - jnp.log10(jnp.maximum(noise, 1e-30)))
+    cap = (scales.block * scales.tensor) * nvfp4.E2M1_MAX
+    xb = jnp.abs(xf).reshape(*xf.shape[:-1], xf.shape[-1] // nvfp4.BLOCK,
+                             nvfp4.BLOCK)
+    clip_frac = jnp.mean((xb > cap[..., None]).astype(jnp.float32))
+    return {
+        "sqnr_db": sqnr_db,
+        "amax": jnp.max(jnp.abs(xf)),
+        "clip_frac": clip_frac,
+        "scale_util": jnp.mean(scales.block) / nvfp4.E4M3_MAX,
+    }
+
+
+def packed_weight_stats(p: "nvfp4.PackedNVFP4") -> dict:
+    """Probe stats for an already-packed weight.
+
+    The original BF16 values are gone, so no SQNR — what remains
+    observable is the stored scale structure: the reconstructed amax
+    (max block scale × tensor scale × E2M1_MAX) and the FP8 scale-range
+    utilization.  Genuine weight SQNR belongs to the training path
+    (dense master weights) and the PTQ report.
+    """
+    sb = p.scales.astype(jnp.float32)
+    ts = p.tensor_scale
+    return {
+        "amax": jnp.max(sb * ts) * nvfp4.E2M1_MAX,
+        "scale_util": jnp.mean(sb) / nvfp4.E4M3_MAX,
+    }
+
+
+def hidden_divergence(h_t: jax.Array, h_s: jax.Array,
+                      mask: jax.Array) -> dict:
+    """Per-layer teacher-student hidden-state geometry.
+
+    ``h_t`` / ``h_s``: stacked per-layer hiddens ``[L, B, S, d]`` (the
+    ``layers.hidden`` probe merged by ``scan_layers``); ``mask``
+    ``[B, S]`` float, 1 = real token.  Returns ``[L]`` f32 series:
+    masked-mean per-token cosine similarity and per-dim MSE — the
+    "internal geometry" view of where the NVFP4 student diverges.
+    """
+    t = h_t.astype(jnp.float32)
+    s = h_s.astype(jnp.float32)
+    m = mask.astype(jnp.float32)[None]                       # [1, B, S]
+    denom = jnp.maximum(jnp.sum(m, axis=(1, 2)), 1.0)        # [L]
+    dot = jnp.sum(t * s, axis=-1)
+    nt = jnp.sqrt(jnp.maximum(jnp.sum(t * t, axis=-1), 1e-12))
+    ns = jnp.sqrt(jnp.maximum(jnp.sum(s * s, axis=-1), 1e-12))
+    cos = jnp.sum((dot / (nt * ns)) * m, axis=(1, 2)) / denom
+    mse = jnp.sum(jnp.mean((t - s) ** 2, axis=-1) * m, axis=(1, 2)) / denom
+    return {"hidden_cos": cos, "hidden_mse": mse}
+
+
+# ---------------------------------------------------------------------------
+# Host-side aggregation into the registry
+# ---------------------------------------------------------------------------
+
+_STAT_HELP = {
+    "sqnr_db": "per-layer signal-to-quantization-noise ratio, dB",
+    "amax": "per-layer activation/weight amax",
+    "clip_frac": "per-layer fraction of values clipped by the block scale",
+    "scale_util": "per-layer mean FP8 block-scale / E4M3_MAX",
+    "hidden_cos": "per-layer teacher-student hidden cosine similarity",
+    "hidden_mse": "per-layer teacher-student hidden MSE",
+    "grad_norm": "per-layer student gradient norm",
+    "kl": "teacher-student KL at the probe site",
+    "top1_agree": "teacher-student top-1 agreement at the probe site",
+}
+
+# stats exported as layer=-labeled reservoir histograms rather than
+# last-write gauges (the ISSUE's "scale-utilization histograms")
+_HIST_STATS = ("scale_util",)
+
+
+class NumericsRecorder:
+    """Aggregates drained probe aux into a MetricsRegistry.
+
+    ``record(aux)`` takes the host-side pytree a jitted probe-carrying
+    function returned: ``{site: {stat: scalar | [n_layers] array}}``.
+    Per-layer arrays expand into one ``layer="<site>.<ii>"``-labeled
+    series per index (zero-padded, so sorted label order == layer
+    order); NaN entries (BF16 skip segments) are dropped, not recorded.
+    ``series_point`` accumulates the chart-ready ``(step, value)``
+    series (``qad_live_kl``, ``spec_accept_rate``) that the snapshot's
+    ``numerics`` section exports.
+    """
+
+    def __init__(self, registry):
+        self._reg = registry
+        self._gauges: dict = {}
+        self._hists: dict = {}
+        self.last: dict = {}          # flattened site -> {stat: float}
+        self.series: dict = {}        # name -> [[step, value], ...]
+        self.records = 0              # record() calls (sampled steps seen)
+
+    def _instrument(self, stat: str):
+        if stat in _HIST_STATS:
+            h = self._hists.get(stat)
+            if h is None:
+                h = self._hists[stat] = self._reg.histogram(
+                    f"numerics_{stat}", _STAT_HELP.get(stat, ""),
+                    labels=("layer",))
+            return h, "observe"
+        g = self._gauges.get(stat)
+        if g is None:
+            g = self._gauges[stat] = self._reg.gauge(
+                f"numerics_{stat}", _STAT_HELP.get(stat, ""),
+                labels=("layer",))
+        return g, "set"
+
+    def _record_one(self, site: str, stat: str, value: float) -> None:
+        if value != value:            # NaN: layer not probed (BF16 segment)
+            return
+        inst, method = self._instrument(stat)
+        getattr(inst.labels(layer=site), method)(value)
+        self.last.setdefault(site, {})[stat] = value
+
+    def record(self, aux: dict) -> None:
+        import numpy as np
+
+        for site in sorted(aux):
+            for stat in sorted(aux[site]):
+                arr = np.asarray(aux[site][stat], dtype=np.float64)
+                if arr.ndim == 0:
+                    self._record_one(site, stat, float(arr))
+                else:
+                    for i, v in enumerate(arr.reshape(-1).tolist()):
+                        self._record_one(f"{site}.{i:03d}", stat, float(v))
+        self.records += 1
+
+    def series_point(self, name: str, step: int, value) -> None:
+        if value is None or value != value:
+            return
+        self.series.setdefault(name, []).append([int(step), float(value)])
+
+    def summary(self) -> dict:
+        """The snapshot document's ``numerics`` section."""
+        sqnr = [s["sqnr_db"] for s in self.last.values() if "sqnr_db" in s]
+        return {
+            "sampled_records": self.records,
+            "per_layer": {site: dict(sorted(stats.items()))
+                          for site, stats in sorted(self.last.items())},
+            "series": {k: list(v) for k, v in sorted(self.series.items())},
+            "sqnr_db_min": min(sqnr) if sqnr else None,
+            "sqnr_db_mean": (sum(sqnr) / len(sqnr)) if sqnr else None,
+        }
+
+
+def main(argv=None) -> int:
+    from . import compare
+    return compare.main(argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

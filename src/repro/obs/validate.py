@@ -80,8 +80,87 @@ def check_trace(doc: dict, expect_spec: bool = False) -> list:
 
 def check_metrics(doc: dict, expect_spec: bool = False) -> list:
     errs = validate(doc, load_schema("metrics"))
-    if not errs and expect_spec and not doc["speculative"]["enabled"]:
+    if errs:
+        return errs
+    if expect_spec and not doc["speculative"]["enabled"]:
         errs.append("$.speculative.enabled: expected true (--expect-spec)")
+    errs.extend(_check_instruments(doc.get("metrics", {})))
+    if "numerics" in doc:
+        errs.extend(_check_numerics(doc["numerics"]))
+    return errs
+
+
+_INSTRUMENT_KINDS = ("counter", "gauge", "histogram")
+
+
+def _check_instruments(metrics: dict) -> list:
+    """Grammar over instrument snapshots, incl. labeled series.
+
+    Unlabeled counters/gauges carry ``value`` (histograms ``count``);
+    labeled instruments instead carry ``labels``: a list of cells, each
+    with a string-valued ``labels`` object plus the same payload — in
+    stable sorted label order with no duplicate label sets (the
+    per-layer export contract)."""
+    errs = []
+    for name, inst in sorted(metrics.items()):
+        p = f"$.metrics.{name}"
+        if not isinstance(inst, dict) or inst.get("kind") \
+                not in _INSTRUMENT_KINDS:
+            errs.append(f"{p}: not an instrument snapshot")
+            continue
+        payload = ("value" if inst["kind"] in ("counter", "gauge")
+                   else "count")
+        if "labels" not in inst:
+            if payload not in inst:
+                errs.append(f"{p}: {inst['kind']} missing {payload!r}")
+            continue
+        if not isinstance(inst["labels"], list):
+            errs.append(f"{p}.labels: expected a list of labeled cells")
+            continue
+        keys = []
+        for i, cell in enumerate(inst["labels"]):
+            cp = f"{p}.labels[{i}]"
+            if not isinstance(cell, dict) \
+                    or not isinstance(cell.get("labels"), dict):
+                errs.append(f"{cp}: labeled cell needs a 'labels' object")
+                continue
+            if not all(isinstance(v, str) for v in cell["labels"].values()):
+                errs.append(f"{cp}: label values must be strings")
+            if payload not in cell:
+                errs.append(f"{cp}: {inst['kind']} cell missing {payload!r}")
+            keys.append(tuple(cell["labels"].values()))
+        if keys != sorted(keys):
+            errs.append(f"{p}.labels: cells not in sorted label order")
+        if len(set(keys)) != len(keys):
+            errs.append(f"{p}.labels: duplicate label sets")
+    return errs
+
+
+def _check_numerics(num) -> list:
+    """Semantic checks the JSON-schema subset can't express: chart
+    series are [step, value] pairs with non-decreasing steps, per-layer
+    stats are flat numeric dicts."""
+    errs = []
+    for name, pts in sorted((num.get("series") or {}).items()):
+        sp = f"$.numerics.series.{name}"
+        if not isinstance(pts, list) or any(
+                not (isinstance(pt, list) and len(pt) == 2
+                     and isinstance(pt[0], int)
+                     and isinstance(pt[1], (int, float))
+                     and not isinstance(pt[1], bool))
+                for pt in pts):
+            errs.append(f"{sp}: expected a list of [step, value] pairs")
+            continue
+        steps = [pt[0] for pt in pts]
+        if steps != sorted(steps):
+            errs.append(f"{sp}: steps must be non-decreasing")
+    for site, stats in sorted((num.get("per_layer") or {}).items()):
+        if not isinstance(stats, dict) or not all(
+                v is None or (isinstance(v, (int, float))
+                              and not isinstance(v, bool))
+                for v in stats.values()):
+            errs.append(f"$.numerics.per_layer.{site}: stats must be "
+                        "numbers (or null)")
     return errs
 
 

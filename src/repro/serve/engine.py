@@ -29,17 +29,20 @@ co-scheduled traffic.
 from __future__ import annotations
 
 import dataclasses
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.qconfig import BF16
 from repro.distributed import ctx as shd_ctx
 from repro.models import common, decoder
 from repro.models.registry import get_model
 from repro.obs import NOOP as OBS_NOOP
 from repro.obs import dispatch as obs_dispatch
+from repro.obs import numerics as obs_numerics
 from repro.obs.trace import request_tid
 
 from . import state as state_mod
@@ -74,7 +77,7 @@ class Engine:
                  prefill_mode: str = "exact", prefill_chunk: int = 8,
                  prefill_budget: int | None = None, eos_id: int | None = None,
                  mesh=None, rules=None, fused_kernels: str = "auto",
-                 obs=None):
+                 obs=None, shadow_teacher=None, shadow_rate: float = 0.0):
         # refuse unservable configs before touching params or quant policy
         plan = state_mod.check_supported(cfg)
         self.state_plan = plan
@@ -212,6 +215,31 @@ class Engine:
             "wall time of one batched decode (or draft+verify) step")
         self._m_state_capacity.set(self.state.occupancy()[1])
 
+        # --- numerics shadow-teacher (repro.obs.numerics) ------------------
+        # Opt-in live divergence probe: on a deterministically sampled
+        # fraction of decode steps, re-forward each running request's FULL
+        # context through the BF16 teacher AND the quantized student
+        # (stateless — never touches the serving caches, so token streams
+        # are identical with the shadow on or off) and record per-request
+        # KL / top-1 agreement plus per-layer hidden-state divergence and
+        # quantization-error stats.  Cost is O(context) per sampled step.
+        self.shadow_teacher = shadow_teacher
+        self.shadow_rate = float(shadow_rate)
+        self.shadow_steps = 0
+        self.shadow_s = 0.0
+        self.numerics = None
+        self._shadow_fn = None
+        if shadow_teacher is not None and self.shadow_rate > 0.0:
+            self._shadow_every = max(1, round(1.0 / self.shadow_rate))
+            self.numerics = obs_numerics.NumericsRecorder(self.obs.metrics)
+            self._shadow_fn = self._build_shadow()
+
+        # recompile tripwire: dispatch counters only move while jax traces,
+        # so a nonzero qeinsum-counter delta across the decode call means
+        # jit compiled a new specialization (see DispatchRecorder.gemm_total)
+        self._recompile_warned = False
+        self._steady_after = 4          # decode steps before warning
+
     # -- TP plumbing -------------------------------------------------------
 
     def _traced(self, fn, *args, **kw):
@@ -279,7 +307,10 @@ class Engine:
     def _step_impl(self) -> list[Request]:
         finished: list[Request] = []
         self._do_prefills(finished)
+        reqs = self.sched.running() if self.numerics is not None else ()
         self._do_decode(finished)
+        if reqs and self.decode_steps % self._shadow_every == 0:
+            self._run_shadow(reqs)
         self.step_count += 1
         return finished
 
@@ -468,7 +499,8 @@ class Engine:
             idxs[s] = len(r.output)
         with self.obs.trace.annotate("engine.decode_step",
                                      n_active=len(reqs)):
-            logits = self.state.decode(reqs, toks, lens, active)
+            logits = self._compile_watch(
+                "decode", lambda: self.state.decode(reqs, toks, lens, active))
             sampled = np.asarray(self._sample(logits[:, 0, :],
                                               jnp.asarray(temps),
                                               jnp.asarray(topks),
@@ -498,6 +530,118 @@ class Engine:
             used, cap = self.state.occupancy()
             self._m_state_used.set(used)
             self._m_state_capacity.set(cap)
+
+    def _compile_watch(self, fn_name: str, thunk):
+        """Run ``thunk`` watching for a (re)compile of its jitted call.
+
+        The qeinsum dispatch counters advance only while jax TRACES, so a
+        delta across the call means jit compiled a new specialization:
+        count it under ``jit_compiles_total{fn=...}`` and — once, past
+        warmup — warn that the steady-state loop is retracing (a shape or
+        dtype leak into a traced argument, the classic silent perf cliff).
+        """
+        rec = self.obs.dispatch
+        if rec is None:
+            return thunk()
+        before = rec.gemm_total()
+        out = thunk()
+        if rec.gemm_total() > before:
+            rec.compiled(fn_name)
+            if self.decode_steps >= self._steady_after \
+                    and not self._recompile_warned:
+                self._recompile_warned = True
+                print(f"[repro.obs] warning: {fn_name!r} recompiled at "
+                      f"decode step {self.decode_steps} — a steady-state "
+                      "engine loop should replay one compiled "
+                      "specialization (check for shape/dtype churn in "
+                      "traced arguments)", file=sys.stderr)
+        return out
+
+    # -- numerics shadow-teacher -------------------------------------------
+
+    def _live_acceptance(self):
+        """Speculative acceptance so far, or None (plain engine / no
+        drafts).  The shadow probe cross-plots this against live KL."""
+        return None
+
+    def _build_shadow(self):
+        """One jitted shadow evaluator (retraces per context bucket).
+
+        Teacher = BF16 forward of ``shadow_teacher`` params; student = the
+        serving quantization policy over the engine's (packed) params.
+        Both run with ``numerics=True`` under local Tapes, so the drained
+        aux rides out of jit as ordinary outputs — per-layer hidden taps
+        from both sides feed ``hidden_divergence``, the student's
+        quant-error probes pass through, and the last valid position
+        yields KL(teacher || student) and top-1 agreement.
+        """
+        t_qc = dataclasses.replace(BF16, numerics=True)
+        s_qc = dataclasses.replace(self.sq, numerics=True)
+
+        def fn(t_params, s_params, batch, n_valid):
+            t_tape = obs_numerics.Tape()
+            with obs_numerics.collecting(t_tape):
+                t_logits = self.model.apply(self.cfg, t_params, batch, t_qc)
+            t_aux = t_tape.drain()
+            s_tape = obs_numerics.Tape()
+            with obs_numerics.collecting(s_tape):
+                s_logits = self.model.apply(self.cfg, s_params, batch, s_qc)
+            s_aux = s_tape.drain()
+            tl = t_logits[0, n_valid - 1].astype(jnp.float32)
+            sl = s_logits[0, n_valid - 1].astype(jnp.float32)
+            tlp = jax.nn.log_softmax(tl)
+            slp = jax.nn.log_softmax(sl)
+            out = {"shadow": {
+                "kl": jnp.sum(jnp.exp(tlp) * (tlp - slp)),
+                "top1_agree": (jnp.argmax(tl) == jnp.argmax(sl))
+                .astype(jnp.float32)}}
+            h_t = t_aux.pop("layers.hidden", None)
+            h_s = s_aux.pop("layers.hidden", None)
+            if h_t is not None and h_s is not None:
+                seq = batch["tokens"].shape[1]
+                mask = (jnp.arange(seq)[None, :] < n_valid) \
+                    .astype(jnp.float32)
+                out["layers.hidden"] = obs_numerics.hidden_divergence(
+                    h_t["h"], h_s["h"], mask)
+            out.update(s_aux)
+            return out
+
+        return jax.jit(lambda tp, sp, b, nv: self._traced(fn, tp, sp, b, nv))
+
+    def _run_shadow(self, reqs) -> None:
+        """Score each request's full context teacher-vs-student (stateless;
+        the serving caches and token streams are untouched).  Contexts pad
+        to power-of-two buckets so compilations stay bounded."""
+        t0 = time.monotonic()
+        self.shadow_steps += 1
+        kls, agrees = [], []
+        for r in reqs:
+            ctx = np.concatenate([np.asarray(r.prompt, np.int32),
+                                  np.asarray(r.output, np.int32)])
+            n = len(ctx)
+            bucket = max(16, 1 << (n - 1).bit_length())
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :n] = ctx
+            batch = {"tokens": jnp.asarray(toks)}
+            for k, v in (r.extras or {}).items():
+                batch[k] = jnp.asarray(v)[None]
+            aux = jax.device_get(self._shadow_fn(
+                self.shadow_teacher, self.params, batch,
+                jnp.asarray(n, jnp.int32)))
+            sh = aux.pop("shadow")
+            kls.append(float(sh["kl"]))
+            agrees.append(float(sh["top1_agree"]))
+            self.numerics.record(aux)
+        step = self.decode_steps
+        self.numerics.record({"shadow": {
+            "kl": float(np.mean(kls)),
+            "top1_agree": float(np.mean(agrees))}})
+        self.numerics.series_point("qad_live_kl", step, float(np.mean(kls)))
+        self.numerics.series_point("qad_top1_agree", step,
+                                   float(np.mean(agrees)))
+        self.numerics.series_point("spec_accept_rate", step,
+                                   self._live_acceptance())
+        self.shadow_s += time.monotonic() - t0
 
     def _sample_one(self, req: Request, logits: jax.Array) -> int:
         req.state = RUNNING

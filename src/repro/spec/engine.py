@@ -169,6 +169,15 @@ class SpecEngine(Engine):
     def _after_prefill(self, req: Request) -> None:
         self.proposer.prefill_request(req)
 
+    def _live_acceptance(self):
+        """Cumulative acceptance rate — the live cross-check series the
+        numerics shadow probe plots against ``qad_live_kl`` (acceptance is
+        the fraction of draft proposals the NVFP4 target endorses, i.e. a
+        behavioural KL-closeness signal measured for free)."""
+        if not self.drafted_tokens:
+            return None
+        return self.accepted_tokens / self.drafted_tokens
+
     # -- the draft/verify/accept round -------------------------------------
 
     def _do_decode(self, finished: list[Request]) -> None:
@@ -277,10 +286,11 @@ class SpecEngine(Engine):
             tokens = np.concatenate([st.last_tok[:, None], draft_toks],
                                     axis=1)
             with self.obs.trace.annotate("spec.verify", n_active=len(reqs)):
-                logits, self.pool.data = self._verify(
-                    self.params, self.pool.data, jnp.asarray(st.bt),
-                    jnp.asarray(st.lens), jnp.asarray(st.active),
-                    jnp.asarray(st.k_eff), jnp.asarray(tokens))
+                logits, self.pool.data = self._compile_watch(
+                    "verify", lambda: self._verify(
+                        self.params, self.pool.data, jnp.asarray(st.bt),
+                        jnp.asarray(st.lens), jnp.asarray(st.active),
+                        jnp.asarray(st.k_eff), jnp.asarray(tokens)))
                 out_toks, n_emit, n_acc = map(np.asarray, self._accept(
                     logits, jnp.asarray(draft_toks),
                     jnp.asarray(draft_probs), jnp.asarray(st.k_eff),
@@ -330,8 +340,9 @@ class SpecEngine(Engine):
             with self.obs.trace.annotate("spec.verify", n_active=len(reqs)):
                 for i in range(k + 1):
                     act_i = st.active & (i <= st.k_eff)
-                    lg = self.state.decode(reqs, tokens[:, i:i + 1],
-                                           st.lens + i, act_i)
+                    lg = self._compile_watch(
+                        "decode", lambda: self.state.decode(
+                            reqs, tokens[:, i:i + 1], st.lens + i, act_i))
                     logits[:, i] = np.asarray(lg[:, 0, :], np.float32)
                     snaps.append(self.state.snapshot())
                 out_toks, n_emit, n_acc = map(np.asarray, self._accept(

@@ -1,0 +1,301 @@
+"""Numerics observability plane (repro.obs.numerics / repro.obs.compare).
+
+Acceptance invariants:
+
+  * probes OFF (the default) is bitwise invisible — the QAD train state
+    evolves leaf-for-leaf identically, and both engines' greedy token
+    streams are unchanged with the shadow teacher on or off;
+  * probes ON are deterministic — two identical runs record identical
+    per-layer stats and chart series;
+  * every producer (engine, spec engine, training loop) exports a
+    schema-valid ``repro.obs.metrics/v1`` snapshot with per-layer SQNR
+    and divergence series;
+  * the drift gate passes clean-vs-clean and fails on injected
+    quantization noise.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import qad as qad_mod
+from repro.core.qconfig import BF16
+from repro.data import DataConfig, make_batch
+from repro.launch import serve, specs
+from repro.models import get_model
+from repro.obs import Observability
+from repro.obs import compare as obs_compare
+from repro.obs import export as obs_export
+from repro.obs import numerics as obs_numerics
+from repro.obs import validate as obs_validate
+from repro.obs.metrics import MetricsRegistry
+from repro.optim import AdamW, warmup_cosine
+from repro.serve import Engine
+from repro.spec import SpecEngine
+
+ARCH = "qwen1.5-0.5b"
+MIXED_LENS = [4, 7, 11, 16]
+GEN = 5
+
+
+@pytest.fixture(scope="module")
+def loaded():
+    cfg = configs.get_smoke(ARCH)
+    params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0), "packed")
+    teacher = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, qcfg, teacher
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = jax.random.PRNGKey(seed)
+    return [np.asarray(jax.random.randint(jax.random.fold_in(rng, i),
+                                          (l,), 4, cfg.vocab_size))
+            for i, l in enumerate(lens)]
+
+
+def _engine(cfg, params, qcfg, klass=Engine, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("max_blocks_per_slot", 4)
+    kw.setdefault("n_blocks", 16)
+    return klass(cfg, params, qcfg, **kw)
+
+
+def _run(eng, prompts, gen=GEN):
+    rids = [eng.submit(p, gen) for p in prompts[:2]]
+    eng.step()
+    rids += [eng.submit(p, gen) for p in prompts[2:]]
+    outputs = eng.drain(max_steps=500)
+    return rids, outputs
+
+
+# ---------------------------------------------------------------------------
+# Tape semantics
+
+def test_tape_scoping_and_dedup():
+    tape = obs_numerics.Tape()
+    with obs_numerics.collecting(tape):
+        assert obs_numerics.active() is tape
+        tape.put("a", {"x": 1.0})
+        tape.put("a", {"x": 2.0})         # duplicate site -> "#2"
+        tape.push_scope()
+        tape.put("inner", {"y": 3.0})
+        inner = tape.pop_scope()
+        tape.put("a", {"x": 4.0})
+    assert obs_numerics.active() is None
+    out = tape.drain()
+    assert set(out) == {"a", "a#2", "a#3"}
+    assert inner == {"inner": {"y": 3.0}}
+    assert tape.drain() == {}             # drain clears
+
+
+def test_quant_error_stats_sanity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64), jnp.float32)
+    st = {k: float(v) for k, v in obs_numerics.quant_error_stats(x).items()}
+    assert 5.0 < st["sqnr_db"] < 60.0     # NVFP4 on gaussian ~ 20 dB
+    assert st["amax"] == pytest.approx(float(jnp.max(jnp.abs(x))), rel=1e-6)
+    assert 0.0 <= st["clip_frac"] <= 1.0
+    assert 0.0 < st["scale_util"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Probes off = bitwise invisible
+
+def test_train_state_bitwise_identical_probes_on_vs_off():
+    cfg = configs.get_smoke("olmo-1b")
+    model = get_model(cfg)
+    qcfg = specs.recipe_qconfig(cfg)
+    opt = AdamW(lr=warmup_cosine(1e-3, 2, 8), clip_norm=1.0)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                      global_batch=2, seed=0)
+
+    def run(qc):
+        state = qad_mod.init_state(model, cfg, jax.random.PRNGKey(0), opt)
+        step = jax.jit(qad_mod.make_train_step(model, cfg, qc, opt))
+        metrics = None
+        for i in range(3):
+            state, metrics = step(state, make_batch(dcfg, i))
+        return state, metrics
+
+    s_off, m_off = run(qcfg)
+    s_on, m_on = run(dataclasses.replace(qcfg, numerics=True))
+    for a, b in zip(jax.tree.leaves(s_off.student),
+                    jax.tree.leaves(s_on.student)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_off.opt_state),
+                    jax.tree.leaves(s_on.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert "numerics" not in m_off
+    num = m_on["numerics"]
+    assert "layers.hidden" in num and "layers.grad" in num
+    sqnr_sites = [s for s, st in num.items() if "sqnr_db" in st]
+    assert sqnr_sites, "no quant-error probes fired"
+    for site, stats in num.items():
+        for stat, v in stats.items():
+            arr = np.asarray(v)
+            assert arr.shape == (cfg.n_layers,), (site, stat, arr.shape)
+
+
+def test_engine_tokens_identical_with_shadow(loaded):
+    cfg, params, qcfg, teacher = loaded
+    prompts = _prompts(cfg, MIXED_LENS)
+    _, base = _run(_engine(cfg, params, qcfg), prompts)
+    eng = _engine(cfg, params, qcfg, shadow_teacher=teacher, shadow_rate=1.0)
+    _, shadowed = _run(eng, prompts)
+    assert eng.shadow_steps > 0
+    for rid in base:
+        np.testing.assert_array_equal(base[rid], shadowed[rid])
+
+
+def test_spec_engine_tokens_identical_with_shadow(loaded):
+    cfg, params, qcfg, teacher = loaded
+    prompts = _prompts(cfg, MIXED_LENS)
+    _, base = _run(_engine(cfg, params, qcfg, SpecEngine, draft_k=2), prompts)
+    eng = _engine(cfg, params, qcfg, SpecEngine, draft_k=2,
+                  shadow_teacher=teacher, shadow_rate=1.0)
+    _, shadowed = _run(eng, prompts)
+    assert eng.shadow_steps > 0
+    for rid in base:
+        np.testing.assert_array_equal(base[rid], shadowed[rid])
+    # the cross-check series exists on the spec engine only
+    assert any(v is not None for _, v in
+               eng.numerics.series.get("spec_accept_rate", []))
+
+
+# ---------------------------------------------------------------------------
+# Probes on = deterministic
+
+def test_shadow_probe_determinism(loaded):
+    cfg, params, qcfg, teacher = loaded
+    prompts = _prompts(cfg, MIXED_LENS)
+
+    def run():
+        eng = _engine(cfg, params, qcfg, shadow_teacher=teacher,
+                      shadow_rate=1.0)
+        _run(eng, prompts)
+        return eng.numerics
+
+    a, b = run(), run()
+    assert a.records == b.records > 0
+    assert a.series == b.series
+    assert sorted(a.last) == sorted(b.last)
+    for site in a.last:
+        for stat in a.last[site]:
+            assert a.last[site][stat] == b.last[site][stat], (site, stat)
+
+
+# ---------------------------------------------------------------------------
+# Export + validation
+
+def test_serving_snapshot_validates(loaded):
+    cfg, params, qcfg, teacher = loaded
+    eng = _engine(cfg, params, qcfg, shadow_teacher=teacher, shadow_rate=1.0,
+                  obs=Observability(metrics=True))
+    _run(eng, _prompts(cfg, MIXED_LENS))
+    snap = obs_export.metrics_snapshot(eng)
+    assert obs_validate.check_metrics(snap) == []
+    num = snap["numerics"]
+    assert num["sampled_records"] > 0
+    assert num["sqnr_db_min"] is not None
+    assert any(s.startswith("layers.") and "sqnr_db" in st
+               for s, st in num["per_layer"].items())
+    assert num["series"]["qad_live_kl"]
+    # labeled per-layer instruments made it into the registry + prom text
+    g = eng.obs.metrics.get("numerics_sqnr_db")
+    cells = g.snapshot()["labels"]
+    assert len(cells) > 1
+    keys = [tuple(c["labels"].values()) for c in cells]
+    assert keys == sorted(keys)
+    prom = eng.obs.metrics.to_prometheus()
+    assert 'numerics_sqnr_db{layer="' in prom
+    assert obs_validate.check_prometheus(prom) == []
+    # the recompile tripwire instrument exists (decode compiled >= once)
+    comp = eng.obs.metrics.get("jit_compiles_total").snapshot()
+    fns = {c["labels"]["fn"] for c in comp["labels"]}
+    assert "decode" in fns
+
+
+def test_training_snapshot_validates():
+    registry = MetricsRegistry()
+    rec = obs_numerics.NumericsRecorder(registry)
+    rec.record({"layers.mlp.act": {"sqnr_db": np.asarray([20.0, 21.0]),
+                                   "clip_frac": np.asarray([0.01, 0.02])},
+                "shadow": {"kl": np.asarray(0.003)}})
+    rec.series_point("qad_train_kl", 10, 0.003)
+    snap = obs_export.training_snapshot(10, registry, recorder=rec,
+                                        tokens=1280, evals={"kl": 0.003})
+    assert snap["engine"]["kind"] == "train"
+    assert obs_validate.check_metrics(snap) == []
+    assert snap["numerics"]["per_layer"]["layers.mlp.act.000"]["sqnr_db"] \
+        == 20.0
+
+
+def test_validator_rejects_malformed_labeled_series():
+    errs = obs_validate._check_instruments(
+        {"x": {"kind": "gauge", "labels": [
+            {"labels": {"layer": "b"}, "value": 1.0},
+            {"labels": {"layer": "a"}, "value": 2.0}]}})
+    assert any("sorted" in e for e in errs)
+    errs = obs_validate._check_numerics(
+        {"series": {"s": [[2, 1.0], [1, 2.0]]}, "per_layer": {}})
+    assert any("non-decreasing" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# Drift gate
+
+def _snap_with(per_layer, series):
+    return {"schema": obs_compare.SCHEMA,
+            "numerics": {"sampled_records": 1, "per_layer": per_layer,
+                         "series": series}}
+
+
+THRESHOLDS = {"max_sqnr_drop_db": 1.0, "max_kl_increase": 0.05,
+              "max_cos_drop": 0.02, "max_amax_rel": 0.1}
+
+
+def test_gate_clean_passes_noise_fails(loaded):
+    cfg, params, qcfg, teacher = loaded
+    prompts = _prompts(cfg, MIXED_LENS)
+
+    def snapshot(p):
+        eng = _engine(cfg, p, qcfg, shadow_teacher=teacher, shadow_rate=1.0,
+                      obs=Observability(metrics=True))
+        _run(eng, prompts)
+        return obs_export.metrics_snapshot(eng)
+
+    clean = snapshot(params)
+    noisy = snapshot(serve.inject_quant_noise(params, 0.3))
+    assert obs_validate.check_metrics(noisy) == []
+    assert obs_compare.gate_violations(clean, clean, THRESHOLDS) == []
+    violations = obs_compare.gate_violations(clean, noisy, THRESHOLDS)
+    assert violations, "injected quantization noise must trip the gate"
+    assert any("amax" in v or "kl" in v for v in violations)
+
+
+def test_gate_thresholds_directional():
+    base = _snap_with({"l.000": {"sqnr_db": 20.0, "hidden_cos": 0.99}},
+                      {"qad_live_kl": [[1, 0.01]]})
+    better = _snap_with({"l.000": {"sqnr_db": 25.0, "hidden_cos": 0.999}},
+                        {"qad_live_kl": [[1, 0.001]]})
+    worse = _snap_with({"l.000": {"sqnr_db": 17.0, "hidden_cos": 0.90}},
+                       {"qad_live_kl": [[1, 0.2]]})
+    assert obs_compare.gate_violations(base, better, THRESHOLDS) == []
+    bad = obs_compare.gate_violations(base, worse, THRESHOLDS)
+    assert len(bad) == 3                  # sqnr drop, cos drop, kl mean
+
+
+def test_compare_cli_roundtrip(tmp_path):
+    base = _snap_with({"l.000": {"sqnr_db": 20.0}}, {})
+    worse = _snap_with({"l.000": {"sqnr_db": 10.0}}, {})
+    pb, pw = tmp_path / "b.json", tmp_path / "w.json"
+    pb.write_text(json.dumps(base))
+    pw.write_text(json.dumps(worse))
+    assert obs_compare.main([str(pb), str(pb), "--gate"]) == 0
+    assert obs_compare.main([str(pb), str(pw), "--gate"]) == 1
+    # python -m repro.obs.numerics routes here
+    assert obs_numerics.main([str(pb), str(pb), "--gate"]) == 0
