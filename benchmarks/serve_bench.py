@@ -426,6 +426,113 @@ def numerics_rows(arch: str, requests: int, gen: int, slots: int) -> dict:
     return row
 
 
+def _bursty_traffic(cfg, n: int, bs: int, seed=11):
+    """Production-shaped request mix: 80% of prompts share a two-block
+    (2*bs-token) head, lengths vary, and a third of the requests finish
+    early (small token budget — the early-EOS population whose blocks the
+    cache inherits).  Returns (prompts, per-request token budgets)."""
+    rng = jax.random.PRNGKey(seed)
+    head = np.asarray(jax.random.randint(jax.random.fold_in(rng, 0),
+                                         (2 * bs,), 4, cfg.vocab_size),
+                      np.int32)
+    prompts, gens = [], []
+    for i in range(n):
+        tail = np.asarray(jax.random.randint(jax.random.fold_in(rng, i + 1),
+                                             (2 + i % 6,), 4,
+                                             cfg.vocab_size), np.int32)
+        prompts.append(tail if i % 5 == 4                  # 20% unshared
+                       else np.concatenate([head, tail]))
+        gens.append(4 if i % 3 == 0 else 12)               # early-EOS third
+    return prompts, gens
+
+
+def prefix_cache_rows(arch: str = "qwen1.5-0.5b", n_requests: int = 12,
+                      slots: int = 6, bs: int = 8,
+                      n_blocks: int = 10) -> dict:
+    """Heavy-traffic A/B for the serving-memory tentpole: the SAME bursty,
+    80%-shared-prefix, early-EOS workload through (a) worst-case
+    reservation with the cache off and (b) content-hashed prefix caching
+    with on-demand paging + preemption, at the SAME pool size.  Records
+    sustained tok/s, admission latency (queue wait), cache hit rate,
+    preemption count, and the peak number of concurrently admitted
+    requests — the capacity claim is ondemand/reserve concurrency >= 1.5x
+    (or lower admission latency).  Outputs must match bitwise."""
+    import time
+
+    from repro.serve import Engine
+
+    cfg = configs.get_smoke(arch)
+    params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0),
+                                        "packed")
+    prompts, gens = _bursty_traffic(cfg, n_requests, bs)
+    mb = max(1, -(-(max(len(p) for p in prompts) + max(gens) - 1) // bs))
+    modes = {
+        "reserve_cache_off": dict(prefix_cache=False, kv_alloc="reserve"),
+        "ondemand_cache_on": dict(prefix_cache=True, kv_alloc="ondemand",
+                                  headroom=1),
+    }
+    row = {"arch": arch, "weight_format": "packed",
+           "requests": n_requests, "slots": slots, "block_size": bs,
+           "n_blocks": n_blocks, "gens": gens, "modes": {}}
+    outs_by_mode = {}
+    for mode, kw in modes.items():
+        eng = Engine(cfg, params, qcfg, n_slots=slots, block_size=bs,
+                     n_blocks=n_blocks, max_blocks_per_slot=mb,
+                     prefill_mode="paged", **kw)
+        # bursty arrivals: waves of 4 with a couple of engine steps between
+        rids, peak = [], 0
+        t0 = time.time()
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            rids.append(eng.submit(p, g))
+            if i % 4 == 3:
+                for _ in range(2):
+                    eng.step()
+                    peak = max(peak, len(eng.sched.in_flight()))
+        while eng.sched.has_work():
+            eng.step()
+            peak = max(peak, len(eng.sched.in_flight()))
+        wall = time.time() - t0
+        outs = eng.outputs()
+        outs_by_mode[mode] = [outs[r] for r in rids]
+        st = eng.stats()
+        finished = list(eng.sched.finished.values())
+        qwaits = [r.queue_wait_s for r in finished]
+        cst = (eng.state.cache.stats() if eng.state.cache is not None
+               else {})
+        looked = cst.get("hits", 0) + cst.get("misses", 0)
+        row["modes"][mode] = {
+            "completed": len(outs) == n_requests,
+            "pool_drained": not eng.state.leaked(),
+            "sustained_tok_s": sum(len(o) for o in outs_by_mode[mode])
+            / max(wall, 1e-9),
+            "decode_tok_s": st["decode_tok_s"],
+            "peak_concurrent": peak,
+            "queue_wait_p50_s": float(np.percentile(qwaits, 50)),
+            "queue_wait_mean_s": float(np.mean(qwaits)),
+            "ttft_p50_s": st["ttft_p50_s"],
+            "preempts": st.get("preempts", 0),
+            "peak_pool_utilization": st["peak_utilization"],
+            "cache_hits": cst.get("hits", 0),
+            "cache_misses": cst.get("misses", 0),
+            "cache_evictions": cst.get("evictions", 0),
+            "cache_hit_rate": (cst.get("hits", 0) / looked if looked
+                               else None),
+        }
+        emit(f"serve/prefix_cache/{arch}/{mode}",
+             1e6 / max(row['modes'][mode]['sustained_tok_s'], 1e-9),
+             f"tok_s={row['modes'][mode]['sustained_tok_s']:.1f};"
+             f"peak_concurrent={peak}")
+    a, b = outs_by_mode["reserve_cache_off"], outs_by_mode["ondemand_cache_on"]
+    row["tokens_match_cache_off"] = all(
+        np.array_equal(x, y) for x, y in zip(a, b))
+    off, on = row["modes"]["reserve_cache_off"], row["modes"]["ondemand_cache_on"]
+    row["concurrency_ratio"] = on["peak_concurrent"] \
+        / max(off["peak_concurrent"], 1)
+    row["queue_wait_ratio"] = on["queue_wait_mean_s"] \
+        / max(off["queue_wait_mean_s"], 1e-9)
+    return row
+
+
 def sharded_rows(archs, tps=(2, 8), n_blocks: int = 1024) -> dict:
     """Per-device weight/KV bytes under TP partitions of the full-scale
     configs (analytic — ``sharding.resolve_packed`` divisibility, no
@@ -525,6 +632,19 @@ def serve_rows(arch="qwen1.5-0.5b", batch=4, prompt_len=16, gen=8,
           f"probe-overhead={nr['probe_overhead_pct']:+.1f}% "
           f"live_kl={r1['qad_live_kl_mean']:.4f} "
           f"sqnr_min={r1['sqnr_db_min']:.1f}dB")
+
+    results["prefix_cache"] = prefix_cache_rows(arch)
+    pc = results["prefix_cache"]
+    on = pc["modes"]["ondemand_cache_on"]
+    hr = on["cache_hit_rate"]
+    print(f"[serve_bench] prefix_cache {arch}: "
+          f"concurrency={pc['concurrency_ratio']:.2f}x "
+          f"(peak {on['peak_concurrent']} vs "
+          f"{pc['modes']['reserve_cache_off']['peak_concurrent']}) "
+          f"queue-wait={pc['queue_wait_ratio']:.2f}x "
+          f"hit-rate={f'{hr:.2f}' if hr is not None else 'n/a'} "
+          f"preempts={on['preempts']} "
+          f"tokens-match={pc['tokens_match_cache_off']}")
 
     results["speculative"] = speculative_rows(arch, "arctic-480b", gen)
     for row in (results["speculative"]["dense"]

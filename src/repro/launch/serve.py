@@ -191,10 +191,22 @@ def build_engine(cfg, params, qcfg, args, mesh=None, rules=None):
     bs = args.block_size
     mb = max(1, math.ceil((args.max_prompt + args.gen - 1) / bs))
     n_blocks = args.n_blocks or args.slots * mb
+    prefix_cache = getattr(args, "prefix_cache", "off") == "on"
+    kv_alloc = getattr(args, "kv_alloc", None) \
+        or ("ondemand" if prefix_cache else "reserve")
+    if (prefix_cache or kv_alloc == "ondemand") \
+            and args.prefill_mode != "paged":
+        # sharing and preempt-resume are only bitwise under block-granular
+        # paged prefill; promote and record it so parity defaults see the
+        # effective mode
+        args.prefill_mode = "paged"
+    args.kv_alloc = kv_alloc                  # record the resolved mode
     kw = dict(n_slots=args.slots, block_size=bs, n_blocks=n_blocks,
               max_blocks_per_slot=mb, prefill_mode=args.prefill_mode,
               prefill_chunk=args.prefill_chunk, mesh=mesh, rules=rules,
               fused_kernels=getattr(args, "fused_kernels", "auto"),
+              prefix_cache=prefix_cache, kv_alloc=kv_alloc,
+              headroom=getattr(args, "headroom", 2),
               obs=obs_from_args(args))
     shadow_rate = getattr(args, "shadow_rate", 0.0) or 0.0
     if shadow_rate > 0.0:
@@ -274,6 +286,23 @@ def _ms(v) -> str:
     return f"{v * 1e3:.1f}ms" if v is not None else "n/a"
 
 
+def _run_workload(eng, prompts, extras_list, gen: int):
+    """Submit the staggered mixed workload and drain it.
+
+    Half the requests go in up front, the rest trickle in one engine step
+    apart — deterministic, so two engines fed the same prompt list see the
+    SAME arrival pattern (the basis of the cache-on/off A/B check).
+    """
+    half = len(prompts) // 2
+    rids = [eng.submit(np.asarray(p), gen, extras=ex)
+            for p, ex in zip(prompts[:half], extras_list[:half])]
+    for p, ex in zip(prompts[half:], extras_list[half:]):
+        eng.step()
+        rids.append(eng.submit(np.asarray(p), gen, extras=ex))
+    outputs = eng.drain(max_steps=10_000)
+    return rids, outputs
+
+
 def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
     """Serve a mixed staggered workload through the engine; verify parity
     and pool-drain invariants.  Returns a result dict (also used by CI and
@@ -311,13 +340,7 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
             for i in range(len(prompts))]
     # staggered arrivals: half up front, the rest trickle in while the
     # first wave is already decoding
-    half = len(prompts) // 2
-    rids = [eng.submit(np.asarray(p), args.gen, extras=ex)
-            for p, ex in zip(prompts[:half], extras_list[:half])]
-    for p, ex in zip(prompts[half:], extras_list[half:]):
-        eng.step()
-        rids.append(eng.submit(np.asarray(p), args.gen, extras=ex))
-    outputs = eng.drain(max_steps=10_000)
+    rids, outputs = _run_workload(eng, prompts, extras_list, args.gen)
     st = eng.stats()
 
     ok = len(outputs) == args.requests
@@ -362,6 +385,37 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
                       f"{np.asarray(ref[0][:8]).tolist()}")
         ok = ok and parity
 
+    # prefix-cache A/B: the SAME workload through a second engine with the
+    # cache off (identical paged prefill + allocation mode) must produce
+    # bitwise-identical greedy streams and also drain leak-free — block
+    # sharing, COW, eviction and preempt-resume are all invisible in the
+    # token plane or this fails the run
+    cache_parity = None
+    if getattr(args, "prefix_cache", "off") == "on" \
+            and args.parity is not False:
+        base_args = argparse.Namespace(**vars(args))
+        base_args.prefix_cache = "off"
+        base_args.obs = "off"
+        base_args.metrics_out = base_args.trace_out = None
+        base_args.shadow_rate = 0.0
+        base_eng, _ = build_engine(cfg, params, qcfg, base_args, mesh, rules)
+        base_rids, base_out = _run_workload(base_eng, prompts, extras_list,
+                                            args.gen)
+        cache_parity = len(base_out) == len(outputs)
+        for rid, brid in zip(rids, base_rids):
+            if not np.array_equal(outputs.get(rid, np.empty(0, np.int32)),
+                                  base_out.get(brid,
+                                               np.empty(0, np.int32))):
+                cache_parity = False
+                print(f"[engine] FAIL: request {rid} cache-on diverges "
+                      f"from cache-off: "
+                      f"{outputs.get(rid, [])[:8].tolist()} vs "
+                      f"{base_out.get(brid, [])[:8].tolist()}")
+        if base_eng.state.leaked():
+            cache_parity = False
+            print("[engine] FAIL: cache-off baseline leaked pool blocks")
+        ok = ok and cache_parity
+
     spec = getattr(args, "speculative", 0)
     drained = not eng.state.leaked()
     pool_desc = (f"pool={n_blocks}x{bs}" if eng.pool is not None else
@@ -385,6 +439,17 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
           f"tok_lat_p95={_ms(st['decode_lat_p95_s'])} "
           f"parity={'AGREE' if parity else ('skipped' if parity is None else 'DISAGREE')} "
           f"state-drained={drained}")
+    cache_st = None
+    if getattr(args, "prefix_cache", "off") == "on":
+        cache_st = eng.state.stats().get("prefix_cache") or {}
+        cp_s = ("AGREE" if cache_parity
+                else ("skipped" if cache_parity is None else "DISAGREE"))
+        print(f"[engine] prefix-cache: hits={cache_st.get('hits', 0)} "
+              f"misses={cache_st.get('misses', 0)} "
+              f"evictions={cache_st.get('evictions', 0)} "
+              f"preempts={st.get('preempts', 0)} "
+              f"kv-alloc={getattr(args, 'kv_alloc', 'reserve')} "
+              f"cache-off-parity={cp_s}")
     if spec:
         adaptive = (f" chosen-k={st['chosen_k_hist']}"
                     if st.get("adaptive_k") else "")
@@ -431,7 +496,9 @@ def run_engine(cfg, params, qcfg, args, mesh=None, rules=None) -> dict:
 
     return {"ok": ok, "outputs": outputs, "stats": st,
             "tokens_match_serve_batch": parity, "n_blocks": n_blocks,
-            "pool_drained": drained, "tp": tp_rep, "obs": eng.obs.enabled}
+            "pool_drained": drained, "tp": tp_rep, "obs": eng.obs.enabled,
+            "tokens_match_cache_off": cache_parity,
+            "prefix_cache": cache_st}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -459,9 +526,35 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="pool blocks (0 = slots * blocks-per-request)")
-    ap.add_argument("--prefill-mode", choices=("exact", "chunked"),
-                    default="exact")
+    ap.add_argument("--prefill-mode", choices=("exact", "chunked", "paged"),
+                    default="exact",
+                    help="exact = whole-prompt (bitwise vs serve_batch); "
+                    "chunked = fixed-size approximate chunks; paged = "
+                    "block-granular token-causal prefill straight into the "
+                    "pool (every block's bytes depend only on its token "
+                    "prefix — the mode prefix caching and preemption need)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--prefix-cache", choices=("on", "off"), default="off",
+                    help="content-hashed block-granular prefix cache over "
+                    "the paged KV pool: retired blocks park keyed by their "
+                    "token prefix and later requests reuse them without "
+                    "recompute; forces --prefill-mode paged and (unless "
+                    "--kv-alloc says otherwise) on-demand allocation. "
+                    "Greedy output stays bitwise identical to cache-off "
+                    "(checked unless --no-parity)")
+    ap.add_argument("--kv-alloc", choices=("reserve", "ondemand"),
+                    default=None,
+                    help="pool allocation policy: 'reserve' books the "
+                    "worst-case block count at admission; 'ondemand' books "
+                    "only what the prompt needs and grows block-by-block "
+                    "at decode, evicting cache LRU and then preempting the "
+                    "lowest-progress request under pressure (default: "
+                    "ondemand when --prefix-cache on, else reserve)")
+    ap.add_argument("--headroom", type=int, default=2,
+                    help="on-demand admission watermark: free+evictable "
+                    "blocks that must remain AFTER admitting a request "
+                    "(waived when the pool is idle so one big request "
+                    "can always start)")
     ap.add_argument("--fused-kernels", choices=("on", "off", "auto"),
                     default="auto",
                     help="fused serving-kernel tier: one-pass paged "
@@ -535,6 +628,9 @@ def main(argv=None):
     if args.shadow_rate and not args.engine:
         raise SystemExit("--shadow-rate requires --engine (the shadow "
                          "teacher samples the engine's decode loop)")
+    if (args.prefix_cache == "on" or args.kv_alloc) and not args.engine:
+        raise SystemExit("--prefix-cache/--kv-alloc require --engine (they "
+                         "configure the paged serving pool)")
     if args.inject_quant_noise and args.weight_format != "packed":
         raise SystemExit("--inject-quant-noise perturbs PackedNVFP4 "
                          "tensor scales; use --weight-format packed")

@@ -13,7 +13,9 @@ Checks, exiting nonzero on any failure:
     opens closes, no cross-nesting), timestamps are non-decreasing, and
     the required lifecycle spans all occur: ``request``, ``queue``,
     ``prefill``, ``decode``, ``engine.decode_step`` — plus ``spec.draft``
-    and ``spec.verify`` under ``--expect-spec``;
+    and ``spec.verify`` under ``--expect-spec``, and ``cache_lookup``
+    (with the prefix-cache / preemption counters on the metrics side)
+    under ``--expect-prefix-cache``;
   * **prometheus** — every non-comment line of the ``.prom`` text parses
     as ``name[{labels}] value``.
 """
@@ -29,12 +31,21 @@ from .schema import load_schema, validate
 REQUIRED_SPANS = ("request", "queue", "prefill", "decode",
                   "engine.decode_step")
 SPEC_SPANS = ("spec.draft", "spec.verify")
+# with --expect-prefix-cache: every admission probes the cache, so the
+# lookup span must occur; preempt/requeue spans only appear under actual
+# pool pressure, so presence is asserted on the METRICS side (counters
+# exist at zero) rather than the trace
+CACHE_SPANS = ("cache_lookup",)
+CACHE_COUNTERS = ("prefix_cache_hit_total", "prefix_cache_miss_total",
+                  "prefix_cache_evict_total", "serve_preempt_total",
+                  "serve_requeue_total")
 
 _PROM_LINE = re.compile(
     r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? (-?[0-9.eE+-]+|NaN|[+-]Inf)$")
 
 
-def check_trace(doc: dict, expect_spec: bool = False) -> list:
+def check_trace(doc: dict, expect_spec: bool = False,
+                expect_cache: bool = False) -> list:
     """Schema + span-semantics errors for a Chrome-trace document."""
     errs = validate(doc, load_schema("trace"))
     if errs:
@@ -69,7 +80,8 @@ def check_trace(doc: dict, expect_spec: bool = False) -> list:
     for tid, stack in sorted(stacks.items()):
         if stack:
             errs.append(f"tid {tid}: unclosed span(s) {stack!r}")
-    want = REQUIRED_SPANS + (SPEC_SPANS if expect_spec else ())
+    want = REQUIRED_SPANS + (SPEC_SPANS if expect_spec else ()) \
+        + (CACHE_SPANS if expect_cache else ())
     for name in want:
         if name not in seen:
             errs.append(f"required span {name!r} never occurs")
@@ -78,12 +90,18 @@ def check_trace(doc: dict, expect_spec: bool = False) -> list:
     return errs
 
 
-def check_metrics(doc: dict, expect_spec: bool = False) -> list:
+def check_metrics(doc: dict, expect_spec: bool = False,
+                  expect_cache: bool = False) -> list:
     errs = validate(doc, load_schema("metrics"))
     if errs:
         return errs
     if expect_spec and not doc["speculative"]["enabled"]:
         errs.append("$.speculative.enabled: expected true (--expect-spec)")
+    if expect_cache:
+        for name in CACHE_COUNTERS:
+            if name not in doc.get("metrics", {}):
+                errs.append(f"$.metrics.{name}: required counter missing "
+                            "(--expect-prefix-cache)")
     errs.extend(_check_instruments(doc.get("metrics", {})))
     if "numerics" in doc:
         errs.extend(_check_numerics(doc["numerics"]))
@@ -184,6 +202,9 @@ def main(argv=None) -> int:
     ap.add_argument("--prom", help="Prometheus text file to validate")
     ap.add_argument("--expect-spec", action="store_true",
                     help="require speculative spans + enabled flag")
+    ap.add_argument("--expect-prefix-cache", action="store_true",
+                    help="require the cache_lookup span and the prefix-"
+                    "cache / preemption counters")
     args = ap.parse_args(argv)
     if not (args.trace or args.metrics or args.prom):
         ap.error("nothing to validate: pass --trace / --metrics / --prom")
@@ -191,9 +212,11 @@ def main(argv=None) -> int:
     failures = 0
     for label, path, check in (
             ("trace", args.trace,
-             lambda d: check_trace(d, args.expect_spec)),
+             lambda d: check_trace(d, args.expect_spec,
+                                   args.expect_prefix_cache)),
             ("metrics", args.metrics,
-             lambda d: check_metrics(d, args.expect_spec))):
+             lambda d: check_metrics(d, args.expect_spec,
+                                     args.expect_prefix_cache))):
         if not path:
             continue
         with open(path) as f:

@@ -77,17 +77,28 @@ class Engine:
                  prefill_mode: str = "exact", prefill_chunk: int = 8,
                  prefill_budget: int | None = None, eos_id: int | None = None,
                  mesh=None, rules=None, fused_kernels: str = "auto",
+                 prefix_cache: bool = False, kv_alloc: str = "reserve",
+                 headroom: int = 2,
                  obs=None, shadow_teacher=None, shadow_rate: float = 0.0):
         # refuse unservable configs before touching params or quant policy
         plan = state_mod.check_supported(cfg)
         self.state_plan = plan
         self.paged = plan == ("paged_kv",)
-        if prefill_mode not in ("exact", "chunked"):
+        if prefill_mode not in ("exact", "chunked", "paged"):
             raise ValueError(prefill_mode)
-        if prefill_mode == "chunked" and not self.paged:
+        if prefill_mode in ("chunked", "paged") and not self.paged:
             raise ValueError(
-                "chunked prefill requires the paged-KV state plan; "
+                f"{prefill_mode} prefill requires the paged-KV state plan; "
                 f"{cfg.name} plans {' + '.join(plan)}")
+        if (prefix_cache or kv_alloc == "ondemand") \
+                and prefill_mode != "paged":
+            # sharing and preempt-resume both replay block-granular chunks
+            # through the token-causal verify forward against the pool, so
+            # block content is a pure function of its token prefix — the
+            # exact/chunked prefill paths don't have that property
+            raise ValueError(
+                "prefix_cache / kv_alloc='ondemand' require "
+                f"prefill_mode='paged' (got {prefill_mode!r})")
         if cfg.n_experts and cfg.moe_dispatch not in ("local", "token"):
             # per-row (or per-token) dispatch makes MoE routing independent
             # of co-batched requests — a hard requirement for continuous
@@ -141,10 +152,13 @@ class Engine:
                                                     prefill_chunk)
         self.eos_id = eos_id
 
+        self.kv_alloc = kv_alloc
+        self.prefix_cache = prefix_cache
         self.state = state_mod.make_state(
             self, cfg, n_slots=n_slots, block_size=block_size,
             n_blocks=n_blocks, max_blocks_per_slot=max_blocks_per_slot,
-            s_alloc=self.s_alloc)
+            s_alloc=self.s_alloc, kv_alloc=kv_alloc, headroom=headroom,
+            prefix_cache=prefix_cache)
         self.pool = getattr(self.state, "pool", None)  # paged back-compat
         self.sched = Scheduler(self.state, n_slots, max_blocks_per_slot)
         self.scratch = None
@@ -158,6 +172,22 @@ class Engine:
                              scratch, pool, bt, start, n_valid,
                              {"tokens": toks}, self.sq),
                 donate_argnums=(1, 2))
+        if prefill_mode == "paged":
+            # block-granular prompt replay through the token-scope verify
+            # forward: every fed position writes its pool KV and attends
+            # earlier POOL content, so each block's bytes are a pure
+            # function of its token prefix — sequential-decode bitwise
+            # semantics (see decoder.verify_step_paged), which is what
+            # makes prefix-cache hits and preempt-resume recompute exact
+            pcfg = dataclasses.replace(cfg, moe_dispatch="token") \
+                if cfg.n_experts else cfg
+            self.psq = dataclasses.replace(self.sq, act_scope="token")
+            self._paged_chunk = jax.jit(
+                lambda params, pool, bt, lens, active, n_prop, toks:
+                self._traced(decoder.verify_step_paged, pcfg, params, pool,
+                             bt, lens, active, n_prop, {"tokens": toks},
+                             self.psq, fused=self.fused),
+                donate_argnums=(1,))
 
         self._sample = jax.jit(sample_tokens_seeded)
         self._prefill_fns: dict[int, object] = {}
@@ -213,6 +243,30 @@ class Engine:
         self._m_decode_step = m.histogram(
             "serve_decode_step_seconds",
             "wall time of one batched decode (or draft+verify) step")
+        # prefix-cache + preemption plane (no-op singletons when obs is off
+        # or the cache is disabled — counters simply never move)
+        self._m_cache_hit = m.counter("prefix_cache_hit_total",
+                                      "prefix-cache block hits at admission")
+        self._m_cache_miss = m.counter(
+            "prefix_cache_miss_total",
+            "full prompt blocks that had to be recomputed")
+        self._m_cache_evict = m.counter(
+            "prefix_cache_evict_total",
+            "cached blocks reclaimed under pool pressure")
+        self._m_preempt = m.counter(
+            "serve_preempt_total",
+            "running requests evicted for pool pressure")
+        self._m_requeue = m.counter(
+            "serve_requeue_total",
+            "preempted requests placed back at the queue front")
+        self._m_shared_blocks = m.gauge(
+            "serve_shared_blocks",
+            "pool blocks referenced by more than one request")
+        self._m_cached_blocks = m.gauge(
+            "serve_cached_blocks",
+            "unreferenced pool blocks retained by the prefix cache")
+        self._cache_seen = (0, 0)      # (hits, misses) already counted
+        self.preempts = 0
         self._m_state_capacity.set(self.state.occupancy()[1])
 
         # --- numerics shadow-teacher (repro.obs.numerics) ------------------
@@ -339,6 +393,7 @@ class Engine:
              "acceptance_rate": None,
              "accepted_per_step": None,
              "requests_finished": len(self.sched.finished),
+             "preempts": self.preempts,
              "tokens_generated": self.tokens_generated,
              "prefill_tokens": self.prefill_tokens,
              "prefill_s": self.prefill_s, "decode_s": self.decode_s,
@@ -374,12 +429,13 @@ class Engine:
         while budget > 0:
             req = self._in_flight_prefill()
             if req is None:
-                req = self.sched.admit_next()
+                req = self._admit_next()
                 if req is not None:
                     self._on_admit(req)
             if req is None:
                 break
             any_work = True
+            resumed = bool(req.output)     # re-admitted after preemption
             with self.obs.trace.annotate("engine.prefill", rid=req.rid):
                 if self.prefill_mode == "exact":
                     if req.prompt_len > budget \
@@ -387,24 +443,66 @@ class Engine:
                         break              # defer to next step; never livelock
                     logits = self._prefill_exact(req)
                     used = req.prompt_len
-                else:
+                elif self.prefill_mode == "chunked":
                     logits, used = self._prefill_chunked(req, budget)
+                else:
+                    logits, used = self._prefill_paged(req, budget)
             budget -= used
             self.prefill_tokens += used
             self._m_tok_prefill.inc(used)
             if logits is None:
                 break                      # budget ran out mid-prompt
+            if self.prefill_mode == "paged":
+                # make this context's full blocks shareable (also re-hits
+                # this request's own blocks after a future preemption)
+                self.state.register_prefix(req, req.resume_tokens())
             self._after_prefill(req)
             if self.obs.trace.enabled:
                 self.obs.trace.end("prefill", request_tid(req.rid))
-            self._emit(req, self._sample_one(req, logits), finished)
+            if resumed:
+                # the resume prefill only rebuilds KV over tokens already
+                # emitted; its logits re-predict output[-1], which decode
+                # re-feeds — emitting here would duplicate a token
+                req.state = RUNNING
+                if self.obs.trace.enabled:
+                    self.obs.trace.begin("decode", request_tid(req.rid))
+            else:
+                self._emit(req, self._sample_one(req, logits), finished)
         dt = time.monotonic() - t0
         self.prefill_s += dt
         if any_work:
             self._m_prefill_step.observe(dt)
 
+    def _admit_next(self) -> Request | None:
+        """Admit the queue head, under a ``cache_lookup`` span when the
+        prefix cache is live (admission is where the cache walk and hit
+        acquisition happen, inside ``state.reserve``)."""
+        if not self.prefix_cache or not self.sched.waiting:
+            return self.sched.admit_next()
+        head = self.sched.waiting[0]
+        with self.obs.trace.annotate("cache_lookup", rid=head.rid):
+            req = self.sched.admit_next()
+        return req
+
+    def _count_cache_evict(self, n: int) -> None:
+        """State-backend hook: ``n`` cached blocks were just reclaimed."""
+        if n:
+            self._m_cache_evict.inc(n)
+
+    def _sync_cache_counters(self) -> None:
+        c = getattr(self.state, "cache", None)
+        if c is None:
+            return
+        h0, m0 = self._cache_seen
+        if c.hits > h0:
+            self._m_cache_hit.inc(c.hits - h0)
+        if c.misses > m0:
+            self._m_cache_miss.inc(c.misses - m0)
+        self._cache_seen = (c.hits, c.misses)
+
     def _on_admit(self, req: Request) -> None:
         """A request left the queue for a slot (state reserved)."""
+        self._sync_cache_counters()
         self._m_queue_depth.set(len(self.sched.waiting))
         self._m_queue_wait.observe(req.queue_wait_s)
         tr = self.obs.trace
@@ -473,10 +571,97 @@ class Engine:
                 logits = lg[:, -1, :]
         return logits, consumed
 
+    def _prefill_paged(self, req: Request, budget: int):
+        """Advance block-granular paged prefill by up to ``budget`` tokens.
+
+        The context (prompt, or prompt + emitted tokens after preemption)
+        replays as block-size chunks through the token-scope verify
+        forward, attending and writing the pool itself; prefix-cache hit
+        blocks acquired at admission are skipped outright.  Returns
+        (last-position logits [1, V] | None, tokens consumed).
+        """
+        bs = self.state.pool.block_size
+        ctx = req.resume_tokens()
+        n_ctx = len(ctx)
+        if req.n_prefilled == 0 and req.n_cache_hit:
+            # hit blocks already hold exactly the bytes this prefill would
+            # write (block content is a pure function of its token prefix)
+            req.n_prefilled = req.n_cached = req.n_written = req.n_cache_hit
+        consumed, logits = 0, None
+        bt = np.zeros((1, self.max_blocks_per_slot), np.int32)
+        bt[0, : len(req.block_ids)] = req.block_ids
+        bt = jnp.asarray(bt)
+        while req.n_prefilled < n_ctx and consumed < budget:
+            n_valid = min(bs, n_ctx - req.n_prefilled)
+            toks = np.zeros((1, bs), np.int32)
+            toks[0, :n_valid] = ctx[req.n_prefilled:
+                                    req.n_prefilled + n_valid]
+            lg, self.pool.data = self._paged_chunk(
+                self.params, self.pool.data, bt,
+                jnp.asarray([req.n_prefilled], jnp.int32),
+                jnp.asarray([True]),
+                jnp.asarray([n_valid - 1], jnp.int32),
+                jnp.asarray(toks))
+            req.n_prefilled += n_valid
+            req.n_cached = req.n_written = req.n_prefilled
+            consumed += n_valid
+            if req.n_prefilled >= n_ctx:
+                logits = lg[:, n_valid - 1, :]
+        return logits, consumed
+
+    # -- preemption (on-demand paging) -------------------------------------
+
+    def _preempt_one(self, victim: Request) -> None:
+        """Evict one running request: release its state, count it, and
+        re-queue it at the front (``preempt`` + ``requeue`` spans on the
+        engine thread, queue re-opened on the request thread)."""
+        tr = self.obs.trace
+        with tr.annotate("preempt", rid=victim.rid,
+                         progress=len(victim.output)):
+            if tr.enabled:
+                tid = request_tid(victim.rid)
+                tr.end("decode", tid)
+                tr.begin("queue", tid)
+            self.sched.preempt(victim)
+        with tr.annotate("requeue", rid=victim.rid,
+                         queue_depth=len(self.sched.waiting)):
+            self.preempts += 1
+            self._m_preempt.inc()
+            self._m_requeue.inc()
+            self._m_queue_depth.set(len(self.sched.waiting))
+
+    def _ensure_decode_capacity(self, reqs: list[Request],
+                                extra: int = 0) -> list[Request]:
+        """On-demand mode: grow every running request's block table to
+        cover its next KV write, evicting unreferenced cache blocks first
+        and preempting the lowest-progress running request when the pool
+        is truly full.  The requester itself can be its own victim, so one
+        request always makes forward progress and saturation never
+        deadlocks.  ``extra`` asks for best-effort additional room
+        (speculative draft depth) that never triggers preemption.
+        Returns the requests still in the round.
+        """
+        if self.kv_alloc != "ondemand":
+            return reqs
+        live = list(reqs)
+        for r in list(live):
+            while r in live and not self.state.grow_to(r, r.n_cached + 1):
+                victim = self.sched.preempt_victim()
+                assert victim is not None, "no preemption victim while growing"
+                self._preempt_one(victim)
+                if victim in live:
+                    live.remove(victim)
+        if extra:
+            for r in live:
+                self.state.grow_to(r, r.n_cached + 1 + extra)
+        return live
+
     # -- decode ------------------------------------------------------------
 
     def _do_decode(self, finished: list[Request]) -> None:
         reqs = self.sched.running()
+        if reqs:
+            reqs = self._ensure_decode_capacity(reqs)
         if not reqs:
             return
         t0 = time.monotonic()
@@ -530,6 +715,10 @@ class Engine:
             used, cap = self.state.occupancy()
             self._m_state_used.set(used)
             self._m_state_capacity.set(cap)
+            pool = self.pool
+            if pool is not None:
+                self._m_shared_blocks.set(pool.shared_blocks)
+                self._m_cached_blocks.set(pool.cached_blocks)
 
     def _compile_watch(self, fn_name: str, thunk):
         """Run ``thunk`` watching for a (re)compile of its jitted call.

@@ -66,6 +66,9 @@ class Request:
     #                                       the gap is rolled-back state)
     draft_cached: int = 0                 # draft-model state prefix in sync
     #                                       with the accepted sequence (spec)
+    n_cache_hit: int = 0                  # prefix-cache tokens already in the
+    #                                       pool when this prefill started
+    n_preempts: int = 0                   # times this request was preempted
     output: list = dataclasses.field(default_factory=list)
     finish_reason: str = ""
     submit_step: int = -1
@@ -111,6 +114,17 @@ class Request:
     def next_input_token(self) -> int:
         """The token the next decode step feeds for this request."""
         return int(self.output[-1])
+
+    def resume_tokens(self) -> np.ndarray:
+        """The token context a (re-)prefill must cover: the prompt, plus —
+        after preemption — every emitted token except the last (whose KV is
+        never cached yet; decode re-feeds it).  Token-causal paged prefill
+        over this context reproduces the evicted pool state bit for bit.
+        """
+        if not self.output:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.output[:-1], np.int32)])
 
 
 class Scheduler:
@@ -203,6 +217,40 @@ class Scheduler:
             self.slots[req.slot] = None
             req.slot = None
         self.finished[req.rid] = req
+
+    # -- preemption --------------------------------------------------------
+
+    def preempt(self, req: Request) -> None:
+        """Evict a RUNNING request from its slot and re-queue it at the
+        queue FRONT (it already waited its turn once).
+
+        Its state references are released (shared prefix blocks survive
+        for their other holders — and usually park in the prefix cache, so
+        swap-in is cheap), its cache counters reset, and its OUTPUT is
+        kept: on re-admission the paged prefill recomputes KV over
+        ``resume_tokens()`` bit for bit and decode continues exactly where
+        it stopped, so preemption is invisible in the token stream.
+        """
+        assert req.state == RUNNING, (req.rid, req.state)
+        self.state.release(req)
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            req.slot = None
+        req.n_prefilled = req.n_cached = req.n_written = 0
+        req.draft_cached = 0
+        req.n_cache_hit = 0
+        req.n_preempts += 1
+        req.state = WAITING
+        self.waiting.appendleft(req)
+
+    def preempt_victim(self, exclude=()) -> Optional[Request]:
+        """Lowest-progress RUNNING request (fewest emitted tokens — the
+        cheapest recompute), excluding ``exclude``.  Ties break toward the
+        higher slot so victim choice is deterministic."""
+        cand = [r for r in self.running() if r not in exclude]
+        if not cand:
+            return None
+        return min(cand, key=lambda r: (len(r.output), -r.slot))
 
     # -- views -------------------------------------------------------------
 

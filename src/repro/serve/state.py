@@ -40,7 +40,7 @@ import numpy as np
 from repro.models import common, decoder
 from repro.models.registry import get_model, serve_capabilities
 
-from .paged_kv import PagedKVPool
+from .paged_kv import PagedKVPool, PoolExhausted, PrefixCache
 
 
 class UnsupportedStateError(ValueError):
@@ -59,7 +59,8 @@ def check_supported(cfg) -> tuple:
 
 
 def make_state(engine, cfg, *, n_slots, block_size, n_blocks,
-               max_blocks_per_slot, s_alloc):
+               max_blocks_per_slot, s_alloc, kv_alloc="reserve",
+               headroom=2, prefix_cache=False):
     """Build the state backend for ``cfg``'s plan (or raise a capability
     error).  ``engine`` supplies params/sq and the TP plumbing
     (``_traced`` / ``_shard``); the backend owns the device state and the
@@ -68,7 +69,13 @@ def make_state(engine, cfg, *, n_slots, block_size, n_blocks,
     if plan == ("paged_kv",):
         return PagedKVState(engine, cfg, n_blocks=n_blocks,
                             block_size=block_size,
-                            max_blocks_per_slot=max_blocks_per_slot)
+                            max_blocks_per_slot=max_blocks_per_slot,
+                            kv_alloc=kv_alloc, headroom=headroom,
+                            prefix_cache=prefix_cache)
+    if kv_alloc != "reserve" or prefix_cache:
+        raise UnsupportedStateError(
+            f"{cfg.name}: on-demand paging / prefix caching needs the "
+            f"paged_kv state plan (plan: {' + '.join(plan)})")
     return SlabState(engine, cfg, n_slots=n_slots, s_alloc=s_alloc, plan=plan)
 
 
@@ -153,16 +160,24 @@ class PagedKVState:
     """
 
     def __init__(self, engine, cfg, *, n_blocks, block_size,
-                 max_blocks_per_slot):
+                 max_blocks_per_slot, kv_alloc="reserve", headroom=2,
+                 prefix_cache=False):
         self.eng = engine
         self.cfg = cfg
         self.kinds = ("paged_kv",)
         self.required_extras: tuple = ()
         self.max_blocks_per_slot = max_blocks_per_slot
+        if kv_alloc not in ("reserve", "ondemand"):
+            raise ValueError(f"unknown kv_alloc mode {kv_alloc!r}")
+        self.kv_alloc = kv_alloc
+        self.headroom = int(headroom)
         self.pool = PagedKVPool(
             engine._shard(decoder.init_paged_pool(cfg, n_blocks, block_size),
                           decoder.paged_pool_specs(cfg, n_blocks, block_size)),
             block_size)
+        self.cache = (PrefixCache(self.pool,
+                                  f"{cfg.name}|{engine.sq!r}")
+                      if prefix_cache else None)
         self._decode_fn = jax.jit(
             lambda params, pool, bt, lens, active, toks:
             engine._traced(decoder.decode_step_paged, cfg, params, pool,
@@ -170,6 +185,7 @@ class PagedKVState:
                            fused=engine.fused),
             donate_argnums=(1,))
         self._write_fns: dict[int, object] = {}
+        self._copy_fn = None
 
     # -- capacity ----------------------------------------------------------
 
@@ -183,11 +199,119 @@ class PagedKVState:
                 f"(prompt {req.prompt_len} + gen {req.max_new_tokens}); "
                 "it could never be admitted")
 
+    def _free_plus_evictable(self) -> int:
+        ev = self.cache.evictable if self.cache is not None else 0
+        return self.pool.free_blocks + ev
+
+    def _hit_blocks(self, ctx) -> int:
+        return self.cache.lookup(ctx) if self.cache is not None else 0
+
+    def _admit_capacity(self, ctx) -> tuple[int, int]:
+        """(cache hits for ``ctx``, blocks deliverable AFTER taking them).
+
+        Acquiring a hit revives a CACHED block: it stops being evictable
+        but consumes no free block.  Counting every hit as if it were
+        cached keeps this estimate <= what ``reserve`` can actually
+        deliver (an over-count here would admit a request that reserve()
+        then cannot satisfy)."""
+        hits = self._hit_blocks(ctx)
+        ev = self.cache.evictable if self.cache is not None else 0
+        return hits, self.pool.free_blocks + max(ev - hits, 0)
+
     def can_reserve(self, req) -> bool:
-        return self.pool.can_alloc(self.pool.blocks_for(req.max_cached))
+        if self.kv_alloc == "reserve":
+            need = self.pool.blocks_for(req.max_cached)
+            if self.cache is None:
+                return self.pool.can_alloc(need)
+            hits, avail = self._admit_capacity(req.resume_tokens())
+            return avail >= need - hits
+        # on-demand: admit on the blocks the prefill needs NOW plus a small
+        # headroom watermark so the first decode growths don't instantly
+        # preempt; the watermark is waived when nothing is running (an empty
+        # pool must always admit — admission_check bounded the worst case)
+        ctx = req.resume_tokens()
+        hits, avail = self._admit_capacity(ctx)
+        need = self.pool.blocks_for(len(ctx)) - hits
+        slack = self.headroom if self.pool.active_blocks > 0 else 0
+        return avail >= need + slack
+
+    def _ensure_free(self, n: int) -> bool:
+        """Evict LRU unreferenced cache entries until ``n`` blocks are on
+        the free list.  Returns False if the pool can't get there."""
+        short = n - self.pool.free_blocks
+        if short > 0 and self.cache is not None:
+            self.eng._count_cache_evict(len(self.cache.evict(short)))
+            short = n - self.pool.free_blocks
+        return short <= 0
 
     def reserve(self, req) -> None:
-        req.block_ids = self.pool.alloc(self.pool.blocks_for(req.max_cached))
+        hits: list[int] = []
+        if self.cache is not None:
+            hits = self.cache.acquire(req.resume_tokens())
+            req.n_cache_hit = len(hits) * self.pool.block_size
+        if self.kv_alloc == "reserve":
+            need = self.pool.blocks_for(req.max_cached) - len(hits)
+        else:
+            need = self.pool.blocks_for(len(req.resume_tokens())) - len(hits)
+        need = max(need, 0 if hits else 1)
+        if not self._ensure_free(need):
+            # can_reserve said yes, so this only races with same-step churn
+            self.pool.free(hits)
+            req.n_cache_hit = 0
+            raise PoolExhausted(
+                f"need {need} blocks, {self.pool.free_blocks} free")
+        req.block_ids = hits + self.pool.alloc(need)
+
+    def grow_to(self, req, n_tokens: int) -> bool:
+        """On-demand growth: extend the request's block table to cover
+        ``n_tokens`` cached positions, evicting unreferenced cache entries
+        as needed.  Returns False when the pool is exhausted (the engine
+        then preempts a running request and retries)."""
+        target = min(self.pool.blocks_for(n_tokens), self.max_blocks_per_slot)
+        while len(req.block_ids) < target:
+            if not self._ensure_free(1):
+                return False
+            req.block_ids += self.pool.alloc(1)
+        return True
+
+    def register_prefix(self, req, ctx) -> int:
+        """Register the full-block prefix of a freshly prefilled context so
+        later requests (and this one after preemption) can share it."""
+        if self.cache is None:
+            return 0
+        return self.cache.register(ctx, req.block_ids)
+
+    def make_writable(self, req, i: int) -> int:
+        """Copy-on-write guard for block ``i`` of the request's table.
+
+        Writing a block that other tables reference would corrupt their
+        KV, and writing a registered block would diverge it from its
+        hash.  Shared blocks get a fresh copy (device page duplicated,
+        old reference dropped); privately held registered blocks are just
+        deregistered.  The paged-prefill write pattern never hits the
+        shared case (writes only target positions past the acquired
+        prefix), so this is a defensive primitive, unit-tested directly.
+        """
+        b = req.block_ids[i]
+        if self.pool.refcount(b) > 1:
+            if not self._ensure_free(1):
+                raise PoolExhausted("no free block for copy-on-write split")
+            [nb] = self.pool.alloc(1)
+            if self._copy_fn is None:
+                self._copy_fn = jax.jit(
+                    lambda data, src, dst: {
+                        k: v.at[:, dst].set(v[:, src])
+                        for k, v in data.items()},
+                    donate_argnums=(0,))
+            self.pool.data = self._copy_fn(
+                self.pool.data, jnp.asarray(b, jnp.int32),
+                jnp.asarray(nb, jnp.int32))
+            self.pool.free([b])
+            req.block_ids[i] = nb
+            return nb
+        if self.cache is not None:
+            self.cache.drop_block(b)
+        return b
 
     def rollback_to(self, req, n_tokens: int) -> int:
         req.block_ids, freed = self.pool.truncate_to(req.block_ids, n_tokens)
@@ -235,7 +359,17 @@ class PagedKVState:
     # -- telemetry ---------------------------------------------------------
 
     def leaked(self) -> bool:
-        return self.pool.used_blocks != 0
+        """Refcount-aware leak check: blocks still referenced by a block
+        table after drain are leaks; cached-but-unreferenced blocks are
+        the prefix cache working as intended, not leaks."""
+        if self.pool.active_blocks != 0:
+            return True
+        # drain-time consistency: everything off the free list must be
+        # accounted for by the cache's retained set
+        assert self.pool.used_blocks == self.pool.cached_blocks, (
+            "pool blocks neither referenced, cached, nor free",
+            self.pool.used_blocks, self.pool.cached_blocks)
+        return False
 
     def occupancy(self) -> tuple[int, int]:
         """(used, capacity) in the backend's own allocation unit (blocks)."""
@@ -245,8 +379,11 @@ class PagedKVState:
         return self.pool.nbytes()
 
     def stats(self) -> dict:
-        return dict(self.pool.stats(), state_backend="paged_kv",
-                    state_kinds=list(self.kinds))
+        out = dict(self.pool.stats(), state_backend="paged_kv",
+                   state_kinds=list(self.kinds), kv_alloc=self.kv_alloc)
+        if self.cache is not None:
+            out["prefix_cache"] = self.cache.stats()
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -98,10 +98,11 @@ class SpecEngine(Engine):
         if dcfg.vocab_size != cfg.vocab_size:
             raise ValueError("draft and target vocabularies differ")
         if self.paged:
-            self.proposer = DraftProposer(dcfg, dparams, dqcfg,
-                                          pool=self.pool, mesh=self.mesh,
-                                          rules=self.rules,
-                                          fused=self.fused, obs=self.obs)
+            self.proposer = DraftProposer(
+                dcfg, dparams, dqcfg, pool=self.pool, mesh=self.mesh,
+                rules=self.rules, fused=self.fused, obs=self.obs,
+                prefill_scope=("token" if self.prefill_mode == "paged"
+                               else "row"))
             self._verify = jax.jit(
                 lambda params, pool, bt, lens, active, nprop, toks:
                 self._traced(decoder.verify_step_paged, self.vcfg, params,
@@ -269,6 +270,12 @@ class SpecEngine(Engine):
 
     def _do_decode_paged(self, finished: list[Request]) -> None:
         reqs = self.sched.running()
+        if reqs:
+            # on-demand paging: the verify write (position n_cached) must
+            # fit — grow, evicting/preempting as needed; draft depth beyond
+            # that is best-effort extra room that never preempts (draft_cap
+            # then reads the grown table)
+            reqs = self._ensure_decode_capacity(reqs, extra=self.spec_k)
         if not reqs:
             return
         t0 = time.monotonic()

@@ -79,7 +79,7 @@ class DraftProposer:
     """
 
     def __init__(self, cfg, params, qcfg, *, pool, mesh=None, rules=None,
-                 fused: bool = False, obs=None):
+                 fused: bool = False, obs=None, prefill_scope: str = "row"):
         self.obs = obs if obs is not None else OBS_NOOP
         self._m_draft_steps = self.obs.metrics.counter(
             "spec_draft_steps_total",
@@ -105,7 +105,16 @@ class DraftProposer:
         sq = dataclasses.replace(qcfg, quantize_weights=False)
         if fused and sq.packed_backend == "auto":
             sq = dataclasses.replace(sq, packed_backend="grouped")
-        self.psq = dataclasses.replace(sq, act_scope="row")     # prefill
+        # prefill scope: "row" mirrors the target engine's exact-prefill
+        # numerics (the self-qdq acceptance ceiling); the paged-prefill
+        # engine passes "token" so draft KV — like target KV — is a pure
+        # function of its token prefix, making re-writes of prefix-cache
+        # shared draft blocks bitwise no-ops
+        if prefill_scope not in ("row", "token"):
+            raise ValueError(f"unknown prefill_scope {prefill_scope!r}")
+        self.prefill_scope = prefill_scope
+        self.pcfg = self.dcfg if prefill_scope == "token" else self.cfg
+        self.psq = dataclasses.replace(sq, act_scope=prefill_scope)
         self.dsq = dataclasses.replace(sq, act_scope="token")   # decode
         self.pool = pool                                        # geometry only
         self.data = decoder.init_paged_pool(cfg, pool.n_blocks,
@@ -145,12 +154,19 @@ class DraftProposer:
     # -- per-request lifecycle --------------------------------------------
 
     def prefill_request(self, req) -> None:
-        """Whole-prompt draft prefill into this request's (shared) blocks."""
-        p = req.prompt_len
+        """Whole-context draft prefill into this request's (shared) blocks.
+
+        The context is ``resume_tokens()`` — the prompt for a fresh
+        request, prompt + confirmed output for one re-admitted after
+        preemption — so the draft prefix counter lands exactly where the
+        target's paged re-prefill puts ``n_cached``.
+        """
+        ctx = req.resume_tokens()
+        p = len(ctx)
         if p not in self._prefill_fns:
             def _prefill(params, toks):
                 with self._traced_ctx():
-                    return decoder.prefill(self.cfg, params,
+                    return decoder.prefill(self.pcfg, params,
                                            {"tokens": toks}, self.psq,
                                            s_max=None)
             self._prefill_fns[p] = jax.jit(_prefill)
@@ -158,7 +174,7 @@ class DraftProposer:
                                          donate_argnums=(0,))
         with self.obs.trace.annotate("spec.draft_prefill", rid=req.rid):
             _, cache = self._prefill_fns[p](self.params,
-                                            jnp.asarray(req.prompt[None]))
+                                            jnp.asarray(ctx[None]))
             cache = {k: v for k, v in cache.items() if k != "pos"}
             ids = np.asarray(req.block_ids[: self.pool.blocks_for(p)],
                              np.int32)

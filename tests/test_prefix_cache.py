@@ -1,0 +1,366 @@
+"""Content-hashed prefix caching, on-demand paging, and preemption
+(ISSUE 10): refcounted pool hardening, chain-hash cache semantics,
+copy-on-write splits, speculative rollback over shared blocks,
+preemption/re-queue token parity, and the end-to-end bitwise
+cache-on-vs-cache-off guarantee on dense packed and FP8-KV MoE configs.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import serve
+from repro.models import decoder
+from repro.serve import Engine
+from repro.serve.paged_kv import PagedKVPool, PoolExhausted, PrefixCache
+from repro.serve.scheduler import Request
+
+ARCH = "qwen1.5-0.5b"
+BS = 8
+GEN = 6
+
+
+@pytest.fixture(scope="module")
+def loaded():
+    cfg = configs.get_smoke(ARCH)
+    params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0), "packed")
+    return cfg, params, qcfg
+
+
+def _pool(n_blocks=8, bs=4):
+    cfg = configs.get_smoke(ARCH)
+    return PagedKVPool(decoder.init_paged_pool(cfg, n_blocks, bs), bs)
+
+
+def _engine(cfg, params, qcfg, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("block_size", BS)
+    kw.setdefault("max_blocks_per_slot", 4)
+    kw.setdefault("n_blocks", 8)
+    kw.setdefault("prefill_mode", "paged")
+    return Engine(cfg, params, qcfg, **kw)
+
+
+def _shared_prompts(cfg, n, seed=7):
+    """Mixed-length prompts where most share a one-block (BS-token) head —
+    the 80%-shared traffic shape the cache exists for."""
+    rng = jax.random.PRNGKey(seed)
+    head = np.asarray(jax.random.randint(jax.random.fold_in(rng, 0),
+                                         (BS,), 4, cfg.vocab_size), np.int32)
+    out = []
+    for i in range(n):
+        tail = np.asarray(jax.random.randint(jax.random.fold_in(rng, i + 1),
+                                             (2 + i % 5,), 4, cfg.vocab_size),
+                          np.int32)
+        out.append(np.concatenate([head, tail]) if i % 5 else tail)
+    return out
+
+
+def _run(eng, prompts, gen=GEN):
+    """Deterministic staggered workload; returns rid -> output tokens."""
+    rids = [eng.submit(p, gen) for p in prompts[: len(prompts) // 2]]
+    for p in prompts[len(prompts) // 2:]:
+        eng.step()
+        rids.append(eng.submit(p, gen))
+    outs = eng.drain(max_steps=5_000)
+    return rids, outs
+
+
+# ---------------------------------------------------------------------------
+# pool hardening: refcounts, double free, incref/reclaim, leak accounting
+# ---------------------------------------------------------------------------
+
+
+def test_pool_refcount_share_and_release():
+    pool = _pool()
+    [b] = pool.alloc(1)
+    pool.incref([b])
+    assert pool.refcount(b) == 2 and pool.shared_blocks == 1
+    pool.free([b])                        # decref: still held once
+    assert pool.refcount(b) == 1 and pool.used_blocks == 1
+    pool.free([b])
+    assert pool.refcount(b) == 0 and pool.free_blocks == pool.n_blocks
+    with pytest.raises(ValueError):
+        pool.free([b])                    # double free detected
+    with pytest.raises(ValueError):
+        pool.incref([b])                  # free blocks can't be referenced
+
+
+def test_pool_retain_hook_parks_and_reclaims():
+    pool = _pool()
+    parked = []
+    pool._retain_hook = lambda b: parked.append(b) or True
+    [b] = pool.alloc(1)
+    pool.free([b])
+    assert parked == [b] and pool.cached_blocks == 1
+    assert pool.used_blocks == 1 and pool.active_blocks == 0
+    with pytest.raises(ValueError):
+        pool.free([b])                    # cache-retained: not re-freeable
+    pool.incref([b])                      # cache hit revives to ACTIVE
+    assert pool.refcount(b) == 1 and pool.cached_blocks == 0
+    pool.free([b])
+    pool.reclaim([b])                     # eviction path back to free list
+    assert pool.free_blocks == pool.n_blocks
+    with pytest.raises(ValueError):
+        pool.reclaim([b])
+
+
+def test_truncate_never_destroys_shared_block():
+    """Speculative rollback over a shared prefix only drops THIS holder's
+    reference — the block survives for its other block tables."""
+    pool = _pool(bs=4)
+    ids = pool.alloc(3)
+    pool.incref([ids[0]])                 # sibling holds the prefix block
+    kept, freed = pool.truncate_to(list(ids), 0)
+    assert kept == [] and freed == ids
+    assert pool.refcount(ids[0]) == 1     # decref'd, NOT destroyed
+    assert ids[0] not in pool._free_set
+    assert pool.refcount(ids[1]) == 0 and pool.free_blocks == pool.n_blocks - 1
+    pool.free([ids[0]])
+    assert pool.free_blocks == pool.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: chain hashes, LRU eviction, verification
+# ---------------------------------------------------------------------------
+
+
+def test_cache_register_acquire_roundtrip():
+    pool = _pool(bs=4)
+    cache = PrefixCache(pool, "sig")
+    toks = np.arange(11, dtype=np.int32)
+    ids = pool.alloc(3)
+    assert cache.register(toks, ids) == 2          # 2 full blocks of 4
+    pool.free(ids)                                 # registered blocks park
+    assert pool.cached_blocks == 2 and pool.free_blocks == pool.n_blocks - 2
+    # identical context: both full blocks hit (cap (11-1)//4 = 2)
+    assert cache.lookup(toks) == 2
+    got = cache.acquire(toks)
+    assert got == ids[:2] and all(pool.refcount(b) == 1 for b in got)
+    assert cache.hits == 2
+    # divergent second block: only the first hits, chain verification stops
+    div = toks.copy()
+    div[5] += 1
+    pool.free(got)
+    assert cache.lookup(div) == 1
+    # the last position is never served from cache: a context of exactly
+    # one block still recomputes its final token (cap (4-1)//4 = 0)
+    assert cache.lookup(toks[:4]) == 0
+
+
+def test_cache_lru_eviction_order():
+    pool = _pool(n_blocks=8, bs=4)
+    cache = PrefixCache(pool, "sig")
+    a, b = np.arange(4, dtype=np.int32), np.arange(100, 104, dtype=np.int32)
+    ia, ib = pool.alloc(1), pool.alloc(1)
+    cache.register(a, ia)
+    cache.register(b, ib)
+    pool.free(ia)
+    pool.free(ib)                                  # LRU order: a, then b
+    cache.acquire(np.concatenate([a, a[:1]]))      # touch a -> b is LRU
+    pool.free(ia)
+    assert cache.evictable == 2
+    assert cache.evict(1) == ib                    # LRU victim is b
+    assert cache.evictions == 1 and pool.cached_blocks == 1
+    assert cache.evict(5) == ia                    # drains the rest
+    assert pool.free_blocks == pool.n_blocks
+
+
+def test_cache_quant_signature_separates_streams():
+    pool = _pool(bs=4)
+    toks = np.arange(9, dtype=np.int32)
+    ids = pool.alloc(2)
+    c1 = PrefixCache(pool, "fp8-kv")
+    c1.register(toks, ids)
+    assert c1.lookup(toks) == 2
+    # same tokens under a different quant signature must not hit
+    assert PrefixCache(pool, "bf16-kv").lookup(toks) == 0
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write
+# ---------------------------------------------------------------------------
+
+
+def test_cow_split_preserves_sibling_bytes(loaded):
+    cfg, params, qcfg = loaded
+    eng = _engine(cfg, params, qcfg, prefix_cache=True, kv_alloc="ondemand")
+    st, pool = eng.state, eng.pool
+    [b] = pool.alloc(1)
+    pool.incref([b])
+    pool.data = {k: v.at[:, b].set(1.0 + i)
+                 for i, (k, v) in enumerate(pool.data.items())}
+    before = {k: np.asarray(v[:, b]) for k, v in pool.data.items()}
+    r1 = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new_tokens=1)
+    r2 = Request(rid=1, prompt=np.arange(4, dtype=np.int32), max_new_tokens=1)
+    r1.block_ids, r2.block_ids = [b], [b]
+
+    nb = st.make_writable(r1, 0)
+    assert nb != b and r1.block_ids == [nb] and r2.block_ids == [b]
+    assert pool.refcount(b) == 1 and pool.refcount(nb) == 1
+    for k in pool.data:
+        # the writer got a bitwise copy; the sibling's page is untouched
+        np.testing.assert_array_equal(np.asarray(pool.data[k][:, nb]),
+                                      before[k])
+        np.testing.assert_array_equal(np.asarray(pool.data[k][:, b]),
+                                      before[k])
+    # mutating the writer's copy must not perturb the sibling
+    pool.data = {k: v.at[:, nb].set(-9.0) for k, v in pool.data.items()}
+    for k in pool.data:
+        np.testing.assert_array_equal(np.asarray(pool.data[k][:, b]),
+                                      before[k])
+    pool.free([b])
+    pool.free([nb])
+
+
+def test_cow_private_registered_block_deregisters(loaded):
+    cfg, params, qcfg = loaded
+    eng = _engine(cfg, params, qcfg, prefix_cache=True, kv_alloc="ondemand")
+    st, pool = eng.state, eng.pool
+    toks = np.arange(BS + 1, dtype=np.int32)
+    ids = pool.alloc(1)
+    st.cache.register(toks, ids)
+    r = Request(rid=0, prompt=toks, max_new_tokens=1)
+    r.block_ids = list(ids)
+    assert st.make_writable(r, 0) == ids[0]        # private: same block
+    pool.free(ids)
+    # entry was dropped, so the block went to the free list, not the cache
+    assert pool.cached_blocks == 0 and st.cache.lookup(toks) == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: bitwise parity, preemption, saturation
+# ---------------------------------------------------------------------------
+
+
+def test_cache_on_off_bitwise_parity_dense(loaded):
+    cfg, params, qcfg = loaded
+    prompts = _shared_prompts(cfg, 8)
+    on = _engine(cfg, params, qcfg, prefix_cache=True, kv_alloc="ondemand")
+    rids_on, out_on = _run(on, prompts)
+    off = _engine(cfg, params, qcfg, prefix_cache=False, kv_alloc="ondemand")
+    rids_off, out_off = _run(off, prompts)
+
+    assert len(out_on) == len(prompts) == len(out_off)
+    for a, b in zip(rids_on, rids_off):
+        np.testing.assert_array_equal(out_on[a], out_off[b])
+    assert on.state.cache.hits > 0                 # sharing actually happened
+    assert not on.state.leaked() and not off.state.leaked()
+    assert on.pool.active_blocks == 0
+
+
+@pytest.mark.slow
+def test_cache_on_off_bitwise_parity_fp8_moe():
+    cfg = configs.get_smoke("arctic-480b")
+    params, qcfg = serve.load_quantized(cfg, jax.random.PRNGKey(0), "packed")
+    prompts = _shared_prompts(cfg, 6)
+    on = _engine(cfg, params, qcfg, prefix_cache=True, kv_alloc="ondemand")
+    assert on.pool.fp8                             # the FP8-KV layout
+    rids_on, out_on = _run(on, prompts)
+    off = _engine(cfg, params, qcfg, prefix_cache=False, kv_alloc="reserve")
+    rids_off, out_off = _run(off, prompts)
+    assert len(out_on) == len(prompts) == len(out_off)
+    for a, b in zip(rids_on, rids_off):
+        np.testing.assert_array_equal(out_on[a], out_off[b])
+    assert on.state.cache.hits > 0
+    assert not on.state.leaked() and not off.state.leaked()
+
+
+def test_preemption_requeue_token_parity(loaded):
+    """A pool too small for the workload's worst case forces preemption;
+    every request still finishes with exactly the tokens it would have
+    produced unpressured, and nothing deadlocks or drops."""
+    cfg, params, qcfg = loaded
+    prompts = _shared_prompts(cfg, 8)
+    tight = _engine(cfg, params, qcfg, prefix_cache=True,
+                    kv_alloc="ondemand", headroom=0, n_slots=3, n_blocks=6,
+                    max_blocks_per_slot=4)
+    rids_t, out_t = _run(tight, prompts, gen=12)
+    assert tight.preempts > 0                      # pressure actually bit
+    assert len(out_t) == len(prompts)              # no request dropped
+    assert not tight.state.leaked()
+
+    roomy = _engine(cfg, params, qcfg, prefix_cache=True,
+                    kv_alloc="ondemand", n_slots=3, n_blocks=16,
+                    max_blocks_per_slot=4)
+    rids_r, out_r = _run(roomy, prompts, gen=12)
+    assert roomy.preempts == 0
+    for a, b in zip(rids_t, rids_r):
+        np.testing.assert_array_equal(out_t[a], out_r[b])
+
+
+def test_admission_at_full_pool_pressure(loaded):
+    """100% pool pressure: more concurrent demand than blocks exist.  FIFO
+    admission + eviction + preemption must complete every request."""
+    cfg, params, qcfg = loaded
+    prompts = _shared_prompts(cfg, 10)
+    eng = _engine(cfg, params, qcfg, prefix_cache=True, kv_alloc="ondemand",
+                  headroom=0, n_slots=4, n_blocks=4, max_blocks_per_slot=3)
+    rids = [eng.submit(p, 10) for p in prompts]    # all at once: full queue
+    outs = eng.drain(max_steps=5_000)
+    assert len(outs) == len(prompts)
+    assert all(len(outs[r]) == 10 for r in rids)
+    assert eng.pool.peak_used == 4                 # the pool really saturated
+    assert not eng.state.leaked()
+
+
+def test_ondemand_admits_more_concurrently_than_reserve(loaded):
+    """The tentpole's capacity claim at test scale: with the same pool,
+    on-demand admission gets more requests in flight at once than
+    worst-case reservation."""
+    cfg, params, qcfg = loaded
+    prompts = _shared_prompts(cfg, 8)
+
+    def peak_admitted(**kw):
+        eng = _engine(cfg, params, qcfg, n_slots=4, n_blocks=6,
+                      max_blocks_per_slot=3, **kw)
+        rids = [eng.submit(p, 10) for p in prompts]
+        peak = 0
+        while eng.sched.has_work():
+            eng.step()
+            peak = max(peak, len(eng.sched.in_flight()))
+        assert len(eng.sched.finished) == len(rids)
+        assert not eng.state.leaked()
+        return peak
+
+    reserve = peak_admitted(kv_alloc="reserve")
+    ondemand = peak_admitted(prefix_cache=True, kv_alloc="ondemand",
+                             headroom=0)
+    assert ondemand > reserve
+
+
+def test_speculative_cache_on_off_parity(loaded):
+    """Greedy speculative streams are bitwise identical cache-on vs
+    cache-off AND match the plain engine; rollback under sharing never
+    corrupts the pool accounting."""
+    from repro.spec import SpecEngine
+
+    cfg, params, qcfg = loaded
+    prompts = _shared_prompts(cfg, 6)
+    kw = dict(n_slots=2, block_size=BS, max_blocks_per_slot=4, n_blocks=8,
+              prefill_mode="paged", draft_k=2)
+    on = SpecEngine(cfg, params, qcfg, prefix_cache=True,
+                    kv_alloc="ondemand", **kw)
+    rids_on, out_on = _run(on, prompts)
+    off = SpecEngine(cfg, params, qcfg, **kw)
+    rids_off, out_off = _run(off, prompts)
+    plain = _engine(cfg, params, qcfg, prefix_cache=True,
+                    kv_alloc="ondemand")
+    rids_p, out_p = _run(plain, prompts)
+
+    assert len(out_on) == len(prompts)
+    for a, b, c in zip(rids_on, rids_off, rids_p):
+        np.testing.assert_array_equal(out_on[a], out_off[b])
+        np.testing.assert_array_equal(out_on[a], out_p[c])
+    assert on.state.cache.hits > 0
+    assert not on.state.leaked() and not off.state.leaked()
+
+
+def test_cache_rejects_non_paged_prefill(loaded):
+    cfg, params, qcfg = loaded
+    with pytest.raises(ValueError):
+        _engine(cfg, params, qcfg, prefill_mode="exact", prefix_cache=True)
+    with pytest.raises(ValueError):
+        _engine(cfg, params, qcfg, prefill_mode="exact", kv_alloc="ondemand")
